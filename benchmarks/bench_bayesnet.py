@@ -1,0 +1,45 @@
+"""Fig. 7 Bayesian-network workloads: asia (exact CPTs) + repository-
+scale random nets (child/alarm/hailfinder sizes). Reports MSample/s,
+bits/sample, DSatur color count, and marginal error vs oracle."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.pgm import networks
+from repro.pgm.compile import compile_bayesnet, run_gibbs
+
+
+def run(name, bn, chains=128, sweeps=150, burn=50, oracle=None, report=print):
+    prog = compile_bayesnet(bn)
+    fn = jax.jit(lambda k: run_gibbs(k, prog, n_chains=chains,
+                                     n_sweeps=sweeps, burn_in=burn))
+    dt = time_call(fn, jax.random.PRNGKey(0), warmup=1, iters=3)
+    _, counts, stats = fn(jax.random.PRNGKey(0))
+    n_samples = chains * sweeps * bn.n_nodes
+    bits = float(stats.bits_used) / n_samples
+    err = ""
+    if oracle is not None:
+        marg = np.asarray(counts, np.float64)
+        marg /= np.clip(marg.sum(-1, keepdims=True), 1, None)
+        errs = [np.abs(marg[v, : bn.card[v]] - oracle[v] / oracle[v].sum()).max()
+                for v in range(bn.n_nodes)]
+        err = f";marg_err={max(errs):.3f}"
+    report(row(name, dt / n_samples * 1e6,
+               f"MSample/s={n_samples/dt/1e6:.3f};bits={bits:.2f};"
+               f"colors={prog.n_colors}{err}"))
+
+
+def main(report=print):
+    bn = networks.asia()
+    run("bn_asia_8n", bn, sweeps=400, burn=100,
+        oracle=bn.marginals_exact(), report=report)
+    run("bn_child_scale_20n", networks.child_scale(), report=report)
+    run("bn_alarm_scale_37n", networks.alarm_scale(), report=report)
+    run("bn_hailfinder_scale_56n", networks.hailfinder_scale(),
+        chains=64, report=report)
+
+
+if __name__ == "__main__":
+    main()

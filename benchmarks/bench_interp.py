@@ -1,0 +1,42 @@
+"""§II-B IU claim: LUT interpolation vs transcendental evaluation
+(paper: 9× vs a memory-based LUT; single-cycle vs multi-cycle exp).
+
+We compare the PWL interpolation against jnp.exp/log on CPU wall time
+and report max abs error (the accuracy side of the trade)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.core import exp_table, iu_log, log_table
+
+
+def main(report=print):
+    x = jax.random.uniform(jax.random.PRNGKey(0), (4096, 1024),
+                           minval=-16.0, maxval=0.0)
+    t = exp_table()
+    iu = jax.jit(t.__call__)
+    ref = jax.jit(jnp.exp)
+    t_iu = time_call(iu, x)
+    t_ref = time_call(ref, x)
+    err = float(jnp.max(jnp.abs(iu(x) - jnp.exp(x))))
+    report(row("iu_exp", t_iu / x.size * 1e6,
+               f"exact_exp_us={t_ref / x.size * 1e6:.4f};"
+               f"speedup={t_ref / t_iu:.2f}x;max_err={err:.2e}"))
+
+    xp = jax.random.uniform(jax.random.PRNGKey(1), (4096, 1024),
+                            minval=1e-6, maxval=100.0)
+    ilog = jax.jit(iu_log)
+    rlog = jax.jit(jnp.log)
+    t_il = time_call(ilog, xp)
+    t_rl = time_call(rlog, xp)
+    err = float(jnp.max(jnp.abs(ilog(xp) - jnp.log(xp))))
+    report(row("iu_log", t_il / xp.size * 1e6,
+               f"exact_log_us={t_rl / xp.size * 1e6:.4f};"
+               f"speedup={t_rl / t_il:.2f}x;max_err={err:.2e}"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""§Roofline: render the 40-cell roofline table from the dry-run JSONs
+(falls back to analytic-only if reports/dryrun is absent)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+from repro.configs import ARCH_IDS, SHAPES, cell_runnable, get_config, shape_by_name
+from repro.launch.roofline import roofline_cell
+
+
+def main(report=print):
+    rep_dir = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "reports", "dryrun")
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, why = cell_runnable(cfg, shape)
+            if not ok:
+                report(row(f"roofline_{arch}_{shape.name}", 0.0, "skipped"))
+                continue
+            rl = roofline_cell(cfg, shape)
+            mem = ""
+            fn = os.path.join(rep_dir, f"{arch}__{shape.name}__16x16.json")
+            if os.path.exists(fn):
+                with open(fn) as f:
+                    r = json.load(f)
+                if r.get("status") == "ok":
+                    mem = f";mem/chip={r['memory']['total_per_chip']/1e9:.2f}GB"
+            report(row(
+                f"roofline_{arch}_{shape.name}",
+                max(rl.t_compute, rl.t_memory, rl.t_collective) * 1e6,
+                f"bound={rl.bottleneck};frac={rl.roofline_fraction:.3f};"
+                f"useful_ratio={rl.useful_ratio:.2f}{mem}"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Fig. 6 analogue: sampler performance vs distribution entropy.
+
+The paper's Schmoo sweeps voltage/frequency while sampling distributions
+of different entropies; without silicon we sweep the entropy axis and
+report measured samples/s (CPU) + random-bits/sample (HW-independent),
+plus the modeled TPU-v5e throughput from the roofline terms.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.core import entropy_bits, ky_sample, quantize_probs
+
+
+def sweep(batch: int = 65536, n: int = 16, k: int = 12):
+    out = []
+    sampler = jax.jit(lambda key, w: ky_sample(key, w))
+    for alpha in (0.02, 0.1, 0.5, 2.0, 50.0):
+        p = jax.random.dirichlet(jax.random.PRNGKey(int(alpha * 100)),
+                                 jnp.full((n,), alpha), (batch,))
+        w = quantize_probs(p, k)
+        key = jax.random.PRNGKey(0)
+        dt = time_call(sampler, key, w)
+        res = sampler(key, w)
+        h = float(jnp.mean(entropy_bits(p)))
+        bits = float(res.bits_used.mean())
+        msps = batch / dt / 1e6
+        out.append((h, bits, msps, dt))
+    return out
+
+
+def main(report=print):
+    for h, bits, msps, dt in sweep():
+        report(row(f"schmoo_H{h:.2f}", dt * 1e6,
+                   f"bits/sample={bits:.2f};MSample/s={msps:.2f};H+2={h+2:.2f}"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Bayesian-network inference through the full AIA compiler chain
+(paper §III + Fig. 7): PPL-style model → fixed-point CPT quantization →
+moralization + DSatur coloring → gather plans → jitted parallel Gibbs
+with the IU-exp → KY-sample pipeline.
+
+  PYTHONPATH=src python examples/bayesnet_inference.py
+  PYTHONPATH=src python examples/bayesnet_inference.py --network alarm_scale
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.pgm import compile_bayesnet, networks, run_gibbs
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--network", default="asia",
+                choices=["asia", "sprinkler", "child_scale", "alarm_scale",
+                         "hailfinder_scale"])
+ap.add_argument("--chains", type=int, default=256)
+ap.add_argument("--sweeps", type=int, default=800)
+ap.add_argument("--burn-in", type=int, default=200)
+ap.add_argument("--no-iu", action="store_true")
+args = ap.parse_args()
+
+bn = getattr(networks, args.network)()
+print(f"network={args.network}: {bn.n_nodes} nodes, "
+      f"cards {min(bn.card)}..{max(bn.card)}")
+
+# --- the compiler chain ----------------------------------------------------
+t0 = time.time()
+prog = compile_bayesnet(bn, k=14, quantize_cpt_bits=16)
+print(f"compiled in {time.time()-t0:.2f}s: {prog.n_colors} DSatur colors, "
+      f"{prog.log_cpt.size} fixed-point CPT entries")
+for i, plan in enumerate(prog.plans):
+    print(f"  color {i}: {len(plan.nodes)} nodes update in parallel")
+
+# --- run -------------------------------------------------------------------
+t0 = time.time()
+x, counts, stats = run_gibbs(
+    jax.random.PRNGKey(0), prog, n_chains=args.chains,
+    n_sweeps=args.sweeps, burn_in=args.burn_in, use_iu=not args.no_iu)
+jax.block_until_ready(counts)
+dt = time.time() - t0
+n_samples = args.chains * args.sweeps * bn.n_nodes
+print(f"\n{n_samples} RV samples in {dt:.2f}s "
+      f"({n_samples/dt/1e6:.2f} MSample/s on CPU), "
+      f"{float(stats.bits_used)/n_samples:.2f} random bits/sample")
+
+marg = np.asarray(counts, np.float64)
+marg /= np.clip(marg.sum(-1, keepdims=True), 1, None)
+oracle = None
+if int(np.prod(bn.card)) <= 2_000_000:
+    oracle = bn.marginals_exact()
+print("\nposterior marginals:")
+for v in range(min(bn.n_nodes, 12)):
+    line = f"  P({bn.names[v]:10s}) = {np.round(marg[v, :bn.card[v]], 3)}"
+    if oracle is not None:
+        e = oracle[v] / oracle[v].sum()
+        line += f"   exact={np.round(e, 3)}  err={np.abs(marg[v,:bn.card[v]]-e).max():.4f}"
+    print(line)

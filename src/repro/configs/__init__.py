@@ -1,0 +1,70 @@
+"""Config registry: ``--arch <id>`` resolution + dry-run input specs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (
+    granite_20b,
+    grok1_314b,
+    hymba_1_5b,
+    llama4_scout,
+    mamba2_130m,
+    nemotron4_340b,
+    phi4_mini,
+    pixtral_12b,
+    qwen15_32b,
+    seamless_m4t_medium,
+)
+from repro.configs.aia_paper import MCMC_CONFIGS
+from repro.configs.base import SHAPES, ModelConfig, ShapeCfg, shape_by_name
+
+_MODULES = (
+    qwen15_32b, nemotron4_340b, phi4_mini, granite_20b, pixtral_12b,
+    hymba_1_5b, llama4_scout, grok1_314b, seamless_m4t_medium, mamba2_130m,
+)
+
+ARCHS = {m.ARCH_ID: m for m in _MODULES}
+ARCH_IDS = tuple(ARCHS.keys())
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ModelConfig:
+    m = ARCHS[arch_id]
+    return m.smoke() if smoke else m.config()
+
+
+def cell_runnable(cfg: ModelConfig, shape: ShapeCfg) -> tuple[bool, str]:
+    """Whether an (arch × shape) cell runs, per DESIGN.md §4."""
+    if shape.name == "long_500k" and not cfg.supports_long:
+        return False, "long_500k skipped: pure full-attention arch"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCfg) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    train/prefill: token batches (+ stub frontend embeddings);
+    decode: last token + position (cache specs come from ``init_cache``
+    via ``jax.eval_shape`` in the launcher).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        out = {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+    elif shape.kind == "prefill":
+        out = {"tokens": sds((b, s), i32)}
+    else:  # decode: one new token against a seq_len cache
+        out = {"tokens": sds((b, 1), i32)}
+    if cfg.family == "vlm" and shape.kind != "decode":
+        out["frontend"] = sds((b, cfg.frontend_tokens, cfg.d_model), f32)
+    if cfg.family in ("encdec", "audio"):
+        out["src_embeds"] = sds((b, cfg.enc_seq_len, cfg.d_model), f32)
+    return out
+
+
+__all__ = [
+    "ARCHS", "ARCH_IDS", "MCMC_CONFIGS", "SHAPES", "ModelConfig", "ShapeCfg",
+    "cell_runnable", "get_config", "input_specs", "shape_by_name",
+]

@@ -1,0 +1,39 @@
+"""AIA core: non-normalized Knuth-Yao sampling, LUT interpolation,
+fixed-point quantization — the paper's contribution as composable JAX
+modules (DESIGN.md §1-§2)."""
+from repro.core.cdf import CDFResult, cdf_sample
+from repro.core.fixedpoint import (
+    DEFAULT_K,
+    Quantizer,
+    dequantize,
+    entropy_bits,
+    quantize_logits,
+    quantize_probs,
+    tv_distance,
+)
+from repro.core.interp import (
+    InterpTable,
+    exp_table,
+    iu_exp_weights,
+    iu_log,
+    log_table,
+    sigmoid_table,
+    softplus_table,
+)
+from repro.core.ky import KYResult, ky_sample, ky_sample_ref
+from repro.core.token_sampler import (
+    TokenSample,
+    categorical_baseline,
+    ky_sample_tokens,
+    ky_sample_weights_hier,
+    vocab_k,
+)
+
+__all__ = [
+    "CDFResult", "cdf_sample", "DEFAULT_K", "Quantizer", "dequantize",
+    "entropy_bits", "quantize_logits", "quantize_probs", "tv_distance",
+    "InterpTable", "exp_table", "iu_exp_weights", "log_table",
+    "sigmoid_table", "softplus_table", "iu_log", "KYResult", "ky_sample",
+    "ky_sample_ref", "TokenSample", "categorical_baseline",
+    "ky_sample_tokens", "ky_sample_weights_hier", "vocab_k",
+]

@@ -1,0 +1,106 @@
+"""Fixed-point quantization of probability distributions (paper §III).
+
+The AIA compiler chain quantizes all model probabilities to integer
+("non-normalized") weights before they ever reach the sampler unit; the
+Knuth-Yao sampler then works directly on the integer weights without a
+normalization pass.  This module is the JAX equivalent of that Statheros-
+style quantization stage [Laurel et al., DAC'21].
+
+Conventions
+-----------
+A quantized distribution over ``n`` outcomes is a vector of non-negative
+``int32`` weights ``w`` with ``sum(w) <= 2**k_max``.  The *implicit*
+rejection mass is ``2**K - sum(w)`` where ``K = ceil(log2(sum(w)))`` is
+chosen per-distribution by the sampler so that the rejection probability
+is < 1/2 (expected #attempts < 2, as in the paper's rejection-restart
+sampler and in FLDR [Saad et al. 2020]).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Default weight precision: probabilities are quantized onto a 2**DEFAULT_K
+# grid. 14 bits keeps int32 column sums safe up to n = 2**17 outcomes
+# (vocab-scale) and matches the paper's "negligible accuracy loss" regime.
+DEFAULT_K = 14
+MAX_K = 30  # int32 safety bound for single-distribution total mass
+
+
+def quantize_probs(p: jax.Array, k: int = DEFAULT_K) -> jax.Array:
+    """Quantize a (batch of) probability vector(s) to int32 KY weights.
+
+    ``p`` is non-negative (need not be normalized — that is the point).
+    Weights are ``floor(p / max(p) * (2**k - 1))`` with the guarantee that
+    at least one weight is non-zero: the argmax always maps to 2**k - 1.
+    Normalization is never required downstream.
+    """
+    p = jnp.asarray(p)
+    scale = (2.0 ** k - 1.0) / jnp.clip(
+        jnp.max(p, axis=-1, keepdims=True), 1e-30, None
+    )
+    w = jnp.floor(p * scale).astype(jnp.int32)
+    return w
+
+
+def quantize_logits(
+    logits: jax.Array,
+    k: int = DEFAULT_K,
+    temperature: float = 1.0,
+) -> jax.Array:
+    """Quantize ``exp(logits/T)`` to integer KY weights *without* a softmax.
+
+    This is the "softmax-free" decode path: subtract the per-row max (a
+    max-reduction, not a sum), exponentiate, and floor onto the 2**k grid.
+    No normalizing sum over the vocabulary is ever computed; the KY sampler
+    consumes the non-normalized weights directly.
+    """
+    logits = jnp.asarray(logits, jnp.float32) / jnp.maximum(temperature, 1e-6)
+    z = logits - jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    w = jnp.floor(jnp.exp(z) * (2.0 ** k - 1.0)).astype(jnp.int32)
+    return w
+
+
+def dequantize(w: jax.Array) -> jax.Array:
+    """Normalized float distribution represented by integer weights."""
+    w = jnp.asarray(w, jnp.float32)
+    return w / jnp.clip(jnp.sum(w, axis=-1, keepdims=True), 1.0, None)
+
+
+def tv_distance(p: jax.Array, q: jax.Array) -> jax.Array:
+    """Total-variation distance between two (batches of) distributions."""
+    p = p / jnp.clip(jnp.sum(p, axis=-1, keepdims=True), 1e-30, None)
+    q = q / jnp.clip(jnp.sum(q, axis=-1, keepdims=True), 1e-30, None)
+    return 0.5 * jnp.sum(jnp.abs(p - q), axis=-1)
+
+
+def ceil_log2(x: jax.Array) -> jax.Array:
+    """ceil(log2(x)) for positive int32 x, elementwise; 0 -> 0."""
+    x = jnp.asarray(x, jnp.int32)
+    nbits = 32 - jax.lax.clz(jnp.maximum(x - 1, 0).astype(jnp.int32))
+    return jnp.where(x <= 1, 0, nbits).astype(jnp.int32)
+
+
+def entropy_bits(p: jax.Array) -> jax.Array:
+    """Shannon entropy in bits (the paper's Schmoo sweep variable)."""
+    p = p / jnp.clip(jnp.sum(p, axis=-1, keepdims=True), 1e-30, None)
+    return -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.clip(p, 1e-30, None)), 0.0), axis=-1)
+
+
+class Quantizer:
+    """Fixed-point quantization config bundled for the compiler chain."""
+
+    def __init__(self, k: int = DEFAULT_K, log_domain: bool = False):
+        if not 1 <= k <= MAX_K:
+            raise ValueError(f"k={k} outside [1, {MAX_K}]")
+        self.k = k
+        self.log_domain = log_domain
+
+    def __call__(self, p: jax.Array) -> jax.Array:
+        if self.log_domain:
+            return quantize_logits(p, self.k)
+        return quantize_probs(p, self.k)
+
+    def error(self, p: jax.Array) -> jax.Array:
+        """TV distance introduced by this quantizer on distribution(s) p."""
+        return tv_distance(p, dequantize(self(p)))

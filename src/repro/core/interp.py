@@ -1,0 +1,110 @@
+"""LUT-based interpolation unit (paper §II-B, C2).
+
+The AIA IU evaluates ``exp``, ``log`` … in a single cycle by piecewise
+linear interpolation on a small LUT held in registers:
+
+    y = LUT[idx] + frac * (LUT[idx+1] - LUT[idx])
+
+where ``idx`` is the top bits and ``frac`` the residual of a fixed-point
+input.  The JAX module keeps the same structure — a 2**m-entry table that
+lives in VMEM on TPU (see ``kernels/interp_lut.py``), a shift/mask index
+split, and one fused multiply-add — so the cost model carries over:
+one small gather + one FMA per element instead of a transcendental.
+
+``InterpTable.build`` constructs a table for an arbitrary scalar function
+over a range; pre-built tables for exp/log/sigmoid/softplus cover the
+distribution-generation pipeline of Gibbs sampling (energies -> weights).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class InterpTable:
+    """Piecewise-linear LUT over [lo, hi] with 2**m segments."""
+
+    table: jax.Array      # (2**m + 1,) float32 node values
+    lo: float
+    hi: float
+    m: int                # log2 #segments
+
+    @staticmethod
+    def build(fn: Callable, lo: float, hi: float, m: int = 8) -> "InterpTable":
+        xs = np.linspace(lo, hi, (1 << m) + 1, dtype=np.float64)
+        tab = jnp.asarray(np.asarray(fn(xs), dtype=np.float32))
+        return InterpTable(table=tab, lo=float(lo), hi=float(hi), m=m)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """Interpolate fn(x); inputs are clamped to [lo, hi]."""
+        x = jnp.asarray(x, jnp.float32)
+        n = 1 << self.m
+        scale = n / (self.hi - self.lo)
+        t = jnp.clip((x - self.lo) * scale, 0.0, float(n))
+        idx = jnp.minimum(t.astype(jnp.int32), n - 1)  # "IU.address"
+        frac = t - idx.astype(jnp.float32)             # "offset"
+        y0 = jnp.take(self.table, idx, mode="clip")
+        y1 = jnp.take(self.table, idx + 1, mode="clip")
+        return y0 + frac * (y1 - y0)           # single FMA, as in the IU
+
+    def max_abs_error(self, fn: Callable, probe: int = 65536) -> float:
+        xs = np.linspace(self.lo, self.hi, probe).astype(np.float32)
+        exact = np.asarray(fn(xs.astype(np.float64)))
+        approx = np.asarray(jax.jit(self.__call__)(xs))
+        return float(np.max(np.abs(exact - approx)))
+
+
+# Pre-built tables used by the Gibbs distribution-generation stage.
+# exp over negative energies: exp(x) for x in [-16, 0] covers weights down
+# to ~1e-7 — below quantization resolution for k<=24.
+def exp_table(m: int = 10) -> InterpTable:
+    return InterpTable.build(np.exp, -16.0, 0.0, m)
+
+
+def log_table(m: int = 10) -> InterpTable:
+    """LUT over the mantissa range [1, 2) — see ``iu_log``."""
+    return InterpTable.build(np.log, 1.0, 2.0, m)
+
+
+def iu_log(x: jax.Array, table: InterpTable | None = None) -> jax.Array:
+    """log(x) via mantissa/exponent split + PWL LUT (the HW-idiomatic form).
+
+    ``x = mant * 2**e`` with ``mant in [1, 2)``; ``log x = LUT(mant) +
+    e*ln2``.  Uniform relative accuracy over the full positive range,
+    unlike a single uniform table near 0.
+    """
+    table = table or _LOG_DEFAULT
+    x = jnp.asarray(x, jnp.float32)
+    mant, e = jnp.frexp(jnp.clip(x, 1e-30, None))  # mant in [0.5, 1)
+    return table(mant * 2.0) + (e - 1).astype(jnp.float32) * jnp.float32(np.log(2.0))
+
+
+def sigmoid_table(m: int = 10) -> InterpTable:
+    return InterpTable.build(lambda x: 1.0 / (1.0 + np.exp(-x)), -8.0, 8.0, m)
+
+
+def softplus_table(m: int = 10) -> InterpTable:
+    return InterpTable.build(lambda x: np.log1p(np.exp(x)), -8.0, 8.0, m)
+
+
+def iu_exp_weights(energies: jax.Array, k: int, table: InterpTable | None = None) -> jax.Array:
+    """Energies -> non-normalized KY weights through the IU (fused path).
+
+    ``w = floor(iu_exp(e - max(e)) * (2**k - 1))`` — the AIA distribution
+    generation pipeline: subtract max (no sum-normalization), LUT-exp,
+    fixed-point floor.  Output feeds ``ky_sample`` directly.
+    """
+    table = table or _EXP_DEFAULT
+    e = jnp.asarray(energies, jnp.float32)
+    z = e - jnp.max(e, axis=-1, keepdims=True)
+    y = table(z)
+    return jnp.floor(y * (2.0 ** k - 1.0)).astype(jnp.int32)
+
+
+_EXP_DEFAULT = exp_table()
+_LOG_DEFAULT = log_table()

@@ -1,0 +1,186 @@
+"""Non-normalized Knuth-Yao sampling with rejection (paper §II-B, C1).
+
+The sampler draws exact samples from *integer, non-normalized* weight
+vectors ``w`` (shape ``(..., n)``) by walking the Knuth-Yao discrete
+distribution generating (DDG) tree with single random bits.  The pad mass
+``r = 2**K - sum(w)`` (with ``K = ceil(log2(sum(w)))``) is treated as an
+implicit rejection outcome: reaching it restarts the walk, exactly as in
+the AIA sampler unit and FLDR [Saad et al. 2020].  Because
+``2**(K-1) < sum(w) <= 2**K``, the rejection probability is < 1/2 and the
+expected number of restarts is < 2.
+
+TPU adaptation (see DESIGN.md §2): instead of one branchy scalar walk per
+sample, a whole batch of lanes walks DDG *levels* in lock-step inside a
+``lax.while_loop``.  Per level the bit-plane column of the weight matrix
+is extracted with shift/mask (the vector-register analogue of the AIA
+register file's column-wise read port), a cumulative sum over outcomes
+locates the leaf, and rejected lanes restart in place while finished
+lanes idle.  The walk is short — ≈ entropy + 2 levels — so lock-step
+masking wastes little work.
+
+The expected number of random bits consumed per sample is ≈ H(p) + 2
+(the paper's headline efficiency metric); ``KYResult.bits_used`` exposes
+the exact per-lane count.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng as rng_lib
+from repro.core.fixedpoint import ceil_log2
+
+
+class KYResult(NamedTuple):
+    sample: jax.Array      # (...,) int32 outcome indices
+    bits_used: jax.Array   # (...,) int32 random bits consumed
+    attempts: jax.Array    # (...,) int32 DDG walks started (>=1)
+    ok: jax.Array          # (...,) bool: terminated within budget
+
+
+def max_levels(k: int, n: int) -> int:
+    """Upper bound on DDG depth for n outcomes of k-bit weights."""
+    return int(k + max(int(jnp.ceil(jnp.log2(max(n, 2)))), 1) + 1)
+
+
+def ky_sample(
+    key: jax.Array,
+    weights: jax.Array,
+    *,
+    max_attempts: int = 32,
+    bit_words: jax.Array | None = None,
+) -> KYResult:
+    """Draw one exact sample per lane from non-normalized int32 weights.
+
+    Args:
+      key: PRNG key (ignored if ``bit_words`` given).
+      weights: (..., n) non-negative int32; rows must not be all-zero.
+      max_attempts: restart budget; non-terminating lanes (prob < 2**-32)
+        fall back to argmax and are flagged ``ok=False``.
+      bit_words: optional pre-generated (..., W) uint32 bit stream — used
+        by tests for bit-exact comparison with the reference/LFSR path.
+
+    Returns KYResult with ``sample`` shaped like ``weights[..., 0]``.
+    """
+    w = jnp.asarray(weights, jnp.int32)
+    batch_shape = w.shape[:-1]
+    n = w.shape[-1]
+    flat = w.reshape((-1, n))
+    b = flat.shape[0]
+
+    total = jnp.sum(flat, axis=-1)
+    # Defensive: an all-zero row would hang the walk; force outcome 0.
+    flat = jnp.where((total == 0)[:, None] & (jnp.arange(n) == 0)[None, :], 1, flat)
+    total = jnp.maximum(total, 1)
+
+    k_lvl = jnp.maximum(ceil_log2(total), 1)      # per-lane K (>=1)
+    reject_w = (jnp.int32(1) << k_lvl) - total    # pad mass (may be 0)
+
+    k_static = 31  # static per-attempt level cap (int32 weights)
+    budget = k_static * max_attempts
+    if bit_words is None:
+        bit_words = rng_lib.random_bit_words(key, (b,), budget)
+    else:
+        bit_words = bit_words.reshape((b, -1))
+        budget = int(bit_words.shape[-1]) * 32
+
+    def cond(state):
+        done, _, _, _, t, _ = state
+        return (~jnp.all(done)) & (jnp.max(jnp.where(done, 0, t)) < budget - 1)
+
+    def body(state):
+        done, d, c, res, t, att = state
+        active = ~done
+        bit = rng_lib.get_bit(bit_words, jnp.minimum(t, budget - 1))
+        d2 = 2 * d + (1 - bit)
+        # Bit-plane column at level c: MSB-first bit of each weight.
+        shift = (k_lvl - 1 - c)[:, None]
+        col = jnp.where(shift >= 0, (flat >> shift) & 1, 0)
+        rcol = jnp.where(shift[:, 0] >= 0, (reject_w >> shift[:, 0]) & 1, 0)
+        cum = jnp.cumsum(col, axis=-1)
+        colsum = cum[:, -1] + rcol
+        hit = d2 < colsum
+        # first index with cum == d2+1; if none (leaf is the rejection pad),
+        # sel lands past the real outcomes.
+        ge = cum >= (d2 + 1)[:, None]
+        sel = jnp.argmax(ge, axis=-1)
+        is_real = hit & ge[jnp.arange(b), sel]
+        is_rej = hit & ~is_real
+        # level overflow can't occur with exact pad mass, but guard anyway
+        overflow = (~hit) & (c + 1 >= k_lvl)
+        restart = (is_rej | overflow) & active
+        finish = is_real & active
+        done2 = done | finish
+        res2 = jnp.where(finish, sel.astype(jnp.int32), res)
+        d3 = jnp.where(restart, 0, jnp.where(hit, d, d2 - colsum))
+        c2 = jnp.where(restart, 0, jnp.where(hit, c, c + 1))
+        t2 = t + active.astype(jnp.int32)
+        att2 = att + restart.astype(jnp.int32)
+        return done2, d3, c2, res2, t2, att2
+
+    # Degenerate rows where one outcome carries the whole mass are
+    # deterministic: p = total/2^K = 1.0 has no fractional DDG expansion
+    # (hypothesis-found corner, e.g. w = [0, 2]); resolve them up front
+    # with zero random bits, exactly like the hardware's bypass path.
+    argmax0 = jnp.argmax(flat, axis=-1).astype(jnp.int32)
+    deterministic = jnp.max(flat, axis=-1) == total
+
+    # Derive the carry init from the inputs so it inherits any varying
+    # manual axes when called inside shard_map (JAX >= 0.7 VMA rules).
+    zeros = flat[:, 0] * 0 + (bit_words[:, 0] * 0).astype(jnp.int32)
+    state = (deterministic, zeros, zeros,
+             jnp.where(deterministic, argmax0, 0), zeros, zeros + 1)
+    done, _, _, res, t, att = jax.lax.while_loop(cond, body, state)
+    # Fallback for (astronomically unlikely) budget exhaustion.
+    res = jnp.where(done, res, jnp.argmax(flat, axis=-1).astype(jnp.int32))
+    return KYResult(
+        sample=res.reshape(batch_shape),
+        bits_used=t.reshape(batch_shape),
+        attempts=att.reshape(batch_shape),
+        ok=done.reshape(batch_shape),
+    )
+
+
+def ky_sample_ref(weights, bits) -> tuple[int, int]:
+    """Pure-Python single-lane reference (mirrors the AIA SU microcode).
+
+    ``weights``: list[int]; ``bits``: iterable of 0/1.  Returns
+    (outcome, bits_consumed).  Used as the oracle in bit-exact tests.
+    """
+    import math
+
+    w = list(int(x) for x in weights)
+    total = sum(w)
+    assert total > 0
+    if max(w) == total:  # deterministic-row bypass (p = 1.0, no DDG walk)
+        return w.index(max(w)), 0
+    k = max(1, math.ceil(math.log2(total))) if total > 1 else 1
+    if (1 << k) < total:
+        k += 1
+    rej = (1 << k) - total
+    wall = w + [rej]
+    it = iter(bits)
+    used = 0
+    d = 0
+    c = 0
+    while True:
+        b = next(it)
+        used += 1
+        d = 2 * d + (1 - int(b))
+        col = [(x >> (k - 1 - c)) & 1 if k - 1 - c >= 0 else 0 for x in wall]
+        s = 0
+        hit = -1
+        for i, bit_i in enumerate(col):
+            s += bit_i
+            if s == d + 1 and hit < 0:
+                hit = i
+        if d < s:
+            if hit < len(w):
+                return hit, used
+            d = 0
+            c = 0  # rejection: restart
+            continue
+        d -= s
+        c += 1

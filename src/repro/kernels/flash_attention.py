@@ -1,0 +1,124 @@
+"""Pallas TPU flash-attention kernel for the prefill hot-spot.
+
+The lax-native blockwise attention in ``repro.models.attention`` is the
+portable implementation every backend can compile (and what the dry-run
+lowers); this kernel is the TPU-tuned variant of the same online-softmax
+math: q/k/v tiles staged through VMEM with explicit BlockSpecs, the MXU
+driving the (q_block × kv_block) score and (prob × v) matmuls, and the
+running (m, l, acc) state held in VMEM scratch across the kv grid axis.
+
+Grid: (batch·heads, n_q_blocks, n_kv_blocks) — the kv axis is innermost
+so the scratch accumulator carries across it; causal masking is applied
+from absolute positions.  Validated in interpret mode against
+``ref.py::mha_ref`` over shape/dtype sweeps (see tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, scale: float, causal: bool, q_block: int,
+                  kv_block: int, n_kv: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                      # (q_block, dh)
+    k = k_ref[0]                      # (kv_block, dh)
+    v = v_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        pos_q = iq * q_block + jax.lax.broadcasted_iota(
+            jnp.int32, (q_block, kv_block), 0)
+        pos_k = ik * kv_block + jax.lax.broadcasted_iota(
+            jnp.int32, (q_block, kv_block), 1)
+        s = jnp.where(pos_k > pos_q, _NEG, s)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = acc_prev * corr + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "q_block", "kv_block", "interpret"))
+def flash_attention(
+    q: jax.Array,       # (BH, S, dh) — batch·heads flattened
+    k: jax.Array,       # (BH, S, dh)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_block: int = 256,
+    kv_block: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    bh, s, dh = q.shape
+    q_block = min(q_block, s)
+    kv_block = min(kv_block, s)
+    assert s % q_block == 0 and s % kv_block == 0
+    nq, nk = s // q_block, s // kv_block
+    scale = dh ** -0.5
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, q_block=q_block,
+        kv_block=kv_block, n_kv=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_block, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kv_block, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kv_block, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        scratch_shapes=[
+            pltpu_or_generic((q_block, 1), jnp.float32),
+            pltpu_or_generic((q_block, 1), jnp.float32),
+            pltpu_or_generic((q_block, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def pltpu_or_generic(shape, dtype):
+    """VMEM scratch on TPU; generic scratch in interpret mode."""
+    import jax.experimental.pallas.tpu as pltpu
+    return pltpu.VMEM(shape, dtype)
+
+
+def flash_mha(q, k, v, *, causal=True, q_block=256, kv_block=256,
+              interpret=True):
+    """(B, S, H, dh) GQA-aware wrapper: expands kv heads, flattens B·H."""
+    b, s, h, dh = q.shape
+    kv_heads = k.shape[2]
+    if kv_heads != h:
+        k = jnp.repeat(k, h // kv_heads, axis=2)
+        v = jnp.repeat(v, h // kv_heads, axis=2)
+    fq = jnp.moveaxis(q, 2, 1).reshape(b * h, s, dh)
+    fk = jnp.moveaxis(k, 2, 1).reshape(b * h, s, dh)
+    fv = jnp.moveaxis(v, 2, 1).reshape(b * h, s, dh)
+    out = flash_attention(fq, fk, fv, causal=causal, q_block=q_block,
+                          kv_block=kv_block, interpret=interpret)
+    return jnp.moveaxis(out.reshape(b, h, s, dh), 1, 2)

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel for the LUT interpolation unit (IU, paper §II-B).
+
+The 2**m+1-entry table is pinned in VMEM for every block (BlockSpec index
+map returns block 0 — the analogue of the IU's dedicated LUT registers),
+inputs stream through in (block_b, block_n) tiles, and each element costs
+one index split (shift/scale), two table reads, and one FMA:
+
+    y = LUT[idx] + frac * (LUT[idx+1] - LUT[idx])
+
+The table read is expressed with ``jnp.take``; on hardware Mosaic lowers
+small-table gathers directly (a one-hot-matmul fallback would also keep
+it on the MXU).  ``ref.py::interp_ref`` is the jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _interp_kernel(x_ref, tab_ref, y_ref, *, lo: float, hi: float, n_seg: int):
+    x = x_ref[...]
+    tab = tab_ref[...][0]  # (T+1,) table row
+    scale = n_seg / (hi - lo)
+    t = jnp.clip((x - lo) * scale, 0.0, float(n_seg))
+    idx = jnp.minimum(t.astype(jnp.int32), n_seg - 1)
+    frac = t - idx.astype(jnp.float32)
+    y0 = jnp.take(tab, idx, mode="clip")
+    y1 = jnp.take(tab, idx + 1, mode="clip")
+    y_ref[...] = y0 + frac * (y1 - y0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("lo", "hi", "block_b", "block_n", "interpret")
+)
+def interp_pallas(
+    x: jax.Array,        # (B, N) float32
+    table: jax.Array,    # (T+1,) float32, T = 2**m segments
+    *,
+    lo: float,
+    hi: float,
+    block_b: int = 256,
+    block_n: int = 512,
+    interpret: bool = True,
+):
+    b, n = x.shape
+    n_seg = int(table.shape[-1]) - 1
+    tab2d = table[None, :]  # (1, T+1) — 2D for TPU layout
+    grid = (b // block_b, n // block_n)
+    kernel = functools.partial(_interp_kernel, lo=lo, hi=hi, n_seg=n_seg)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, n_seg + 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(x, tab2d)

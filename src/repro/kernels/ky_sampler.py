@@ -1,0 +1,120 @@
+"""Pallas TPU kernel for batched non-normalized Knuth-Yao sampling.
+
+TPU mapping of the AIA sampler unit (DESIGN.md §2):
+
+* the (block_b, n) int32 weight tile is resident in VMEM — the analogue
+  of the distribution sitting in the AC register file;
+* per DDG level the bit-plane column is extracted with shift/mask (the
+  column-wise RF read port) and reduced with a lane-dim cumsum;
+* all lanes of the block walk levels in lock-step inside a
+  ``lax.while_loop``; finished lanes idle, rejected lanes restart — the
+  loop exits as soon as the whole block is done, so the expected trip
+  count is ≈ entropy + 2 (× <2 attempts), not the worst-case budget.
+
+Random bits: the kernel consumes bit position ``it`` of every lane's
+pre-generated uint32 word stream at iteration ``it`` (a *global* bit
+cursor).  This keeps the per-iteration bit fetch a scalar-indexed VMEM
+slice instead of a per-lane gather; lanes see iid bits either way.
+``ref.py::ky_ref`` mirrors these exact semantics for bit-exact testing.
+
+Block shape: ``(block_b, n_pad)`` with ``n_pad`` a multiple of 128 (VPU
+lane width); zero-padded outcomes contribute empty bit columns and can
+never be selected.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ky_kernel(w_ref, words_ref, klvl_ref, rej_ref, out_ref, bits_ref, ok_ref, *, budget: int):
+    w = w_ref[...]            # (bb, n) int32 weights
+    klvl = klvl_ref[...]      # (bb, 1) int32 per-lane DDG depth K
+    rej = rej_ref[...]        # (bb, 1) int32 rejection pad mass
+    bb, n = w.shape
+
+    def cond(st):
+        it, done = st[0], st[1]
+        return (it < budget) & (~jnp.all(done))
+
+    def body(st):
+        it, done, d, c, res, bits = st
+        active = ~done
+        # --- fetch one random bit per lane (scalar-indexed word column) ---
+        word = words_ref[:, pl.ds(it // 32, 1)]          # (bb, 1) uint32
+        b = ((word >> (it % 32).astype(jnp.uint32)) & 1).astype(jnp.int32)
+        d2 = 2 * d + (1 - b)
+        # --- bit-plane column at level c (column-wise RF read) ---
+        shift = klvl - 1 - c                              # (bb, 1)
+        col = jnp.where(shift >= 0, (w >> shift) & 1, 0)  # (bb, n)
+        rcol = jnp.where(shift >= 0, (rej >> shift) & 1, 0)
+        cum = jnp.cumsum(col, axis=1)
+        colsum = cum[:, -1:] + rcol                       # (bb, 1)
+        hit = d2 < colsum
+        ge = cum >= (d2 + 1)                              # (bb, n)
+        has_real = jnp.any(ge, axis=1)[:, None]
+        sel = jnp.argmax(ge, axis=1).astype(jnp.int32)[:, None]
+        finish = hit & has_real & active
+        restart = ((hit & ~has_real) | ((~hit) & (c + 1 >= klvl))) & active
+        res2 = jnp.where(finish, sel, res)
+        done2 = done | finish
+        d3 = jnp.where(restart, 0, jnp.where(hit, d, d2 - colsum))
+        c2 = jnp.where(restart, 0, jnp.where(hit, c, c + 1))
+        bits2 = bits + active.astype(jnp.int32)
+        return it + 1, done2, d3, c2, res2, bits2
+
+    # deterministic-row bypass: p = 1.0 has no fractional DDG expansion
+    total = jnp.sum(w, axis=1)[:, None]
+    amax = jnp.argmax(w, axis=1).astype(jnp.int32)[:, None]
+    det = jnp.max(w, axis=1)[:, None] == total
+
+    z = jnp.zeros((bb, 1), jnp.int32)
+    st = (jnp.int32(0), det, z, z, jnp.where(det, amax, 0), z)
+    _, done, _, _, res, bits = jax.lax.while_loop(cond, body, st)
+    # fallback (budget exhausted; prob < 2**-32): argmax outcome
+    out_ref[...] = jnp.where(done, res, amax)
+    bits_ref[...] = bits
+    ok_ref[...] = done
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "budget", "interpret"))
+def ky_sampler_pallas(
+    weights: jax.Array,     # (B, n_pad) int32, n_pad % 128 == 0
+    words: jax.Array,       # (B, W) uint32 random bit words
+    klvl: jax.Array,        # (B, 1) int32
+    rej: jax.Array,         # (B, 1) int32
+    *,
+    block_b: int = 256,
+    budget: int | None = None,
+    interpret: bool = True,
+):
+    b, n = weights.shape
+    w_words = words.shape[-1]
+    budget = budget if budget is not None else w_words * 32
+    grid = (b // block_b,)
+    kernel = functools.partial(_ky_kernel, budget=budget)
+    out, bits, ok = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, w_words), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(weights, words, klvl, rej)
+    return out, bits, ok

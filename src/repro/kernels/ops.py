@@ -1,0 +1,100 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handle padding (outcome dim → ×128 lanes, batch → ×block), bit-word
+generation, and expose the same KYResult-style interface as ``core.ky``.
+``interpret`` defaults to True (CPU container); on TPU pass False.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng as rng_lib
+from repro.core.ky import KYResult
+from repro.kernels import ref as ref_lib
+from repro.kernels.interp_lut import interp_pallas
+from repro.kernels.ky_sampler import ky_sampler_pallas
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("max_attempts", "block_b", "interpret"))
+def ky_sample_kernel(
+    key: jax.Array,
+    weights: jax.Array,
+    *,
+    max_attempts: int = 32,
+    block_b: int = 256,
+    interpret: bool = True,
+) -> KYResult:
+    """Pallas-kernel version of ``core.ky.ky_sample`` for (..., n) weights."""
+    w = jnp.asarray(weights, jnp.int32)
+    batch_shape = w.shape[:-1]
+    n = w.shape[-1]
+    flat = w.reshape((-1, n))
+    b = flat.shape[0]
+    total = jnp.sum(flat, axis=-1)
+    flat = jnp.where(
+        (total == 0)[:, None] & (jnp.arange(n) == 0)[None, :], 1, flat
+    )
+    klvl, rej = ref_lib.ky_prep(flat)
+    budget = 31 * max_attempts
+    words = rng_lib.random_bit_words(key, (b,), budget)
+
+    bb = min(block_b, b) if b % min(block_b, b) == 0 else 1
+    # pad batch to a block multiple, outcomes to a lane multiple
+    flat_p = _pad_to(_pad_to(flat, 1, 128), 0, block_b)
+    # padded rows must be valid distributions: give them weight-1 outcome 0
+    bpad = flat_p.shape[0] - b
+    if bpad:
+        filler = jnp.zeros((bpad, flat_p.shape[1]), jnp.int32).at[:, 0].set(1)
+        flat_p = flat_p.at[b:].set(filler)
+        kl_f, rj_f = ref_lib.ky_prep(filler)
+        klvl = jnp.concatenate([klvl, kl_f])
+        rej = jnp.concatenate([rej, rj_f])
+        words = jnp.concatenate(
+            [words, jnp.zeros((bpad, words.shape[1]), jnp.uint32)]
+        )
+    out, bits, ok = ky_sampler_pallas(
+        flat_p, words, klvl, rej,
+        block_b=block_b, budget=budget, interpret=interpret,
+    )
+    return KYResult(
+        sample=out[:b, 0].reshape(batch_shape),
+        bits_used=bits[:b, 0].reshape(batch_shape),
+        attempts=jnp.ones(batch_shape, jnp.int32),  # not tracked in-kernel
+        ok=ok[:b, 0].reshape(batch_shape),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("lo", "hi", "interpret"))
+def interp_kernel(
+    x: jax.Array,
+    table: jax.Array,
+    *,
+    lo: float,
+    hi: float,
+    interpret: bool = True,
+) -> jax.Array:
+    """Pallas-kernel version of ``core.interp.InterpTable.__call__``."""
+    x = jnp.asarray(x, jnp.float32)
+    shape = x.shape
+    flat = x.reshape((1, -1)) if x.ndim == 1 else x.reshape((-1, shape[-1]))
+    b, n = flat.shape
+    bb = 256 if b % 256 == 0 else (b if b <= 256 else 1)
+    bn = 512 if n % 512 == 0 else n
+    flat = _pad_to(_pad_to(flat, 0, bb), 1, bn)
+    y = interp_pallas(
+        flat, jnp.asarray(table, jnp.float32),
+        lo=lo, hi=hi, block_b=bb, block_n=bn, interpret=interpret,
+    )
+    return y[:b, :n].reshape(shape)

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for the Pallas kernels (bit-exact semantics).
+
+``ky_ref`` mirrors the *kernel's* global-bit-cursor semantics (every lane
+consumes bit position ``it`` of its own stream at iteration ``it``),
+which differs from ``core.ky.ky_sample``'s per-lane cursor only in which
+iid bits get used — identical distribution, different stream positions.
+Tests check the kernel against this oracle bit-exactly, and both against
+``core.ky`` distributionally.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fixedpoint import ceil_log2
+
+
+def ky_prep(weights: jax.Array):
+    """Compute (klvl, rej) columns the kernel consumes, from (B, n) weights."""
+    w = jnp.asarray(weights, jnp.int32)
+    total = jnp.maximum(jnp.sum(w, axis=-1), 1)
+    klvl = jnp.maximum(ceil_log2(total), 1)
+    rej = (jnp.int32(1) << klvl) - total
+    return klvl[:, None], rej[:, None]
+
+
+def ky_ref(weights: jax.Array, words: jax.Array, budget: int | None = None):
+    """jnp oracle with kernel semantics. Returns (sample, bits, ok), (B,1)."""
+    w = jnp.asarray(weights, jnp.int32)
+    b, n = w.shape
+    klvl, rej = ky_prep(w)
+    budget = budget if budget is not None else int(words.shape[-1]) * 32
+
+    def body(st, it):
+        done, d, c, res, bits = st
+        active = ~done
+        word = jnp.take_along_axis(words, jnp.full((b, 1), it // 32, jnp.int32), axis=1)
+        bit = ((word >> jnp.uint32(it % 32)) & 1).astype(jnp.int32)
+        d2 = 2 * d + (1 - bit)
+        shift = klvl - 1 - c
+        col = jnp.where(shift >= 0, (w >> shift) & 1, 0)
+        rcol = jnp.where(shift >= 0, (rej >> shift) & 1, 0)
+        cum = jnp.cumsum(col, axis=1)
+        colsum = cum[:, -1:] + rcol
+        hit = d2 < colsum
+        ge = cum >= (d2 + 1)
+        has_real = jnp.any(ge, axis=1)[:, None]
+        sel = jnp.argmax(ge, axis=1).astype(jnp.int32)[:, None]
+        finish = hit & has_real & active
+        restart = ((hit & ~has_real) | ((~hit) & (c + 1 >= klvl))) & active
+        res2 = jnp.where(finish, sel, res)
+        done2 = done | finish
+        d3 = jnp.where(restart, 0, jnp.where(hit, d, d2 - colsum))
+        c2 = jnp.where(restart, 0, jnp.where(hit, c, c + 1))
+        bits2 = bits + active.astype(jnp.int32)
+        return (done2, d3, c2, res2, bits2), None
+
+    total = jnp.sum(w, axis=1)[:, None]
+    amax = jnp.argmax(w, axis=1).astype(jnp.int32)[:, None]
+    det = jnp.max(w, axis=1)[:, None] == total  # deterministic-row bypass
+
+    z = jnp.zeros((b, 1), jnp.int32)
+    st = (det, z, z, jnp.where(det, amax, 0), z)
+    (done, _, _, res, bits), _ = jax.lax.scan(body, st, jnp.arange(budget))
+    return jnp.where(done, res, amax), bits, done
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+            causal: bool = True) -> jax.Array:
+    """Dense-softmax oracle for the flash-attention kernel.
+    q/k/v: (BH, S, dh)."""
+    s = jnp.einsum("bqd,bkd->bqk", q, k,
+                   preferred_element_type=jnp.float32) * q.shape[-1] ** -0.5
+    if causal:
+        n = q.shape[1]
+        mask = jnp.tril(jnp.ones((n, n), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def interp_ref(x: jax.Array, table: jax.Array, lo: float, hi: float) -> jax.Array:
+    """jnp oracle for the interpolation kernel."""
+    n_seg = int(table.shape[-1]) - 1
+    scale = n_seg / (hi - lo)
+    t = jnp.clip((jnp.asarray(x, jnp.float32) - lo) * scale, 0.0, float(n_seg))
+    idx = jnp.minimum(t.astype(jnp.int32), n_seg - 1)
+    frac = t - idx.astype(jnp.float32)
+    y0 = jnp.take(table, idx, mode="clip")
+    y1 = jnp.take(table, idx + 1, mode="clip")
+    return y0 + frac * (y1 - y0)

@@ -1,0 +1,202 @@
+"""Step builders shared by the dry-run, trainer and server.
+
+Each builder returns ``(fn, args_sds, in_shardings, out_shardings)``
+where ``args_sds`` are ShapeDtypeStruct pytrees (no allocation — the
+full-size configs are only ever lowered, never materialized).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCfg
+from repro.configs import input_specs
+from repro.core.token_sampler import ky_sample_tokens
+from repro.models.transformer import (
+    decode_step,
+    encode,
+    forward,
+    init_cache,
+    init_model,
+)
+from repro.models.layers import unembed
+from repro.sharding import ctx as shard_ctx
+from repro.sharding.specs import (
+    batch_spec_axis,
+    batch_specs,
+    cache_specs,
+    named,
+    param_specs,
+    zero_extend,
+)
+from repro.training.optimizer import make_optimizer
+from repro.training.train_step import TrainState, make_train_step
+
+
+def _params_sds(cfg: ModelConfig):
+    key = jax.ShapeDtypeStruct((), jax.eval_shape(jax.random.key, 0).dtype)
+    return jax.eval_shape(lambda k: init_model(k, cfg), key)
+
+
+def _opt_specs(opt_state, pspecs, mesh):
+    """Optimizer-state specs: mirror param specs where shapes match
+    (AdamW m/v), ZeRO-extend over "data"; replicate factored leaves."""
+    import jax.tree_util as jtu
+
+    out = {}
+    for f in opt_state._fields:
+        sub = getattr(opt_state, f)
+        if f == "step":
+            out[f] = P()
+        else:
+            out[f] = jtu.tree_map_with_path(
+                lambda pth, lf, _f=f: _match_spec(pspecs, pth, lf, mesh, _f),
+                sub)
+    return type(opt_state)(**out)
+
+
+def _match_spec(pspecs, path, leaf, mesh, field=""):
+    node = pspecs
+    for pk in path:
+        key = getattr(pk, "key", getattr(pk, "name", None))
+        if isinstance(node, dict) and key in node:
+            node = node[key]
+    if not isinstance(node, P):
+        return P()
+    parts = tuple(node) + (None,) * 8
+    nd = len(leaf.shape)
+    if field == "vr" and nd >= 1:       # param spec minus last dim
+        parts = parts[: max(nd, 1)] if nd < len(tuple(node)) else parts
+        cand = P(*parts[:nd])
+    elif field == "vc" and nd >= 1:     # param spec minus second-to-last
+        full = tuple(node) + (None,) * max(0, nd + 1 - len(tuple(node)))
+        cand = P(*(full[: nd - 1] + (full[nd],))) if nd >= 1 else P()
+    else:
+        if len(tuple(node)) > nd:
+            return P()
+        cand = P(*parts[:nd])
+    # validate divisibility of the candidate spec against the leaf shape
+    out = []
+    for i, ax in enumerate(tuple(cand)):
+        if ax is None:
+            out.append(None)
+            continue
+        size = mesh.shape[ax] if isinstance(ax, str) else 1
+        out.append(ax if leaf.shape[i] % max(size, 1) == 0 else None)
+    return zero_extend(P(*out), leaf.shape, mesh)
+
+
+def _act_specs(cfg: ModelConfig, mesh: Mesh, bdim, seq_len: int) -> dict:
+    """Activation constraints: sequence-parallel residual storage +
+    head-TP pinning for attention tensors (DESIGN.md §6)."""
+    tp = mesh.shape["model"]
+    specs: dict = {"residual": None, "attn_q": None, "attn_kv": None}
+    if seq_len % tp == 0:
+        specs["residual"] = NamedSharding(mesh, P(bdim, "model", None))
+    if cfg.n_heads and cfg.n_heads % tp == 0:
+        specs["attn_q"] = NamedSharding(mesh, P(bdim, None, "model", None))
+        if cfg.n_kv % tp == 0:
+            specs["attn_kv"] = NamedSharding(mesh, P(bdim, None, "model", None))
+    return specs
+
+
+def build_train(cfg: ModelConfig, mesh: Mesh, shape: ShapeCfg):
+    params_sds = _params_sds(cfg)
+    opt = make_optimizer(cfg)
+    opt_sds = jax.eval_shape(opt.init, params_sds)
+    state_sds = TrainState(params=params_sds, opt=opt_sds,
+                           step=jax.ShapeDtypeStruct((), jnp.int32))
+
+    pspecs = param_specs(cfg, params_sds, mesh)
+    ospecs = _opt_specs(opt_sds, pspecs, mesh)
+    state_specs = TrainState(params=pspecs, opt=ospecs, step=P())
+
+    batch_sds = input_specs(cfg, shape)
+    bspecs = batch_specs(cfg, mesh, batch_sds)
+
+    step_fn, _ = make_train_step(cfg)
+
+    # sequence-parallel residual storage (trace-time context, ctx.py)
+    nmb = max(cfg.microbatch, 1)
+    mb_b = shape.global_batch // nmb
+    bdim = batch_spec_axis(mesh, mb_b)
+    act = _act_specs(cfg, mesh, bdim, shape.seq_len)
+
+    def wrapped(state, batch):
+        with shard_ctx.activation_specs(act):
+            return step_fn(state, batch)
+
+    in_sh = (named(mesh, state_specs), named(mesh, bspecs))
+    out_sh = (named(mesh, state_specs), NamedSharding(mesh, P()))
+    return wrapped, (state_sds, batch_sds), in_sh, out_sh, (0,)
+
+
+def build_prefill(cfg: ModelConfig, mesh: Mesh, shape: ShapeCfg):
+    params_sds = _params_sds(cfg)
+    pspecs = param_specs(cfg, params_sds, mesh)
+    batch_sds = input_specs(cfg, shape)
+    bspecs = batch_specs(cfg, mesh, batch_sds)
+    bdim = batch_spec_axis(mesh, shape.global_batch)
+
+    act = _act_specs(cfg, mesh, bdim, shape.seq_len)
+
+    def prefill_fn(params, batch):
+        with shard_ctx.activation_specs(act):
+            enc_out = None
+            if cfg.family in ("encdec", "audio"):
+                enc_out = encode(params, cfg,
+                                 batch["src_embeds"].astype(cfg.dtype))
+            x = forward(params, cfg, batch["tokens"],
+                        frontend=batch.get("frontend"), enc_out=enc_out)
+        logits = unembed(params["embed"], cfg, x[:, -1:, :])[:, 0, :]
+        return logits.astype(jnp.float32)
+
+    in_sh = (named(mesh, pspecs), named(mesh, bspecs))
+    out_sh = NamedSharding(mesh, P(bdim, None))
+    return prefill_fn, (params_sds, batch_sds), in_sh, out_sh, ()
+
+
+def build_decode(cfg: ModelConfig, mesh: Mesh, shape: ShapeCfg,
+                 *, sampler: str = "ky"):
+    b, t = shape.global_batch, shape.seq_len
+    params_sds = _params_sds(cfg)
+    pspecs = param_specs(cfg, params_sds, mesh)
+    cache_sds = jax.eval_shape(lambda: init_cache(cfg, b, t))
+    cspecs = cache_specs(cfg, mesh, cache_sds, b)
+    bdim = batch_spec_axis(mesh, b)
+
+    key_sds = jax.ShapeDtypeStruct((), jax.eval_shape(jax.random.key, 0).dtype)
+    tok_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode_fn(params, key, token, pos, cache):
+        logits, cache = decode_step(params, cfg, token, pos, cache)
+        if sampler == "ky":
+            out = ky_sample_tokens(key, logits.astype(jnp.float32))
+            tok = out.token
+        else:
+            tok = jax.random.categorical(key, logits.astype(jnp.float32))
+        return tok.astype(jnp.int32), cache
+
+    in_sh = (
+        named(mesh, pspecs),
+        NamedSharding(mesh, P()),
+        NamedSharding(mesh, P(bdim, None)),
+        NamedSharding(mesh, P()),
+        named(mesh, cspecs),
+    )
+    out_sh = (NamedSharding(mesh, P(bdim)), named(mesh, cspecs))
+    args = (params_sds, key_sds, tok_sds, pos_sds, cache_sds)
+    return decode_fn, args, in_sh, out_sh, (4,)  # donate the KV cache
+
+
+def build_cell(cfg: ModelConfig, mesh: Mesh, shape: ShapeCfg):
+    if shape.kind == "train":
+        return build_train(cfg, mesh, shape)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, mesh, shape)
+    return build_decode(cfg, mesh, shape)

@@ -1,0 +1,181 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+  1. builds the step fn (train_step / prefill / serve_step) with the full
+     production config and ShapeDtypeStruct inputs (never allocating),
+  2. ``jax.jit(...).lower(...)`` with explicit in/out shardings on the
+     production mesh — 16×16 single-pod and 2×16×16 multi-pod,
+  3. ``.compile()`` — sharding mismatches, unsupported collectives and
+     compile-time OOM surface here as hard failures,
+  4. records ``memory_analysis()`` (the per-chip fits proof),
+     ``cost_analysis()`` raw numbers, the parsed HLO collective schedule,
+     and the analytic roofline terms (launch/roofline.py),
+  5. writes one JSON per cell under reports/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-32b \
+      --shape train_4k --multi-pod
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import (ARCH_IDS, SHAPES, cell_runnable, get_config,
+                           shape_by_name)
+from repro.launch.builders import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import roofline_cell
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8,
+                "s16": 2, "u16": 2}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum output-operand bytes of every collective op in the HLO.
+
+    Note: ops inside while/scan bodies appear ONCE (XLA does not scale by
+    trip count) — this is the collective *schedule* (kinds + shapes); the
+    step-total collective bytes come from the analytic model.
+    """
+    out: dict[str, dict] = {}
+    shape_re = re.compile(r"(f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+ = .*?(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(", ls)
+        if not m:
+            continue
+        kind = m.group(1)
+        if "-done" in ls.split("=")[1].split("(")[0]:
+            continue  # avoid double counting start/done pairs
+        sm = shape_re.search(ls.split("=", 1)[1])
+        if not sm:
+            continue
+        dt, dims = sm.groups()
+        size = _DTYPE_BYTES[dt]
+        for d in dims.split(","):
+            if d:
+                size *= int(d)
+        slot = out.setdefault(kind, {"count": 0, "bytes": 0})
+        slot["count"] += 1
+        slot["bytes"] += size
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str) -> dict:
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "16x16"
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+
+    ok, why = cell_runnable(cfg, shape)
+    if not ok:
+        result["status"] = "skipped"
+        result["reason"] = why
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        fn, args_sds, in_sh, out_sh, donate = build_cell(cfg, mesh, shape)
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args_sds)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+            ma = compiled.memory_analysis()
+            ca = compiled.cost_analysis() or {}
+            hlo = compiled.as_text()
+        coll = parse_collectives(hlo)
+        rl = roofline_cell(cfg, shape, multi_pod=multi_pod)
+        result.update(
+            status="ok",
+            t_lower_s=round(t_lower, 2),
+            t_compile_s=round(t_compile, 2),
+            memory=dict(
+                argument_bytes=int(ma.argument_size_in_bytes),
+                output_bytes=int(ma.output_size_in_bytes),
+                temp_bytes=int(ma.temp_size_in_bytes),
+                total_per_chip=int(ma.argument_size_in_bytes
+                                   + ma.temp_size_in_bytes),
+                fits_16gb=bool(ma.argument_size_in_bytes
+                               + ma.temp_size_in_bytes < 16e9),
+            ),
+            cost_analysis_body={
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            },
+            collectives=coll,
+            roofline=rl.as_dict(),
+        )
+    except Exception as e:  # record, keep sweeping
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+    os.makedirs(out_dir, exist_ok=True)
+    fn_out = os.path.join(
+        out_dir, f"{arch.replace('/', '_')}__{shape_name}__{mesh_name}.json")
+    with open(fn_out, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_skip = n_err = 0
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                r = run_cell(arch, shape, multi_pod=mp, out_dir=args.out)
+                tag = {"ok": "OK  ", "skipped": "SKIP", "error": "ERR "}[r["status"]]
+                extra = ""
+                if r["status"] == "ok":
+                    mem = r["memory"]["total_per_chip"] / 1e9
+                    rf = r["roofline"]["roofline_fraction"]
+                    bn = r["roofline"]["bottleneck"]
+                    extra = (f"mem/chip={mem:.2f}GB fits={r['memory']['fits_16gb']} "
+                             f"roofline={rf:.3f} bound={bn} "
+                             f"compile={r['t_compile_s']}s")
+                    n_ok += 1
+                elif r["status"] == "skipped":
+                    extra = r["reason"]
+                    n_skip += 1
+                else:
+                    extra = r["error"][:200]
+                    n_err += 1
+                mesh_name = "pod2x16x16" if mp else "16x16"
+                print(f"[{tag}] {mesh_name:11s} {arch:24s} {shape:12s} {extra}",
+                      flush=True)
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

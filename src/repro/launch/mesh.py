@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (importing this module never
+touches jax device state).  Single pod: (16, 16) = 256 chips as
+("data", "model"); multi-pod: (2, 16, 16) = 512 chips with the leading
+"pod" axis carrying only data parallelism (cross-pod traffic = one
+gradient all-reduce per step — DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512"
+        )
+    return jax.make_mesh(
+        shape, axes, devices=devices[:n],
+        axis_types=(AxisType.Auto,) * len(axes),
+    )
+
+
+def make_pgm_mesh(rows: int = 4, cols: int = 4) -> Mesh:
+    """The AIA-analogue 2D core mesh for distributed MRF Gibbs (C3)."""
+    n = rows * cols
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"pgm mesh needs {n} devices, have {len(devices)}")
+    return jax.make_mesh((rows, cols), ("row", "col"),
+                         devices=devices[:n],
+                         axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,64 @@
+"""Serving driver: batched autoregressive generation with the KY sampler.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \
+      --smoke --batch 4 --prompt-len 16 --max-new 32 --sampler ky
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.sampling import generate
+from repro.models.transformer import init_model
+from repro.training.data import make_batch
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--sampler", default="ky",
+                    choices=("ky", "categorical", "greedy"))
+    ap.add_argument("--temperature", type=float, default=1.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    key = jax.random.PRNGKey(0)
+    params = init_model(key, cfg)
+    prompt = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab)
+    extras = {}
+    if cfg.family in ("encdec", "audio"):
+        extras["src_embeds"] = jnp.zeros(
+            (args.batch, cfg.enc_seq_len, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        extras["frontend"] = jnp.zeros(
+            (args.batch, cfg.frontend_tokens, cfg.d_model), jnp.float32)
+
+    t0 = time.time()
+    tokens, bits = generate(
+        params, cfg, prompt, jax.random.PRNGKey(2),
+        max_new=args.max_new, sampler=args.sampler,
+        temperature=args.temperature,
+        q_block=min(args.prompt_len, 512), **extras)
+    tokens.block_until_ready()
+    dt = time.time() - t0
+    n = args.batch * args.max_new
+    print(f"sampler={args.sampler}: {n} tokens in {dt:.2f}s "
+          f"({n/dt:.1f} tok/s incl. compile)")
+    if args.sampler == "ky":
+        print(f"random bits consumed: {int(bits)} "
+              f"({int(bits)/n:.2f} bits/token — softmax-free KY decode)")
+    print("sample tokens[0]:", np.asarray(tokens[0])[:16].tolist()
+          if (np := __import__('numpy')) else None)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,227 @@
+"""Attention: GQA/MHA/MQA with RoPE, sliding windows, KV caches.
+
+Prefill/train use a lax-native blockwise (FlashAttention-style online-
+softmax) formulation: O(S·block) memory, never materializing the full
+(S, S) score matrix — required for the 32k prefill cells to fit HBM, and
+compilable on any backend (the Pallas flash kernel in ``repro.kernels``
+is the TPU-tuned variant of the same math).  Decode attends one query
+against the cache densely.
+
+GQA is computed with kv-heads kept unexpanded: q is viewed as
+``(B, S, KV, G, dh)`` so no kv broadcast materializes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope
+from repro.sharding import ctx as shard_ctx
+
+_NEG_INF = -1e30
+
+
+def init_attention(key: jax.Array, cfg: ModelConfig, *, cross: bool = False) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h, dh), jnp.float32) * s,
+        "wk": jax.random.normal(ks[1], (d, kv, dh), jnp.float32) * s,
+        "wv": jax.random.normal(ks[2], (d, kv, dh), jnp.float32) * s,
+        "wo": jax.random.normal(ks[3], (h, dh, d), jnp.float32) * (h * dh) ** -0.5,
+    }
+    if cfg.attn_bias and not cross:
+        p["bq"] = jnp.zeros((h, dh), jnp.float32)
+        p["bk"] = jnp.zeros((kv, dh), jnp.float32)
+        p["bv"] = jnp.zeros((kv, dh), jnp.float32)
+    return p
+
+
+def _mask(pos_q, pos_k, *, causal: bool, window: int, valid_k=None):
+    """(..., Sq, Sk) additive mask from absolute positions."""
+    m = jnp.zeros(pos_q.shape[-1:] + pos_k.shape[-1:], jnp.float32)
+    dq = pos_q[:, None]
+    dk = pos_k[None, :]
+    if causal:
+        m = jnp.where(dk > dq, _NEG_INF, m)
+    if not (isinstance(window, int) and window == 0):
+        w = jnp.asarray(window)  # may be a traced per-layer scalar (hymba)
+        m = jnp.where((w > 0) & (dq - dk >= w), _NEG_INF, m)
+    if valid_k is not None:
+        m = jnp.where(valid_k[None, :], m, _NEG_INF)
+    return m
+
+
+def attend_blockwise(
+    q: jax.Array,           # (B, Sq, H, dh)
+    k: jax.Array,           # (B, Sk, KV, dh)
+    v: jax.Array,           # (B, Sk, KV, dh)
+    *,
+    causal: bool = True,
+    window: int | jax.Array = 0,
+    q_block: int = 512,
+    kv_block: int = 1024,
+) -> jax.Array:
+    """Online-softmax blockwise attention with FLAT heads.
+
+    GQA kv-heads are expanded to full heads per kv-block (transient,
+    one block at a time) so the head dim stays a single axis of size H —
+    keeping tensor-parallel sharding clean (H | mesh) instead of the
+    (KV, G) factorization that breaks divisibility (e.g. 96 = 8×12 where
+    neither 8 nor 12 divides a 16-wide model axis).
+    """
+    b, sq, h, dh = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = dh ** -0.5
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, sk)
+    nq, nk = sq // q_block, sk // kv_block
+    assert sq % q_block == 0 and sk % kv_block == 0
+
+    qb = q.reshape(b, nq, q_block, h, dh)
+    kb = k.reshape(b, nk, kv_block, kv, dh)
+    vb = v.reshape(b, nk, kv_block, kv, dh)
+
+    def q_step(_, qi):
+        qblk, iq = qi                       # (B, qb, H, dh), scalar
+        pos_q = iq * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            kblk, vblk, ik = ki
+            if g > 1:  # expand kv -> flat heads for this block only
+                kblk = jnp.repeat(kblk, g, axis=2)
+                vblk = jnp.repeat(vblk, g, axis=2)
+            pos_k = ik * kv_block + jnp.arange(kv_block)
+            s = jnp.einsum(
+                "bqhd,bshd->bhqs", qblk, kblk,
+                preferred_element_type=jnp.float32) * scale
+            s = s + _mask(pos_q, pos_k, causal=causal, window=window)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhqs,bshd->bhqd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, h, q_block), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_block), jnp.float32)
+        a0 = jnp.zeros((b, h, q_block, dh), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), jnp.arange(nk)))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        out = jnp.moveaxis(out, 1, 2)       # (B, qb, H, dh)
+        return None, out.astype(q.dtype)
+
+    _, blocks = jax.lax.scan(
+        q_step, None, (jnp.moveaxis(qb, 1, 0), jnp.arange(nq)))
+    return jnp.moveaxis(blocks, 0, 1).reshape(b, sq, h, dh)
+
+
+def attend_decode(
+    q: jax.Array,           # (B, 1, H, dh)
+    k_cache: jax.Array,     # (B, T, KV, dh)
+    v_cache: jax.Array,
+    pos: jax.Array,         # scalar int32: index of the new token
+    *,
+    window: int | jax.Array = 0,
+) -> jax.Array:
+    b, _, h, dh = q.shape
+    t, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    scale = dh ** -0.5
+    qg = q.reshape(b, kv, g, dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    idx = jnp.arange(t)
+    valid = idx <= pos
+    if not isinstance(window, int) or window > 0:
+        w = jnp.asarray(window)
+        valid &= jnp.where(w > 0, idx > pos - w, True)
+    s = jnp.where(valid[None, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+def apply_attention(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,                 # (B, S, D)
+    *,
+    freqs: jax.Array | None,
+    pos0: jax.Array | int = 0,
+    causal: bool = True,
+    window: int | jax.Array = 0,
+    cache: dict | None = None,    # {"k": (B,T,KV,dh), "v": ...} decode only
+    pos: jax.Array | None = None, # decode write position (scalar)
+    kv_source: jax.Array | None = None,  # cross-attention memory (B,Sm,D)
+    q_block: int = 512,
+) -> tuple[jax.Array, dict | None]:
+    b, s, d = x.shape
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    src = kv_source if kv_source is not None else x
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"].astype(dt))
+    if "bq" in params:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = shard_ctx.constrain(q, "attn_q")
+    k = shard_ctx.constrain(k, "attn_kv")
+    v = shard_ctx.constrain(v, "attn_kv")
+    if freqs is not None and kv_source is None:  # no RoPE on cross-attn
+        if cache is not None and pos is not None:
+            qpos = jnp.asarray(pos)[None] + jnp.zeros((s,), jnp.int32)
+        else:
+            qpos = jnp.asarray(pos0) + jnp.arange(s)
+        q = apply_rope(q, qpos, freqs)
+        k = apply_rope(k, qpos, freqs)
+
+    new_cache = None
+    if cache is not None and pos is not None and kv_source is None:
+        # self-attention decode: write the fresh KV, attend over the cache
+        if "k_scale" in cache:  # int8-quantized cache (per-token scales)
+            ks = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=-1) / 127.0
+            vs = jnp.max(jnp.abs(v.astype(jnp.float32)), axis=-1) / 127.0
+            kq = jnp.round(k.astype(jnp.float32)
+                           / jnp.maximum(ks[..., None], 1e-8)).astype(jnp.int8)
+            vq = jnp.round(v.astype(jnp.float32)
+                           / jnp.maximum(vs[..., None], 1e-8)).astype(jnp.int8)
+            kc = jax.lax.dynamic_update_slice(cache["k"], kq, (0, pos, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache["v"], vq, (0, pos, 0, 0))
+            ksc = jax.lax.dynamic_update_slice(
+                cache["k_scale"], ks.astype(cache["k_scale"].dtype),
+                (0, pos, 0))
+            vsc = jax.lax.dynamic_update_slice(
+                cache["v_scale"], vs.astype(cache["v_scale"].dtype),
+                (0, pos, 0))
+            new_cache = {"k": kc, "v": vc, "k_scale": ksc, "v_scale": vsc}
+            kd = kc.astype(dt) * ksc[..., None].astype(dt)
+            vd = vc.astype(dt) * vsc[..., None].astype(dt)
+            out = attend_decode(q, kd, vd, pos, window=window)
+        else:
+            kc = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+            new_cache = {"k": kc, "v": vc}
+            out = attend_decode(q, kc, vc, pos, window=window)
+    elif cache is not None:
+        # cross-attention over a precomputed (full, static) memory cache
+        t = cache["k"].shape[1]
+        out = attend_decode(q, cache["k"], cache["v"], jnp.int32(t - 1))
+        new_cache = cache
+    else:
+        out = attend_blockwise(q, k, v, causal=causal, window=window,
+                               q_block=q_block)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return y, new_cache

@@ -1,0 +1,143 @@
+"""Layer primitives: norms, activations, RoPE, embeddings, MLP.
+
+Pure-functional style: ``init_*`` returns a param dict; ``apply`` fns are
+stateless.  Params keep semantic axes unflattened — attention weights are
+``(d_model, heads, d_head)`` — so the sharding rule engine
+(:mod:`repro.sharding.specs`) can target axes by name.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _norm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * params["scale"]).astype(dt)
+
+
+def act_fn(name: str, x: jax.Array, gate: jax.Array | None = None) -> jax.Array:
+    if name == "swiglu":
+        assert gate is not None
+        return jax.nn.silu(gate) * x
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu2":  # nemotron squared ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(name)
+
+
+def init_mlp(key: jax.Array, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale = d ** -0.5
+    p = {
+        "wi": jax.random.normal(k1, (d, ff), jnp.float32) * scale,
+        "wo": jax.random.normal(k2, (ff, d), jnp.float32) * (ff ** -0.5),
+    }
+    if cfg.act == "swiglu":
+        p["wg"] = jax.random.normal(k3, (d, ff), jnp.float32) * scale
+    return p
+
+
+def apply_mlp(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    h = x @ params["wi"].astype(dt)
+    g = x @ params["wg"].astype(dt) if "wg" in params else None
+    h = act_fn(cfg.act, h, g)
+    return h @ params["wo"].astype(dt)
+
+
+def init_embed(key: jax.Array, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"tok": jax.random.normal(k1, (cfg.vocab, cfg.d_model), jnp.float32)}
+    if not cfg.tie_embeddings:
+        p["head"] = (
+            jax.random.normal(k2, (cfg.d_model, cfg.vocab), jnp.float32)
+            * cfg.d_model ** -0.5
+        )
+    return p
+
+
+def embed_tokens(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                 dtype) -> jax.Array:
+    return jnp.take(params["tok"], tokens, axis=0).astype(dtype)
+
+
+def unembed(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = x @ params["tok"].T.astype(x.dtype)
+    else:
+        logits = x @ params["head"].astype(x.dtype)
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits.astype(jnp.float32) / c)
+    return logits
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(cfg: ModelConfig) -> jax.Array:
+    half = cfg.d_head // 2
+    return cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, freqs: jax.Array) -> jax.Array:
+    """x: (B, S, H, dh); pos: (S,) or (B, S) int positions."""
+    ang = pos[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    if ang.ndim == 2:  # (S, half) -> broadcast over batch
+        ang = ang[None]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Chunked cross-entropy: never materializes the full (B, S, V) logits
+# --------------------------------------------------------------------------
+
+def chunked_xent(
+    x: jax.Array,            # (B, S, D) final hidden states
+    embed_params: dict,
+    cfg: ModelConfig,
+    labels: jax.Array,       # (B, S) int32
+    mask: jax.Array | None = None,
+    chunk: int = 512,
+) -> jax.Array:
+    b, s, d = x.shape
+    n_chunks = max(s // chunk, 1)
+    chunk = s // n_chunks
+    xc = x.reshape(b, n_chunks, chunk, d)
+    lc = labels.reshape(b, n_chunks, chunk)
+    mc = (mask.reshape(b, n_chunks, chunk) if mask is not None
+          else jnp.ones_like(lc, jnp.float32))
+
+    @jax.checkpoint  # recompute per-chunk logits in bwd: never stores (B,S,V)
+    def chunk_loss(xi, li, mi):
+        logits = unembed(embed_params, cfg, xi).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * mi)
+
+    def body(carry, inp):
+        xi, li, mi = inp  # (B, chunk, D), (B, chunk)
+        return carry + chunk_loss(xi, li, mi), None
+
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(lc, 1, 0), jnp.moveaxis(mc, 1, 0))
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), xs)
+    return total / jnp.maximum(jnp.sum(mc), 1.0)

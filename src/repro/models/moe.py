@@ -1,0 +1,91 @@
+"""Mixture-of-Experts with Switch/T5X-style capacity dispatch.
+
+Top-k routing with a *static* per-group capacity so every shape is known
+at trace time (a hard requirement for the multi-pod dry-run).  Tokens are
+grouped per sequence; overflow tokens are dropped (standard capacity-
+factor semantics) and their residual stream passes through unchanged.
+
+Sharding (see ``repro.sharding.specs``): expert-parallel — experts dim on
+the "model" mesh axis when ``E % model == 0`` (llama4-scout: 16e on 16) —
+otherwise tensor-parallel inside each expert on the ffn dim (grok-1: 8e,
+ffn 32768 = 2048/device).  With EP, XLA inserts the token all-to-all on
+the dispatch/combine einsums automatically under pjit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import act_fn
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.expert_ff
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * s,
+        "wi": jax.random.normal(ks[1], (e, d, ff), jnp.float32) * s,
+        "wo": jax.random.normal(ks[2], (e, ff, d), jnp.float32) * ff ** -0.5,
+    }
+    if cfg.act == "swiglu":
+        p["wg"] = jax.random.normal(ks[3], (e, d, ff), jnp.float32) * s
+    return p
+
+
+def moe_capacity(cfg: ModelConfig, group_size: int) -> int:
+    c = int(cfg.capacity_factor * group_size * cfg.top_k / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8 for layout friendliness
+
+
+def apply_moe(params: dict, cfg: ModelConfig, x: jax.Array
+              ) -> tuple[jax.Array, dict]:
+    """x: (B, S, D) -> (out, aux) with load-balance/z losses in aux."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = moe_capacity(cfg, s)
+    dt = x.dtype
+
+    logits = jnp.einsum("bsd,de->bse", x, params["router"].astype(dt)
+                        ).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # --- top-k choice + position within expert (per group = per sequence)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)          # (B, S, k)
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)    # renorm top-k
+    onehot = jax.nn.one_hot(expert_ids, e, dtype=jnp.float32)  # (B,S,k,E)
+    # priority: earlier tokens (and lower k-slot) first, per sequence
+    flat = onehot.reshape(b, s * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat)        # (B, S*k, E)
+    pos_in_expert = pos_in_expert.reshape(b, s, k, e)
+    within_cap = pos_in_expert < cap
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)           # (B, S, k)
+    keep = jnp.sum(within_cap * onehot, axis=-1) > 0         # (B, S, k)
+
+    # --- dispatch/combine tensors --------------------------------------
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32)     # (B, S, k, C)
+    disp = jnp.einsum("bske,bskc->bsec", onehot * keep[..., None], pos_oh)
+    comb = jnp.einsum("bske,bskc,bsk->bsec",
+                      onehot, pos_oh, gate_vals * keep)
+
+    xe = jnp.einsum("bsd,bsec->becd", x, disp.astype(dt))    # (B, E, C, D)
+    h = jnp.einsum("becd,edf->becf", xe, params["wi"].astype(dt))
+    if "wg" in params:
+        g = jnp.einsum("becd,edf->becf", xe, params["wg"].astype(dt))
+        h = act_fn(cfg.act, h, g)
+    else:
+        h = act_fn(cfg.act, h)
+    ye = jnp.einsum("becf,efd->becd", h, params["wo"].astype(dt))
+    y = jnp.einsum("becd,bsec->bsd", ye, comb.astype(dt))
+
+    # --- aux losses (Switch §2.2) ---------------------------------------
+    me = jnp.mean(onehot[:, :, 0, :], axis=(0, 1))           # router top-1 frac
+    ce = jnp.mean(probs, axis=(0, 1))
+    aux = {
+        "load_balance": e * jnp.sum(me * ce),
+        "router_z": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+        "drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return y, aux

@@ -1,0 +1,125 @@
+"""Serving: prefill + autoregressive decode with the KY token sampler.
+
+The decode step ends in the paper's pipeline: logits → max-subtract →
+IU/exact exp → fixed-point integer weights → hierarchical non-normalized
+Knuth-Yao sample (``repro.core.token_sampler``).  No softmax
+normalization over the vocabulary is computed during serving.
+``sampler="categorical"`` switches to the conventional
+``jax.random.categorical`` baseline for A/B comparison.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.token_sampler import categorical_baseline, ky_sample_tokens
+from repro.models.layers import unembed
+from repro.models.transformer import (
+    decode_step,
+    encode,
+    forward,
+    init_cache,
+    prefill_cross_cache,
+)
+
+
+class GenState(NamedTuple):
+    cache: dict
+    tokens: jax.Array      # (B, T_out) generated so far
+    last: jax.Array        # (B, 1) last token
+    pos: jax.Array         # scalar
+    key: jax.Array
+    bits: jax.Array        # scalar int64-ish total random bits (KY metric)
+
+
+def sample_logits(key, logits, *, sampler: str, temperature: float):
+    if sampler == "ky":
+        out = ky_sample_tokens(key, logits, temperature=temperature)
+        return out.token, jnp.sum(out.bits_used)
+    if sampler == "greedy":
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), jnp.int32(0)
+    return (categorical_baseline(key, logits, temperature).astype(jnp.int32),
+            jnp.int32(32) * logits.shape[0])
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, *, frontend=None,
+            src_embeds=None, q_block: int = 512):
+    """Run the prompt through the model, filling the cache via per-token
+    decode (cache-writing prefill). Returns (cache, last_logits)."""
+    if cfg.family in ("encdec", "audio") and src_embeds is not None:
+        enc_out = encode(params, cfg, src_embeds, q_block)
+        cache = prefill_cross_cache(params, cfg, enc_out, cache)
+
+    def body(carry, t):
+        cache, _ = carry
+        logits, cache = decode_step(params, cfg, tokens[:, t][:, None],
+                                    t, cache)
+        return (cache, logits), None
+
+    b = tokens.shape[0]
+    v = cfg.vocab
+    (cache, logits), _ = jax.lax.scan(
+        body, (cache, jnp.zeros((b, v), jnp.dtype(cfg.dtype))),
+        jnp.arange(tokens.shape[1]))
+    return cache, logits
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "max_new", "sampler", "temperature", "q_block"))
+def generate(
+    params,
+    cfg: ModelConfig,
+    prompt: jax.Array,            # (B, S_prompt)
+    key: jax.Array,
+    *,
+    max_new: int,
+    sampler: str = "ky",
+    temperature: float = 1.0,
+    q_block: int = 512,
+    frontend: jax.Array | None = None,
+    src_embeds: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Autoregressive generation; returns (tokens (B, max_new), total_bits)."""
+    b, s = prompt.shape
+    cache = init_cache(cfg, b, s + max_new)
+    cache, logits = prefill(params, cfg, prompt, cache,
+                            frontend=frontend, src_embeds=src_embeds,
+                            q_block=q_block)
+    key, sub = jax.random.split(key)
+    tok, bits0 = sample_logits(sub, logits.astype(jnp.float32),
+                               sampler=sampler, temperature=temperature)
+
+    def body(st: GenState, i):
+        logits, cache = decode_step(params, cfg, st.last, st.pos, st.cache)
+        key, sub = jax.random.split(st.key)
+        tok, nbits = sample_logits(sub, logits.astype(jnp.float32),
+                                   sampler=sampler, temperature=temperature)
+        toks = jax.lax.dynamic_update_slice(st.tokens, tok[:, None], (0, i))
+        return GenState(cache, toks, tok[:, None], st.pos + 1, key,
+                        st.bits + nbits), None
+
+    toks0 = jnp.zeros((b, max_new), jnp.int32)
+    toks0 = toks0.at[:, 0].set(tok)
+    st = GenState(cache, toks0, tok[:, None], jnp.int32(s), key,
+                  bits0.astype(jnp.int32))
+    st, _ = jax.lax.scan(body, st, jnp.arange(1, max_new))
+    return st.tokens, st.bits
+
+
+def serve_step_fn(params, cfg: ModelConfig, *, sampler: str = "ky",
+                  temperature: float = 1.0):
+    """One batched serving step (the dry-run `serve_step` target):
+    (key, token (B,1), pos, cache) -> (next_token, new_cache)."""
+
+    def step(key, token, pos, cache):
+        logits, cache = decode_step(params, cfg, token, pos, cache)
+        tok, _ = sample_logits(key, logits.astype(jnp.float32),
+                               sampler=sampler, temperature=temperature)
+        return tok, cache
+
+    return step

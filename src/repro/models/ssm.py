@@ -1,0 +1,193 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Train/prefill use the chunked SSD algorithm: within a chunk the quadratic
+"attention-like" form runs on the MXU; across chunks the SSM state is
+carried by an (associative-scannable) linear recurrence.  Decode is the
+O(1) recurrent update — the reason ``long_500k`` is runnable for the SSM
+and hybrid architectures while pure full-attention archs skip it.
+
+Layout: x is split into H heads of P dims (d_inner = H·P); B/C live in G
+groups of N state dims.  A is a per-head negative scalar (scalar-identity
+SSD restriction), dt a per-head softplus rate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def init_ssm(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads
+    conv_dim = di + 2 * g * n
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    p = {
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), jnp.float32)
+        * cfg.ssm_conv ** -0.5,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        # softplus(dt_bias) ~ [0.001, 0.1] (mamba2 init): softplus^-1(0.05)
+        "dt_bias": jnp.full((h,), -3.0, jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_proj": jax.random.normal(ks[2], (di, d), jnp.float32) * di ** -0.5,
+    }
+    if cfg.ssm_split_proj:
+        # per-stream projections — each tensor-parallel where divisible
+        p["z_proj"] = jax.random.normal(ks[3], (d, di), jnp.float32) * s
+        p["x_proj"] = jax.random.normal(ks[4], (d, di), jnp.float32) * s
+        p["b_proj"] = jax.random.normal(ks[5], (d, g * n), jnp.float32) * s
+        p["c_proj"] = jax.random.normal(ks[6], (d, g * n), jnp.float32) * s
+        p["dt_proj"] = jax.random.normal(ks[7], (d, h), jnp.float32) * s
+    else:
+        # fused projection: z (gate), x, B, C, dt
+        p["in_proj"] = jax.random.normal(
+            ks[0], (d, 2 * di + 2 * g * n + h), jnp.float32) * s
+    return p
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv, kernel K. state: (B, K-1, C) carry for decode."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(xbc[:, : k - 1])
+        xp = jnp.concatenate([pad, xbc], axis=1)
+    else:
+        xp = jnp.concatenate([state.astype(xbc.dtype), xbc], axis=1)
+    out = sum(xp[:, i : xp.shape[1] - (k - 1 - i)] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else None
+    return jax.nn.silu(out + b), new_state
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, *, chunk: int):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H) (post-softplus); a: (H,) negative;
+    b_mat/c_mat: (B, S, G, N).  Returns y: (B, S, H, P).
+    """
+    bs, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    nc = s // chunk
+    assert s % chunk == 0
+    rep = h // g
+
+    xc = x.reshape(bs, nc, chunk, h, p)
+    dtc = dt.reshape(bs, nc, chunk, h)
+    bc = b_mat.reshape(bs, nc, chunk, g, n)
+    cc = c_mat.reshape(bs, nc, chunk, g, n)
+
+    da = dtc * a  # (B, nc, Q, H) negative increments
+    cum = jnp.cumsum(da, axis=2)                     # running log-decay
+    seg_total = cum[:, :, -1]                        # (B, nc, H)
+
+    # ---- intra-chunk (quadratic, MXU) --------------------------------
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,H) i-j
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    # mask BEFORE exp: exp of the masked (i<j, positive) entries would
+    # overflow and poison gradients through the where.
+    decay = jnp.exp(jnp.where(causal, li, -60.0)) * causal
+    cb = jnp.einsum("bzqgn,bzsgn->bzqsg", cc, bc,
+                    preferred_element_type=jnp.float32)
+    cb = jnp.repeat(cb, rep, axis=-1)                    # groups -> heads
+    w_ij = cb * decay * dtc[:, :, None, :, :]            # (B,nc,Q,S,H)
+    y = jnp.einsum("bzqsh,bzshp->bzqhp", w_ij.astype(x.dtype), xc,
+                   preferred_element_type=jnp.float32)
+
+    # ---- chunk states + inter-chunk recurrence ------------------------
+    dec_to_end = jnp.exp(seg_total[:, :, None, :] - cum)     # (B,nc,Q,H)
+    xb = xc * (dtc * dec_to_end)[..., None]                  # weight each step
+    # expand B groups to heads: (B,nc,Q,G,N) -> (B,nc,Q,H,N)
+    bh = jnp.repeat(bc, rep, axis=3)
+    states = jnp.einsum("bzqhn,bzqhp->bzhnp", bh.astype(x.dtype), xb,
+                        preferred_element_type=jnp.float32)  # (B,nc,H,N,P)
+
+    def scan_fn(h_prev, inp):
+        st, tot = inp                                    # (B,H,N,P), (B,H)
+        h_new = h_prev * jnp.exp(tot)[..., None, None] + st
+        return h_new, h_prev
+
+    h0 = jnp.zeros((bs, h, n, p), jnp.float32)
+    _, h_prevs = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(seg_total, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                # (B,nc,H,N,P) state before chunk
+
+    # ---- contribution of carried state to each position ---------------
+    ch = jnp.repeat(cc, rep, axis=3)                     # (B,nc,Q,H,N)
+    dec_from_start = jnp.exp(cum)                        # (B,nc,Q,H)
+    y_inter = jnp.einsum("bzqhn,bzhnp->bzqhp", ch.astype(x.dtype),
+                         h_prevs.astype(x.dtype),
+                         preferred_element_type=jnp.float32)
+    y = y + y_inter * dec_from_start[..., None]
+    return y.reshape(bs, s, h, p).astype(x.dtype)
+
+
+def apply_ssm(
+    params: dict,
+    cfg: ModelConfig,
+    u: jax.Array,                  # (B, S, D)
+    *,
+    state: dict | None = None,     # decode: {"h": (B,H,N,P), "conv": (B,K-1,C)}
+) -> tuple[jax.Array, dict | None]:
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads
+    p = di // h
+    bsz, s, _ = u.shape
+    dt_ = u.dtype
+
+    if "in_proj" in params:
+        zxbcdt = u @ params["in_proj"].astype(dt_)
+        z = zxbcdt[..., :di]
+        xbc = zxbcdt[..., di : 2 * di + 2 * g * n]
+        dt_raw = zxbcdt[..., 2 * di + 2 * g * n :]
+    else:  # split projections (ssm_split_proj)
+        z = u @ params["z_proj"].astype(dt_)
+        xbc = jnp.concatenate(
+            [u @ params["x_proj"].astype(dt_),
+             u @ params["b_proj"].astype(dt_),
+             u @ params["c_proj"].astype(dt_)], axis=-1)
+        dt_raw = u @ params["dt_proj"].astype(dt_)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])                       # (H,) negative
+
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = _causal_conv(
+        xbc, params["conv_w"].astype(dt_), params["conv_b"].astype(dt_),
+        conv_state)
+    x = xbc[..., :di].reshape(bsz, s, h, p)
+    b_mat = xbc[..., di : di + g * n].reshape(bsz, s, g, n)
+    c_mat = xbc[..., di + g * n :].reshape(bsz, s, g, n)
+
+    new_state = None
+    if state is not None:  # ---- O(1) decode update ----------------------
+        assert s == 1
+        h_prev = state["h"]                              # (B,H,N,P) f32
+        dt1 = dt[:, 0]                                   # (B,H)
+        dec = jnp.exp(dt1 * a[None])                     # (B,H)
+        bh = jnp.repeat(b_mat[:, 0], h // g, axis=1)     # (B,H,N)
+        xh = x[:, 0] * dt1[..., None]                    # (B,H,P)
+        h_new = h_prev * dec[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", bh.astype(jnp.float32), xh.astype(jnp.float32))
+        ch = jnp.repeat(c_mat[:, 0], h // g, axis=1)     # (B,H,N)
+        y = jnp.einsum("bhn,bhnp->bhp", ch.astype(jnp.float32), h_new)
+        y = y[:, None].astype(dt_)                       # (B,1,H,P)
+        new_state = {"h": h_new, "conv": new_conv}
+        y = y.reshape(bsz, 1, h, p)
+    else:
+        y = ssd_chunked(x, dt, a, b_mat, c_mat, chunk=min(cfg.ssm_chunk, s))
+
+    y = y + x * params["d_skip"].astype(dt_)[None, None, :, None]
+    y = y.reshape(bsz, s, di) * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(dt_)
+    return out, new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> dict:
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.n_ssm_heads
+    p = di // h
+    conv_dim = di + 2 * g * n
+    return {
+        "h": jnp.zeros((batch, h, n, p), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), jnp.float32),
+    }

@@ -1,0 +1,371 @@
+"""Model assembly for all assigned families, scan-over-layers throughout.
+
+One compiled layer body per family (compile time independent of depth —
+essential for lowering 96-layer models against 512 placeholder devices):
+
+  dense/vlm      attn + MLP blocks (GQA, RoPE, optional QKV bias/softcap)
+  moe            attn + MoE blocks (Switch capacity dispatch)
+  ssm            Mamba-2 SSD blocks only (attention-free)
+  hybrid         parallel attn(SWA)+SSM heads, then MLP  (hymba)
+  encdec/audio   bidirectional encoder + causal decoder w/ cross-attn
+  vlm/audio      stub frontends: precomputed patch/frame embeddings are
+                 scattered into the first ``frontend_tokens`` positions
+
+Public entry points: ``init_model``, ``forward`` (train/prefill),
+``init_cache`` + ``decode_step`` (serving), ``loss_fn``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.sharding import ctx as shard_ctx
+from repro.models.layers import (
+    _norm_init,
+    apply_mlp,
+    chunked_xent,
+    embed_tokens,
+    init_embed,
+    init_mlp,
+    rmsnorm,
+    rope_freqs,
+    unembed,
+)
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key: jax.Array, cfg: ModelConfig, kind: str) -> Params:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    if kind == "ssm":
+        return {"ln1": _norm_init(d), "ssm": ssm_lib.init_ssm(ks[0], cfg)}
+    p: Params = {"ln1": _norm_init(d), "ln2": _norm_init(d)}
+    if kind == "dense":
+        p["attn"] = attn_lib.init_attention(ks[0], cfg)
+        p["mlp"] = init_mlp(ks[1], cfg)
+    elif kind == "moe":
+        p["attn"] = attn_lib.init_attention(ks[0], cfg)
+        p["moe"] = moe_lib.init_moe(ks[1], cfg)
+    elif kind == "hybrid":
+        p["attn"] = attn_lib.init_attention(ks[0], cfg)
+        p["ssm"] = ssm_lib.init_ssm(ks[1], cfg)
+        p["mlp"] = init_mlp(ks[2], cfg)
+    elif kind == "enc":
+        p["attn"] = attn_lib.init_attention(ks[0], cfg)
+        p["mlp"] = init_mlp(ks[1], cfg)
+    elif kind == "dec":
+        p["attn"] = attn_lib.init_attention(ks[0], cfg)
+        p["cross"] = attn_lib.init_attention(ks[1], cfg, cross=True)
+        p["lnx"] = _norm_init(d)
+        p["mlp"] = init_mlp(ks[2], cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _layer_kind(cfg: ModelConfig) -> str:
+    return {
+        "dense": "dense", "vlm": "dense", "moe": "moe",
+        "ssm": "ssm", "hybrid": "hybrid",
+        "encdec": "dec", "audio": "dec",
+    }[cfg.family]
+
+
+def init_model(key: jax.Array, cfg: ModelConfig) -> Params:
+    k_emb, k_layers, k_enc, k_fin = jax.random.split(key, 4)
+    kind = _layer_kind(cfg)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg, kind))(layer_keys)
+    params: Params = {
+        "embed": init_embed(k_emb, cfg),
+        "layers": layers,
+        "final_norm": _norm_init(cfg.d_model),
+    }
+    if cfg.family in ("encdec", "audio"):
+        enc_keys = jax.random.split(k_enc, cfg.enc_layers)
+        params["encoder"] = jax.vmap(lambda k: _init_layer(k, cfg, "enc"))(enc_keys)
+        params["enc_norm"] = _norm_init(cfg.d_model)
+    pd = jnp.dtype(cfg.param_dtype)
+    if pd != jnp.float32:
+        params = jax.tree.map(lambda p: p.astype(pd), params)
+    return params
+
+
+def layer_windows(cfg: ModelConfig) -> jax.Array:
+    """Per-layer attention window (0 = full) — hybrid keeps every k-th
+    layer global, first and last always global (hymba recipe)."""
+    if cfg.sliding_window <= 0:
+        return jnp.zeros((cfg.n_layers,), jnp.int32)
+    w = jnp.full((cfg.n_layers,), cfg.sliding_window, jnp.int32)
+    if cfg.global_layer_every > 0:
+        idx = jnp.arange(cfg.n_layers)
+        is_global = (idx % cfg.global_layer_every == 0) | (idx == cfg.n_layers - 1)
+        w = jnp.where(is_global, 0, w)
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill): scan over layers
+# ---------------------------------------------------------------------------
+
+def _block(cfg: ModelConfig, kind: str, x, lp, window, freqs, q_block):
+    zero = jnp.float32(0.0)
+    if kind == "ssm":
+        h, _ = ssm_lib.apply_ssm(lp["ssm"], cfg, rmsnorm(lp["ln1"], x))
+        return x + h, zero
+    if kind == "hybrid":
+        hn = rmsnorm(lp["ln1"], x)
+        a, _ = attn_lib.apply_attention(
+            lp["attn"], cfg, hn, freqs=freqs, window=window, q_block=q_block)
+        s, _ = ssm_lib.apply_ssm(lp["ssm"], cfg, hn)
+        x = x + 0.5 * (a + s)
+        return x + apply_mlp(lp["mlp"], cfg, rmsnorm(lp["ln2"], x)), zero
+    a, _ = attn_lib.apply_attention(
+        lp["attn"], cfg, rmsnorm(lp["ln1"], x),
+        freqs=freqs, window=window, causal=(kind != "enc"), q_block=q_block)
+    x = x + a
+    if kind == "moe":
+        m, aux = moe_lib.apply_moe(lp["moe"], cfg, rmsnorm(lp["ln2"], x))
+        moe_loss = 0.01 * aux["load_balance"] + 0.001 * aux["router_z"]
+        return x + m, moe_loss
+    return x + apply_mlp(lp["mlp"], cfg, rmsnorm(lp["ln2"], x)), zero
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _stack_scan(cfg, kind, layers, x, windows, freqs, q_block,
+                extra_block=None):
+    body = extra_block or (lambda x, lp, w: _block(cfg, kind, x, lp, w, freqs, q_block))
+    body = _remat(cfg, body)
+
+    def step(carry, inp):
+        x, aux = carry
+        lp, w = inp
+        out = body(x, lp, w)
+        x2, a = out if isinstance(out, tuple) else (out, jnp.float32(0.0))
+        # sequence-parallel storage of the saved residual (sharding/ctx.py)
+        x2 = shard_ctx.constrain(x2, "residual")
+        return (x2, aux + a), None
+
+    x = shard_ctx.constrain(x, "residual")
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.float32(0.0)), (layers, windows))
+    return x, aux
+
+
+def encode(params: Params, cfg: ModelConfig, src_embeds: jax.Array,
+           q_block: int = 512) -> jax.Array:
+    """Bidirectional encoder over precomputed frontend embeddings."""
+    freqs = rope_freqs(cfg)
+    windows = jnp.zeros((cfg.enc_layers,), jnp.int32)
+    x, _ = _stack_scan(cfg, "enc", params["encoder"], src_embeds, windows,
+                       freqs, q_block)
+    return rmsnorm(params["enc_norm"], x)
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,                      # (B, S)
+    *,
+    frontend: jax.Array | None = None,      # (B, F, D) vlm/audio stub
+    enc_out: jax.Array | None = None,       # encdec: encoder output
+    q_block: int = 512,
+    return_aux: bool = False,
+):
+    """Returns final hidden states (B, S, D) — unembed via loss/logits."""
+    dt = jnp.dtype(cfg.dtype)
+    x = embed_tokens(params["embed"], cfg, tokens, dt)
+    if frontend is not None and cfg.family == "vlm":
+        f = frontend.astype(dt)
+        x = jax.lax.dynamic_update_slice(x, f, (0, 0, 0))
+    kind = _layer_kind(cfg)
+    freqs = rope_freqs(cfg)
+    windows = layer_windows(cfg)
+
+    if kind == "dec":  # enc-dec family
+        assert enc_out is not None
+
+        def dec_block(x, lp, w):
+            a, _ = attn_lib.apply_attention(
+                lp["attn"], cfg, rmsnorm(lp["ln1"], x), freqs=freqs,
+                window=w, q_block=q_block)
+            x = x + a
+            c, _ = attn_lib.apply_attention(
+                lp["cross"], cfg, rmsnorm(lp["lnx"], x), freqs=None,
+                causal=False, kv_source=enc_out, q_block=q_block)
+            x = x + c
+            return x + apply_mlp(lp["mlp"], cfg, rmsnorm(lp["ln2"], x))
+
+        x, aux = _stack_scan(cfg, kind, params["layers"], x, windows, freqs,
+                             q_block, extra_block=dec_block)
+    else:
+        x, aux = _stack_scan(cfg, kind, params["layers"], x, windows, freqs,
+                             q_block)
+    x = rmsnorm(params["final_norm"], x)
+    return (x, aux) if return_aux else x
+
+
+def loss_fn(
+    params: Params,
+    cfg: ModelConfig,
+    batch: dict,
+    q_block: int = 512,
+) -> jax.Array:
+    x, aux = forward(
+        params, cfg, batch["tokens"],
+        frontend=batch.get("frontend"),
+        enc_out=(
+            encode(params, cfg, batch["src_embeds"], q_block)
+            if cfg.family in ("encdec", "audio") else None),
+        q_block=q_block,
+        return_aux=True,
+    )
+    xent = chunked_xent(x, params["embed"], cfg, batch["labels"],
+                        batch.get("mask"))
+    return xent + aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init, prefill, single-token decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    kind = _layer_kind(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    l = cfg.n_layers
+    cache: dict = {}
+    if kind in ("dense", "moe", "hybrid", "dec"):
+        kv_shape = (l, batch, max_len, cfg.n_kv, cfg.d_head)
+        if cfg.cache_dtype == "int8":
+            # quantized KV: int8 payload + per-(token, kv-head) bf16 scale
+            cache["k"] = jnp.zeros(kv_shape, jnp.int8)
+            cache["v"] = jnp.zeros(kv_shape, jnp.int8)
+            cache["k_scale"] = jnp.zeros(kv_shape[:-1], jnp.bfloat16)
+            cache["v_scale"] = jnp.zeros(kv_shape[:-1], jnp.bfloat16)
+        else:
+            cache["k"] = jnp.zeros(kv_shape, dt)
+            cache["v"] = jnp.zeros(kv_shape, dt)
+    if kind in ("ssm", "hybrid"):
+        di, g, n, h = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state,
+                       cfg.n_ssm_heads)
+        p = di // h
+        conv_dim = di + 2 * g * n
+        cache["ssm_h"] = jnp.zeros((l, batch, h, n, p), jnp.float32)
+        cache["ssm_conv"] = jnp.zeros((l, batch, cfg.ssm_conv - 1, conv_dim),
+                                      jnp.float32)
+    if kind == "dec":
+        kv_shape = (l, batch, cfg.enc_seq_len, cfg.n_kv, cfg.d_head)
+        cache["xk"] = jnp.zeros(kv_shape, dt)
+        cache["xv"] = jnp.zeros(kv_shape, dt)
+    return cache
+
+
+def prefill_cross_cache(params: Params, cfg: ModelConfig,
+                        enc_out: jax.Array, cache: dict) -> dict:
+    """Precompute per-decoder-layer cross-attention KV from encoder out."""
+    def one(lp):
+        dt = enc_out.dtype
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wv"].astype(dt))
+        return k, v
+
+    xk, xv = jax.vmap(one)(params["layers"])
+    return dict(cache, xk=xk, xv=xv)
+
+
+def decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    token: jax.Array,        # (B, 1) int32 freshly sampled token
+    pos: jax.Array,          # scalar int32 write position
+    cache: dict,
+) -> tuple[jax.Array, dict]:
+    """One decoding step; returns (logits (B, V), new cache)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = embed_tokens(params["embed"], cfg, token, dt)   # (B, 1, D)
+    kind = _layer_kind(cfg)
+    freqs = rope_freqs(cfg)
+    windows = layer_windows(cfg)
+
+    def step(x, inp):
+        lp, w, cache_l = inp
+        new_l = dict(cache_l)
+        if kind == "ssm":
+            h, st = ssm_lib.apply_ssm(
+                lp["ssm"], cfg, rmsnorm(lp["ln1"], x),
+                state={"h": cache_l["ssm_h"], "conv": cache_l["ssm_conv"]})
+            x = x + h
+            new_l["ssm_h"], new_l["ssm_conv"] = st["h"], st["conv"]
+            return x, new_l
+        kv_cache = {kk: cache_l[kk]
+                    for kk in ("k", "v", "k_scale", "v_scale")
+                    if kk in cache_l}
+        if kind == "hybrid":
+            hn = rmsnorm(lp["ln1"], x)
+            a, kvc = attn_lib.apply_attention(
+                lp["attn"], cfg, hn, freqs=freqs, window=w,
+                cache=kv_cache, pos=pos)
+            s, st = ssm_lib.apply_ssm(
+                lp["ssm"], cfg, hn,
+                state={"h": cache_l["ssm_h"], "conv": cache_l["ssm_conv"]})
+            x = x + 0.5 * (a + s)
+            x = x + apply_mlp(lp["mlp"], cfg, rmsnorm(lp["ln2"], x))
+            new_l.update(kvc, ssm_h=st["h"], ssm_conv=st["conv"])
+            return x, new_l
+        a, kvc = attn_lib.apply_attention(
+            lp["attn"], cfg, rmsnorm(lp["ln1"], x), freqs=freqs, window=w,
+            cache=kv_cache, pos=pos)
+        x = x + a
+        new_l.update(kvc)
+        if kind == "dec":
+            c, _ = attn_lib.apply_attention(
+                lp["cross"], cfg, rmsnorm(lp["lnx"], x), freqs=None,
+                causal=False,
+                cache={"k": cache_l["xk"], "v": cache_l["xv"]})
+            x = x + c
+        if kind == "moe":
+            m, _ = moe_lib.apply_moe(lp["moe"], cfg, rmsnorm(lp["ln2"], x))
+            x = x + m
+        else:
+            x = x + apply_mlp(lp["mlp"], cfg, rmsnorm(lp["ln2"], x))
+        return x, new_l
+
+    def scan_step(carry, inp):
+        x, cache_all = carry
+        lp, w, li = inp
+        # slice layer li's cache, update, write back in place — the cache
+        # stays a scan CARRY so XLA aliases it instead of double-buffering
+        # a second (L, B, T, ...) copy (xs/ys pairs cannot alias).
+        cache_l = jax.tree.map(lambda c: c[li], cache_all)
+        x, new_l = step(x, (lp, w, cache_l))
+        cache_all = jax.tree.map(
+            lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                c, n.astype(c.dtype), li, 0),
+            cache_all, new_l)
+        return (x, cache_all), None
+
+    (x, new_cache), _ = jax.lax.scan(
+        scan_step, (x, cache),
+        (params["layers"], windows, jnp.arange(cfg.n_layers)))
+    x = rmsnorm(params["final_norm"], x)
+    logits = unembed(params["embed"], cfg, x)[:, 0, :]
+    return logits, new_cache

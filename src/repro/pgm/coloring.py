@@ -1,0 +1,57 @@
+"""Graph coloring stage of the AIA compiler chain (paper §III).
+
+Splits model variables into conditionally-independent sets ("colors")
+that can be updated in parallel.  MRF lattices get the closed-form
+2-color checkerboard (block Gibbs); irregular models (Bayesian networks)
+are colored with the DSatur heuristic on the moralized graph — the exact
+combination the paper uses (aGrUM moralization + NetworkX DSatur [13]).
+"""
+from __future__ import annotations
+
+import networkx as nx
+import numpy as np
+
+from repro.pgm.graph import BayesNet
+
+
+def checkerboard(h: int, w: int) -> np.ndarray:
+    """(H, W) int array of 2 colors — the MRF block-Gibbs pattern."""
+    return ((np.arange(h)[:, None] + np.arange(w)[None, :]) % 2).astype(np.int32)
+
+
+def dsatur(graph: nx.Graph) -> dict[int, int]:
+    """DSatur coloring; returns node -> color (0-based)."""
+    return nx.coloring.greedy_color(graph, strategy="saturation_largest_first")
+
+
+def color_bayesnet(bn: BayesNet) -> list[np.ndarray]:
+    """Color the moral graph; returns per-color arrays of node ids.
+
+    Invariant (checked): no two nodes in one color share an edge in the
+    moral graph, i.e. they are conditionally independent given the rest —
+    safe to Gibbs-update in parallel.
+    """
+    g = bn.moralized()
+    coloring = dsatur(g)
+    n_colors = max(coloring.values()) + 1
+    groups = [
+        np.array(sorted(v for v, c in coloring.items() if c == col), np.int32)
+        for col in range(n_colors)
+    ]
+    for grp in groups:  # validate the independence invariant
+        s = set(grp.tolist())
+        for v in grp:
+            if s & set(g.neighbors(int(v))):
+                raise AssertionError("coloring violates independence")
+    return groups
+
+
+def verify_coloring(graph: nx.Graph, groups: list[np.ndarray]) -> bool:
+    seen: set[int] = set()
+    for grp in groups:
+        s = set(int(x) for x in grp)
+        for v in s:
+            if set(graph.neighbors(v)) & s:
+                return False
+        seen |= s
+    return seen == set(graph.nodes)

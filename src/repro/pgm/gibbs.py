@@ -1,0 +1,140 @@
+"""Vectorized MCMC kernels: checkerboard Gibbs for MRF grids.
+
+Distribution generation follows the AIA pipeline end-to-end: per-site
+energies (fixed function units) → max-subtracted ``exp`` through the IU
+LUT (C2) → fixed-point integer weights → non-normalized Knuth-Yao sample
+(C1).  No per-site normalization sum is ever computed.
+
+The lattice analogue of a "core" here is a VPU lane: all sites of one
+checkerboard color across all chains are updated in one vector op.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fixedpoint import DEFAULT_K
+from repro.core.interp import InterpTable, exp_table
+from repro.core.ky import ky_sample
+from repro.pgm.graph import MRFGrid
+
+
+class SweepStats(NamedTuple):
+    bits_used: jax.Array   # scalar int32: random bits consumed this sweep
+    attempts: jax.Array    # scalar int32
+
+
+def neighbor_pair_energy(labels: jax.Array, pairwise: jax.Array) -> jax.Array:
+    """(B, H, W, L) energy of each candidate label vs the 4 neighbors.
+
+    Edge sites see only their in-grid neighbors (free boundary).
+    """
+    pw = pairwise  # (L, L); pw[l, m] = energy of candidate l next to m
+    e = jnp.zeros(labels.shape + (pairwise.shape[0],), jnp.float32)
+    h, w = labels.shape[-2:]
+
+    def nbr(shift, axis):
+        rolled = jnp.roll(labels, shift, axis=axis)
+        contrib = jnp.take(pw.T, rolled, axis=0)  # (B, H, W, L): pw[l, rolled]
+        # mask out the wrapped edge
+        idx = jnp.arange(labels.shape[axis])
+        if shift == 1:
+            valid = idx > 0
+        else:
+            valid = idx < labels.shape[axis] - 1
+        shape = [1] * labels.ndim
+        shape[axis] = labels.shape[axis]
+        return contrib * valid.reshape(shape)[..., None]
+
+    e = e + nbr(1, -2) + nbr(-1, -2) + nbr(1, -1) + nbr(-1, -1)
+    return e
+
+
+def site_weights(
+    labels: jax.Array,
+    unary: jax.Array,
+    pairwise: jax.Array,
+    *,
+    k: int = DEFAULT_K,
+    table: InterpTable | None = None,
+    use_iu: bool = True,
+) -> jax.Array:
+    """(B, H, W, L) int32 non-normalized KY weights for every site."""
+    energies = unary[None] + neighbor_pair_energy(labels, pairwise)
+    z = energies - jnp.min(energies, axis=-1, keepdims=True)  # best label → 0
+    if use_iu:
+        table = table or _EXP
+        y = table(-z)  # exp(-z) via the IU LUT (z >= 0, clamped at 16)
+    else:
+        y = jnp.exp(-z)
+    return jnp.floor(y * (2.0 ** k - 1.0)).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("k", "use_iu"))
+def checkerboard_halfstep(
+    key: jax.Array,
+    labels: jax.Array,          # (B, H, W) int32
+    unary: jax.Array,           # (H, W, L)
+    pairwise: jax.Array,        # (L, L)
+    parity: jax.Array,          # scalar int32 0/1
+    *,
+    k: int = DEFAULT_K,
+    use_iu: bool = True,
+) -> tuple[jax.Array, SweepStats]:
+    """Resample all sites of one checkerboard color, all chains at once."""
+    b, h, w = labels.shape
+    l = unary.shape[-1]
+    wts = site_weights(labels, unary, pairwise, k=k, use_iu=use_iu)
+    res = ky_sample(key, wts.reshape((-1, l)))
+    new = res.sample.reshape((b, h, w))
+    mask = ((jnp.arange(h)[:, None] + jnp.arange(w)[None, :]) % 2) == parity
+    labels = jnp.where(mask[None], new, labels)
+    active = jnp.sum(mask)
+    stats = SweepStats(
+        bits_used=jnp.sum(jnp.where(mask[None], res.bits_used.reshape(labels.shape), 0)),
+        attempts=jnp.sum(jnp.where(mask[None], res.attempts.reshape(labels.shape), 0)),
+    )
+    del active
+    return labels, stats
+
+
+@partial(jax.jit, static_argnames=("n_sweeps", "k", "use_iu"))
+def mrf_gibbs(
+    key: jax.Array,
+    labels0: jax.Array,
+    unary: jax.Array,
+    pairwise: jax.Array,
+    *,
+    n_sweeps: int,
+    k: int = DEFAULT_K,
+    use_iu: bool = True,
+) -> tuple[jax.Array, SweepStats]:
+    """n_sweeps full checkerboard sweeps (2 half-steps each)."""
+
+    def sweep(carry, i):
+        labels, key = carry
+        key, k0, k1 = jax.random.split(key, 3)
+        labels, s0 = checkerboard_halfstep(
+            k0, labels, unary, pairwise, jnp.int32(0), k=k, use_iu=use_iu)
+        labels, s1 = checkerboard_halfstep(
+            k1, labels, unary, pairwise, jnp.int32(1), k=k, use_iu=use_iu)
+        return (labels, key), SweepStats(
+            bits_used=s0.bits_used + s1.bits_used,
+            attempts=s0.attempts + s1.attempts,
+        )
+
+    (labels, _), stats = jax.lax.scan(
+        sweep, (labels0, key), jnp.arange(n_sweeps))
+    return labels, SweepStats(
+        bits_used=jnp.sum(stats.bits_used), attempts=jnp.sum(stats.attempts))
+
+
+def init_labels(key: jax.Array, mrf: MRFGrid, n_chains: int) -> jax.Array:
+    h, w = mrf.shape
+    return jax.random.randint(key, (n_chains, h, w), 0, mrf.n_labels, jnp.int32)
+
+
+_EXP = exp_table()

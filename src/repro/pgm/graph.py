@@ -1,0 +1,175 @@
+"""Probabilistic graphical model IR: MRF grids and Bayesian networks.
+
+The AIA compiler front-end (paper §III) consumes PPL-described models
+(aGrUM); here the IR is constructed directly in Python.  Two families —
+the two the paper benchmarks:
+
+* :class:`MRFGrid` — pairwise MRF on an H×W lattice (image segmentation,
+  stereo matching), energies ``E(x) = Σ unary_s(x_s) + Σ_st V(x_s,x_t)``.
+* :class:`BayesNet` — discrete BN with CPTs; Gibbs conditionals read the
+  Markov blanket ``P(v|MB) ∝ P(v|pa(v)) Π_c P(c|pa(c))``.
+
+Classic bnlearn-repository networks (asia, sprinkler, child-like, random
+DAGs) are in :mod:`repro.pgm.networks`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import networkx as nx
+import numpy as np
+
+
+@dataclass
+class MRFGrid:
+    """Pairwise MRF on an H×W lattice with L labels.
+
+    ``unary``: (H, W, L) float32 energies (lower = more likely).
+    ``pairwise``: (L, L) float32 compatibility energies; Potts is
+    ``beta * (1 - I)``, truncated-linear (stereo) is
+    ``min(|i-j|, tau) * beta``.
+    """
+
+    unary: np.ndarray
+    pairwise: np.ndarray
+
+    def __post_init__(self):
+        self.unary = np.asarray(self.unary, np.float32)
+        self.pairwise = np.asarray(self.pairwise, np.float32)
+        if self.unary.ndim != 3:
+            raise ValueError("unary must be (H, W, L)")
+        l = self.unary.shape[-1]
+        if self.pairwise.shape != (l, l):
+            raise ValueError("pairwise must be (L, L)")
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return self.unary.shape[:2]
+
+    @property
+    def n_labels(self) -> int:
+        return self.unary.shape[-1]
+
+    @staticmethod
+    def potts(unary: np.ndarray, beta: float) -> "MRFGrid":
+        l = unary.shape[-1]
+        return MRFGrid(unary, beta * (1.0 - np.eye(l, dtype=np.float32)))
+
+    @staticmethod
+    def truncated_linear(unary: np.ndarray, beta: float, tau: int) -> "MRFGrid":
+        l = unary.shape[-1]
+        d = np.abs(np.arange(l)[:, None] - np.arange(l)[None, :])
+        return MRFGrid(unary, (beta * np.minimum(d, tau)).astype(np.float32))
+
+    def energy(self, labels: np.ndarray) -> float:
+        """Total energy of a labeling (H, W) — the Gibbs invariant probe."""
+        h, w = self.shape
+        lab = np.asarray(labels)
+        e = float(np.take_along_axis(self.unary, lab[..., None], axis=-1).sum())
+        e += float(self.pairwise[lab[:, :-1], lab[:, 1:]].sum())
+        e += float(self.pairwise[lab[:-1, :], lab[1:, :]].sum())
+        return e
+
+
+@dataclass
+class BayesNet:
+    """Discrete Bayesian network.
+
+    ``card[v]``: cardinality of node v (nodes are 0..n-1, topologically
+    sortable).  ``parents[v]``: tuple of parent ids.  ``cpt[v]``: ndarray
+    of shape ``(*[card[p] for p in parents[v]], card[v])``, rows summing
+    to 1.
+    """
+
+    card: list[int]
+    parents: list[tuple[int, ...]]
+    cpt: list[np.ndarray]
+    names: list[str] = field(default_factory=list)
+
+    def __post_init__(self):
+        n = len(self.card)
+        if not self.names:
+            self.names = [f"x{i}" for i in range(n)]
+        for v in range(n):
+            want = tuple(self.card[p] for p in self.parents[v]) + (self.card[v],)
+            got = tuple(self.cpt[v].shape)
+            if want != got:
+                raise ValueError(f"CPT shape mismatch at node {v}: {got} != {want}")
+            s = self.cpt[v].sum(axis=-1)
+            if not np.allclose(s, 1.0, atol=1e-5):
+                raise ValueError(f"CPT rows of node {v} do not sum to 1")
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.card)
+
+    def children(self, v: int) -> list[int]:
+        return [c for c in range(self.n_nodes) if v in self.parents[c]]
+
+    def markov_blanket(self, v: int) -> set[int]:
+        mb = set(self.parents[v])
+        for c in self.children(v):
+            mb.add(c)
+            mb |= set(self.parents[c])
+        mb.discard(v)
+        return mb
+
+    def dag(self) -> nx.DiGraph:
+        g = nx.DiGraph()
+        g.add_nodes_from(range(self.n_nodes))
+        for v in range(self.n_nodes):
+            for p in self.parents[v]:
+                g.add_edge(p, v)
+        return g
+
+    def moralized(self) -> nx.Graph:
+        """Moral graph — the interaction graph Gibbs coloring runs on.
+
+        (aGrUM's DAG→factor-graph step followed by variable-interaction
+        extraction reduces to moralization for Gibbs scheduling.)
+        """
+        g = nx.Graph()
+        g.add_nodes_from(range(self.n_nodes))
+        for v in range(self.n_nodes):
+            ps = self.parents[v]
+            for p in ps:
+                g.add_edge(p, v)
+            for i in range(len(ps)):          # marry the parents
+                for j in range(i + 1, len(ps)):
+                    g.add_edge(ps[i], ps[j])
+        return g
+
+    def topo_order(self) -> list[int]:
+        return list(nx.topological_sort(self.dag()))
+
+    def logp(self, assignment: np.ndarray) -> float:
+        """Joint log-probability of full assignment(s) (..., n_nodes)."""
+        a = np.asarray(assignment)
+        out = np.zeros(a.shape[:-1], np.float64)
+        for v in range(self.n_nodes):
+            idx = tuple(a[..., p] for p in self.parents[v]) + (a[..., v],)
+            out += np.log(np.clip(self.cpt[v][idx], 1e-30, None))
+        return out
+
+    def sample_forward(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        """Ancestral samples (n, n_nodes) — ground truth for tests."""
+        out = np.zeros((n, self.n_nodes), np.int64)
+        for v in self.topo_order():
+            rows = self.cpt[v][tuple(out[:, p] for p in self.parents[v])]
+            u = rng.random((n, 1))
+            out[:, v] = (rows.cumsum(axis=-1) < u).sum(axis=-1)
+        return out
+
+    def marginals_exact(self) -> list[np.ndarray]:
+        """Brute-force marginals (only for small nets — test oracle)."""
+        total = int(np.prod(self.card))
+        if total > 2_000_000:
+            raise ValueError("net too large for brute force")
+        grids = np.indices(tuple(self.card)).reshape(self.n_nodes, -1).T
+        lp = self.logp(grids)
+        p = np.exp(lp - lp.max())
+        p /= p.sum()
+        return [
+            np.bincount(grids[:, v], weights=p, minlength=self.card[v])
+            for v in range(self.n_nodes)
+        ]

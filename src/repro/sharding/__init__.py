@@ -1,0 +1,15 @@
+from repro.sharding.specs import (
+    batch_spec_axis,
+    batch_specs,
+    cache_specs,
+    dp_axes,
+    dp_size,
+    named,
+    param_specs,
+    zero_extend,
+)
+
+__all__ = [
+    "batch_spec_axis", "batch_specs", "cache_specs", "dp_axes", "dp_size",
+    "named", "param_specs", "zero_extend",
+]

@@ -1,0 +1,44 @@
+"""Activation-sharding context: constraint injection without polluting
+model signatures.
+
+Builders set a spec map before tracing; the model calls
+``constrain(x, "residual")`` at the layer-scan carry.  When no context is
+active (single-device smoke tests) it is the identity.
+
+The "residual" constraint implements Megatron-style sequence parallelism
+for *storage*: the per-layer saved carries of the backward pass are
+sharded over ("model" × seq), cutting saved-activation HBM by the TP
+width; XLA inserts the all-gather before attention/MLP and the
+reduce-scatter after, overlappable with compute on TPU.
+"""
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+
+import jax
+
+_SPECS: ContextVar[dict | None] = ContextVar("act_specs", default=None)
+
+
+@contextlib.contextmanager
+def activation_specs(specs: dict):
+    tok = _SPECS.set(specs)
+    try:
+        yield
+    finally:
+        _SPECS.reset(tok)
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    specs = _SPECS.get()
+    if specs is None or name not in specs or specs[name] is None:
+        return x
+    spec = specs[name]
+    ndim = getattr(getattr(spec, "spec", spec), "__len__", lambda: 0)()
+    if ndim > x.ndim:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, TypeError):
+        return x

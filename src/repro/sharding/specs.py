@@ -1,0 +1,214 @@
+"""Sharding rule engine: param/activation/cache PartitionSpecs with
+divisibility-aware fallbacks.
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod.  Policy (DESIGN.md §6):
+
+* tensor-parallel ("model") on a semantic axis when it divides the mesh
+  axis — attention heads, kv heads, ffn, experts, vocab;
+* otherwise FSDP over "data": the weight is stored sharded on its largest
+  data-divisible dim and all-gathered at use (XLA SPMD does this from the
+  sharding alone).  This covers head counts like qwen's 40 or hymba's 25
+  that don't divide a 16-wide model axis *without* padding the model;
+* DP batch over ("pod","data") — cross-pod traffic is only the gradient
+  all-reduce;
+* KV caches: kv-heads on "model" when divisible, else the *sequence* dim
+  (memory-balanced decode; XLA partitions the softmax reductions), else
+  replicated.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _axis(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh: Mesh) -> int:
+    s = 1
+    for a in dp_axes(mesh):
+        s *= mesh.shape[a]
+    return s
+
+
+def batch_spec_axis(mesh: Mesh, batch: int):
+    """Largest dp prefix that divides the batch (pods first)."""
+    axes = dp_axes(mesh)
+    full = dp_size(mesh)
+    if batch % full == 0:
+        return axes if len(axes) > 1 else axes[0]
+    if "data" in axes and batch % mesh.shape["data"] == 0:
+        return "data"
+    return None
+
+
+def _fsdp_dim(shape, mesh: Mesh, skip: set[int]) -> int | None:
+    d = _axis(mesh, "data")
+    if d == 1:
+        return None
+    best = None
+    for i, s in enumerate(shape):
+        if i in skip or s % d != 0:
+            continue
+        if best is None or s > shape[best]:
+            best = i
+    return best
+
+
+# Leaves at or above this many elements additionally shard over "data"
+# (FSDP×TP hybrid) — per-layer all-gather cost is negligible vs their
+# memory footprint; smaller leaves stay TP-only/replicated.
+FSDP_THRESHOLD = 1 << 22
+
+
+def _spec(shape, mesh: Mesh, tp_dim_candidates, *, layer_stacked: bool) -> P:
+    """TP on the first candidate dim that divides "model"; large leaves
+    are additionally FSDP-sharded over "data" on a free dim."""
+    tp = _axis(mesh, "model")
+    out = [None] * len(shape)
+    skip = {0} if layer_stacked else set()
+    placed_tp = False
+    for dim in tp_dim_candidates:
+        if dim < len(shape) and dim not in skip and shape[dim] % tp == 0 and tp > 1:
+            out[dim] = "model"
+            placed_tp = True
+            break
+    big = int(np.prod(shape)) >= FSDP_THRESHOLD
+    if placed_tp and big:
+        d = _axis(mesh, "data")
+        for i, s in enumerate(shape):
+            if i in skip or out[i] is not None:
+                continue
+            if d > 1 and s % d == 0 and s >= d:
+                out[i] = "data"
+                break
+    if not placed_tp:
+        f = _fsdp_dim(shape, mesh, skip)
+        if f is not None:
+            out[f] = "data"
+    return P(*out)
+
+
+def param_specs(cfg: ModelConfig, params: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching a param pytree from ``init_model``."""
+
+    def rule(path, leaf) -> P:
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = keys[-1]
+        stacked = "layers" in keys or "encoder" in keys
+        off = 1 if stacked else 0
+        shp = leaf.shape
+
+        if name in ("scale",):                       # norms
+            return P()
+        if name == "tok":                            # (V, D)
+            return _spec(shp, mesh, (0, 1), layer_stacked=False)
+        if name == "head":                           # (D, V)
+            return _spec(shp, mesh, (1,), layer_stacked=False)
+        if name == "wq":                             # (L, D, H, dh)
+            return _spec(shp, mesh, (off + 1,), layer_stacked=stacked)
+        if name in ("wk", "wv"):                     # (L, D, KV, dh)
+            return _spec(shp, mesh, (off + 1,), layer_stacked=stacked)
+        if name == "wo" and len(shp) == off + 3:     # attn out (L, H, dh, D)
+            return _spec(shp, mesh, (off + 0,), layer_stacked=stacked)
+        if name in ("bq", "bk", "bv"):               # (L, H, dh)
+            return _spec(shp, mesh, (off + 0,), layer_stacked=stacked)
+        if name in ("wi", "wg") and len(shp) == off + 2:   # mlp (L, D, F)
+            return _spec(shp, mesh, (off + 1,), layer_stacked=stacked)
+        if name == "wo" and len(shp) == off + 2:     # mlp out (L, F, D)
+            return _spec(shp, mesh, (off + 0,), layer_stacked=stacked)
+        if name in ("wi", "wg") and len(shp) == off + 3:   # moe (L, E, D, F)
+            return _spec(shp, mesh, (off + 0, off + 2), layer_stacked=stacked)
+        if name == "wo" and len(shp) == off + 3 and "moe" in keys:
+            return _spec(shp, mesh, (off + 0, off + 1), layer_stacked=stacked)
+        if name == "router":
+            return P()
+        if name == "in_proj":                        # ssm (L, D, Z)
+            return _spec(shp, mesh, (off + 1,), layer_stacked=stacked)
+        if name in ("z_proj", "x_proj", "b_proj", "c_proj", "dt_proj"):
+            return _spec(shp, mesh, (off + 1,), layer_stacked=stacked)
+        if name == "out_proj":                       # ssm (L, di, D)
+            return _spec(shp, mesh, (off + 0,), layer_stacked=stacked)
+        if name in ("conv_w", "conv_b", "a_log", "dt_bias", "d_skip"):
+            return P()
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch: dict) -> dict:
+    out = {}
+    for k, v in batch.items():
+        bdim = batch_spec_axis(mesh, v.shape[0])
+        out[k] = P(bdim, *([None] * (v.ndim - 1)))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, cache: dict, batch: int) -> dict:
+    tp = _axis(mesh, "model")
+    bdim = batch_spec_axis(mesh, batch)
+    out = {}
+    for name, v in cache.items():
+        if name in ("k", "v", "xk", "xv"):           # (L, B, T, KV, dh)
+            _, _, t, kv, _ = v.shape
+            if tp > 1 and kv % tp == 0:
+                out[name] = P(None, bdim, None, "model", None)
+            elif tp > 1 and t % tp == 0:
+                out[name] = P(None, bdim, "model", None, None)
+            else:
+                out[name] = P(None, bdim, None, None, None)
+        elif name in ("k_scale", "v_scale"):          # (L, B, T, KV)
+            _, _, t, kv = v.shape
+            if tp > 1 and kv % tp == 0:
+                out[name] = P(None, bdim, None, "model")
+            elif tp > 1 and t % tp == 0:
+                out[name] = P(None, bdim, "model", None)
+            else:
+                out[name] = P(None, bdim, None, None)
+        elif name == "ssm_h":                         # (L, B, H, N, P)
+            h = v.shape[2]
+            if tp > 1 and h % tp == 0:
+                out[name] = P(None, bdim, "model", None, None)
+            else:
+                out[name] = P(None, bdim, None, None, None)
+        elif name == "ssm_conv":                      # (L, B, K-1, C)
+            c = v.shape[-1]
+            if tp > 1 and c % tp == 0:
+                out[name] = P(None, bdim, None, "model")
+            else:
+                out[name] = P(None, bdim, None, None)
+        else:
+            out[name] = P(*([None] * v.ndim))
+    return out
+
+
+def zero_extend(spec: P, shape, mesh: Mesh) -> P:
+    """ZeRO: additionally shard optimizer state over "data" on a free dim."""
+    d = _axis(mesh, "data")
+    if d == 1 or "data" in spec:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, s in enumerate(shape):
+        if parts[i] is None and s % d == 0 and s >= d:
+            parts[i] = "data"
+            return P(*parts)
+    return spec
+
+
+def named(mesh: Mesh, tree_specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

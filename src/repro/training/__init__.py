@@ -1,0 +1,13 @@
+from repro.training.checkpoint import AsyncCheckpointer, latest_step, restore, save
+from repro.training.data import DataConfig, TokenDataset, make_batch
+from repro.training.elastic import Heartbeat, StepGuard, StragglerDetector, elastic_mesh
+from repro.training.optimizer import AdamW, Adafactor, cosine_lr, global_norm, make_optimizer
+from repro.training.train_step import TrainState, init_train_state, make_train_step
+
+__all__ = [
+    "AsyncCheckpointer", "latest_step", "restore", "save",
+    "DataConfig", "TokenDataset", "make_batch",
+    "Heartbeat", "StepGuard", "StragglerDetector", "elastic_mesh",
+    "AdamW", "Adafactor", "cosine_lr", "global_norm", "make_optimizer",
+    "TrainState", "init_train_state", "make_train_step",
+]

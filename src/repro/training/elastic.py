@@ -1,0 +1,101 @@
+"""Fault-tolerance runtime: retries, straggler detection, elastic restart.
+
+* :class:`StepGuard` — wraps the train step with bounded retry +
+  checkpoint-reload recovery (transient device errors / preemption
+  signals re-enter from the last committed step).
+* :class:`StragglerDetector` — per-step wall-time ring buffer with
+  median-absolute-deviation outlier flagging; at scale the flag feeds the
+  scheduler's drain/requeue hook (here: a callback).
+* :func:`elastic_mesh` — rebuilds the largest usable ``(data, model)``
+  mesh from the devices that are still healthy, in concert with
+  checkpoint restore-with-reshard (restarts may lose a pod).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+class StragglerDetector:
+    def __init__(self, window: int = 64, threshold: float = 4.0,
+                 on_straggler: Callable[[int, float], None] | None = None):
+        self.times: deque[float] = deque(maxlen=window)
+        self.threshold = threshold
+        self.on_straggler = on_straggler
+        self.flagged: list[tuple[int, float]] = []
+
+    def record(self, step: int, dt: float) -> bool:
+        """Returns True if this step is an outlier vs the recent window."""
+        is_out = False
+        if len(self.times) >= 8:
+            med = float(np.median(self.times))
+            mad = float(np.median(np.abs(np.asarray(self.times) - med))) + 1e-9
+            if dt > med + self.threshold * 1.4826 * mad and dt > 1.5 * med:
+                is_out = True
+                self.flagged.append((step, dt))
+                if self.on_straggler:
+                    self.on_straggler(step, dt)
+        self.times.append(dt)
+        return is_out
+
+
+class StepGuard:
+    """Run a step with bounded retries; reload from checkpoint on failure."""
+
+    def __init__(self, max_retries: int = 2,
+                 reload_fn: Callable[[], object] | None = None):
+        self.max_retries = max_retries
+        self.reload_fn = reload_fn
+        self.retries = 0
+        self.reloads = 0
+
+    def run(self, step_fn, state, batch):
+        for attempt in range(self.max_retries + 1):
+            try:
+                out = step_fn(state, batch)
+                # block so device-side faults surface here, not later
+                jax.block_until_ready(out[1]["loss"])
+                return out
+            except jax.errors.JaxRuntimeError:
+                self.retries += 1
+                if attempt == self.max_retries:
+                    if self.reload_fn is None:
+                        raise
+                    state = self.reload_fn()
+                    self.reloads += 1
+                    out = step_fn(state, batch)
+                    jax.block_until_ready(out[1]["loss"])
+                    return out
+        raise AssertionError("unreachable")
+
+
+def elastic_mesh(model_parallel: int, devices=None):
+    """Largest (data, model) mesh buildable from the healthy device set."""
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    mp = model_parallel
+    while mp > 1 and (n % mp != 0):
+        mp //= 2
+    data = n // mp
+    arr = np.array(devices[: data * mp]).reshape(data, mp)
+    from jax.sharding import Mesh
+    return Mesh(arr, ("data", "model"))
+
+
+class Heartbeat:
+    """Wall-clock liveness probe; at scale this is the per-host agent that
+    the coordinator polls. ``healthy()`` is cheap enough to call per step."""
+
+    def __init__(self, timeout_s: float = 300.0):
+        self.timeout = timeout_s
+        self.last = time.monotonic()
+
+    def beat(self):
+        self.last = time.monotonic()
+
+    def healthy(self) -> bool:
+        return (time.monotonic() - self.last) < self.timeout

@@ -1,0 +1,29 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see
+# 1 device (task spec). Multi-device tests run via run_subprocess below.
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_subprocess(code: str, devices: int = 0, timeout: int = 900):
+    """Run a python snippet in a clean interpreter (optionally with fake
+    host devices) and return (returncode, output)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    if devices:
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={devices}")
+    p = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True,
+        text=True, timeout=timeout)
+    return p.returncode, p.stdout + p.stderr
+
+
+@pytest.fixture(scope="session")
+def rng_seed():
+    return 0

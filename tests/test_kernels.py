@@ -1,0 +1,135 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, bit-exactness
+for the sampler, allclose for the interpolation unit (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import exp_table, log_table, quantize_probs, sigmoid_table
+from repro.core import rng as rng_lib
+from repro.kernels import ref as ref_lib
+from repro.kernels.interp_lut import interp_pallas
+from repro.kernels.ky_sampler import ky_sampler_pallas
+from repro.kernels.ops import interp_kernel, ky_sample_kernel
+
+
+class TestKYKernel:
+    @pytest.mark.parametrize("b,n", [(256, 4), (256, 16), (512, 64),
+                                     (256, 128), (512, 5)])
+    def test_bit_exact_vs_ref(self, b, n):
+        key = jax.random.PRNGKey(b * 1000 + n)
+        p = jax.random.dirichlet(key, jnp.ones(n), (b,))
+        w = quantize_probs(p, 12)
+        npad = -n % 128
+        wp = jnp.pad(w, ((0, 0), (0, npad)))
+        words = rng_lib.random_bit_words(jax.random.PRNGKey(1), (b,), 31 * 32)
+        klvl, rej = ref_lib.ky_prep(wp)
+        out_k, bits_k, ok_k = ky_sampler_pallas(
+            wp, words, klvl, rej, block_b=256, budget=31 * 32)
+        out_r, bits_r, ok_r = ref_lib.ky_ref(wp, words, budget=31 * 32)
+        np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+        np.testing.assert_array_equal(np.asarray(bits_k), np.asarray(bits_r))
+        assert bool(ok_k.all())
+
+    def test_wrapper_handles_ragged_shapes(self):
+        # batch/outcome sizes that need padding inside ops.py
+        w = quantize_probs(
+            jax.random.dirichlet(jax.random.PRNGKey(0), jnp.ones(7), (133,)),
+            10)
+        res = ky_sample_kernel(jax.random.PRNGKey(1), w)
+        assert res.sample.shape == (133,)
+        assert bool(res.ok.all())
+        assert (np.asarray(res.sample) < 7).all()
+
+    def test_distribution_matches_core(self):
+        w = quantize_probs(jnp.asarray([0.6, 0.3, 0.1]), 10)
+        b = 50_000
+        res = ky_sample_kernel(jax.random.PRNGKey(2), jnp.tile(w, (b, 1)))
+        f = np.bincount(np.asarray(res.sample), minlength=3) / b
+        assert np.abs(f - [0.6, 0.3, 0.1]).max() < 0.02
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("bh,s,dh,causal,blk", [
+        (4, 128, 64, True, 64), (2, 256, 128, True, 128),
+        (2, 256, 64, False, 64), (8, 64, 32, True, 32),
+        (1, 512, 64, True, 128),
+    ])
+    def test_vs_dense_oracle(self, bh, s, dh, causal, blk):
+        from repro.kernels.flash_attention import flash_attention
+        from repro.kernels.ref import mha_ref
+        ks = jax.random.split(jax.random.PRNGKey(s + dh), 3)
+        q = jax.random.normal(ks[0], (bh, s, dh), jnp.float32)
+        k = jax.random.normal(ks[1], (bh, s, dh), jnp.float32)
+        v = jax.random.normal(ks[2], (bh, s, dh), jnp.float32)
+        out = flash_attention(q, k, v, causal=causal, q_block=blk,
+                              kv_block=blk)
+        ref = mha_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=1e-4)
+
+    def test_gqa_wrapper_matches_blockwise(self):
+        from repro.kernels.flash_attention import flash_mha
+        from repro.models.attention import attend_blockwise
+        b, s, h, kv, dh = 2, 128, 8, 2, 32
+        ks = jax.random.split(jax.random.PRNGKey(9), 3)
+        q = jax.random.normal(ks[0], (b, s, h, dh), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, kv, dh), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, kv, dh), jnp.float32)
+        o1 = flash_mha(q, k, v, q_block=64, kv_block=64)
+        o2 = attend_blockwise(q, k, v, q_block=64, kv_block=64)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   atol=2e-5, rtol=1e-4)
+
+    def test_bf16_dtype(self):
+        from repro.kernels.flash_attention import flash_attention
+        from repro.kernels.ref import mha_ref
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(ks[0], (2, 128, 64), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (2, 128, 64), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (2, 128, 64), jnp.bfloat16)
+        out = flash_attention(q, k, v, q_block=64, kv_block=64)
+        ref = mha_ref(q, k, v)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=3e-2, rtol=3e-2)
+
+
+class TestInterpKernel:
+    @pytest.mark.parametrize("table_fn,fn,lo,hi", [
+        (exp_table, np.exp, -16.0, 0.0),
+        (sigmoid_table, lambda x: 1 / (1 + np.exp(-x)), -8.0, 8.0),
+    ])
+    def test_matches_ref_and_exact(self, table_fn, fn, lo, hi):
+        t = table_fn()
+        x = jax.random.uniform(jax.random.PRNGKey(0), (64, 256),
+                               minval=lo, maxval=hi)
+        y_k = interp_kernel(x, t.table, lo=t.lo, hi=t.hi)
+        y_r = ref_lib.interp_ref(x, t.table, t.lo, t.hi)
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                                   atol=1e-6, rtol=1e-5)
+        exact = fn(np.asarray(x, np.float64))
+        assert np.max(np.abs(exact - np.asarray(y_k))) < 2e-3
+
+    @pytest.mark.parametrize("shape", [(8, 100), (256, 512), (1, 1000),
+                                       (37, 64)])
+    def test_shape_sweep(self, shape):
+        t = exp_table()
+        x = jax.random.uniform(jax.random.PRNGKey(1), shape,
+                               minval=-16.0, maxval=0.0)
+        y_k = interp_kernel(x, t.table, lo=t.lo, hi=t.hi)
+        y_r = ref_lib.interp_ref(x, t.table, t.lo, t.hi)
+        assert y_k.shape == shape
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                                   atol=1e-6, rtol=1e-5)
+
+    def test_block_tiling_paths(self):
+        # exercise the explicit pallas grid with multiple blocks
+        t = exp_table()
+        x = jax.random.uniform(jax.random.PRNGKey(2), (512, 1024),
+                               minval=-16.0, maxval=0.0)
+        y = interp_pallas(x, t.table, lo=t.lo, hi=t.hi,
+                          block_b=256, block_n=512)
+        y_r = ref_lib.interp_ref(x, t.table, t.lo, t.hi)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_r),
+                                   atol=1e-6, rtol=1e-5)

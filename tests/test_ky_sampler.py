@@ -1,0 +1,135 @@
+"""Core non-normalized Knuth-Yao sampler: exactness, bit economy,
+bit-exact agreement with the single-lane reference, property-based
+invariants (paper §II-B)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    cdf_sample,
+    dequantize,
+    entropy_bits,
+    ky_sample,
+    ky_sample_ref,
+    quantize_probs,
+)
+from repro.core import rng as rng_lib
+
+
+def _freqs(samples, n):
+    return np.bincount(np.asarray(samples).ravel(), minlength=n) / samples.size
+
+
+class TestExactness:
+    @pytest.mark.parametrize("probs", [
+        [0.5, 0.25, 0.125, 0.125],
+        [1 / 3, 1 / 3, 1 / 3],
+        [0.9, 0.05, 0.03, 0.02],
+        [0.25] * 4,
+    ])
+    def test_frequencies_match(self, probs):
+        p = jnp.asarray(probs)
+        w = quantize_probs(p, 12)
+        b = 100_000
+        res = jax.jit(ky_sample)(jax.random.PRNGKey(0), jnp.tile(w, (b, 1)))
+        assert bool(res.ok.all())
+        f = _freqs(res.sample, len(probs))
+        expect = np.asarray(dequantize(w))
+        # 5-sigma bound on each frequency
+        tol = 5 * np.sqrt(expect * (1 - expect) / b) + 1e-3
+        assert (np.abs(f - expect) < tol).all(), (f, expect)
+
+    def test_bits_used_entropy_bound(self):
+        """Bit economy: per attempt ≈ H+2 (Knuth-Yao); with rejection
+        restarts the FLDR bound E[bits] ≤ H + 6 applies."""
+        for probs in ([0.5, 0.25, 0.125, 0.125], [1 / 3] * 3, [0.85, 0.15]):
+            p = jnp.asarray(probs)
+            w = quantize_probs(p, 12)
+            res = ky_sample(jax.random.PRNGKey(1), jnp.tile(w, (50_000, 1)))
+            mean_bits = float(res.bits_used.mean())
+            h = float(entropy_bits(p))
+            assert mean_bits < h + 6.0, (probs, mean_bits, h)
+            assert mean_bits > h, (probs, mean_bits, h)
+
+    def test_paper_fig4a_example(self):
+        """Paper Fig. 4(a): sampling P_x = 1/3 consumes ~3 bits/sample."""
+        w = jnp.asarray([[1, 1, 1]], jnp.int32)
+        res = ky_sample(jax.random.PRNGKey(7), jnp.tile(w, (100_000, 1)))
+        bits = float(res.bits_used.mean())
+        assert 2.0 < bits <= 3.2, bits
+
+    def test_rejection_restarts(self):
+        # weights summing to just over a power of two -> pad mass ~ 1/2
+        w = jnp.asarray([[129, 130]], jnp.int32)  # sum=259, K=9, rej=253
+        res = ky_sample(jax.random.PRNGKey(2), jnp.tile(w, (20_000, 1)))
+        assert float(res.attempts.mean()) > 1.5  # heavy rejection regime
+        f = _freqs(res.sample, 2)
+        assert abs(f[0] - 129 / 259) < 0.02
+
+    def test_deterministic_single_outcome(self):
+        w = jnp.zeros((64, 8), jnp.int32).at[:, 3].set(77)
+        res = ky_sample(jax.random.PRNGKey(3), w)
+        assert (np.asarray(res.sample) == 3).all()
+
+
+class TestBitExact:
+    def test_vs_reference_many_cases(self):
+        rng = np.random.default_rng(0)
+        for _ in range(100):
+            n = int(rng.integers(2, 10))
+            w = rng.integers(0, 200, n)
+            w[rng.integers(0, n)] += 1
+            bits = rng.integers(0, 2, 2048)
+            ref_s, ref_b = ky_sample_ref(w.tolist(), bits.tolist())
+            words = np.zeros(64, np.uint32)
+            for i, b in enumerate(bits):
+                words[i // 32] |= np.uint32(b) << np.uint32(i % 32)
+            r = ky_sample(None, jnp.asarray(w[None, :], jnp.int32),
+                          bit_words=jnp.asarray(words[None, :]))
+            assert int(r.sample[0]) == ref_s
+            assert int(r.bits_used[0]) == ref_b
+
+    def test_lfsr_bitstream_compatible(self):
+        """The sampler is bit-source-agnostic: LFSR bits (HW reference)
+        drive it identically to threefry bits."""
+        bits = np.asarray(rng_lib.lfsr_bits(0xACE1, 2048))
+        w = np.array([10, 20, 30, 40])
+        ref_s, ref_b = ky_sample_ref(w.tolist(), bits.tolist())
+        words = np.zeros(64, np.uint32)
+        for i, b in enumerate(bits):
+            words[i // 32] |= np.uint32(int(b)) << np.uint32(i % 32)
+        r = ky_sample(None, jnp.asarray(w[None, :], jnp.int32),
+                      bit_words=jnp.asarray(words[None, :]))
+        assert int(r.sample[0]) == ref_s and int(r.bits_used[0]) == ref_b
+
+
+class TestProperty:
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.integers(0, 1000), min_size=2, max_size=12),
+           st.integers(0, 2 ** 31 - 1))
+    def test_support_and_termination(self, weights, seed):
+        """Samples always land on positive-weight outcomes; walk always
+        terminates within budget."""
+        if sum(weights) == 0:
+            weights[0] = 1
+        w = jnp.asarray([weights] * 32, jnp.int32)
+        res = ky_sample(jax.random.PRNGKey(seed), w)
+        s = np.asarray(res.sample)
+        wa = np.asarray(weights)
+        assert (wa[s] > 0).all()
+        assert bool(res.ok.all())
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(2, 64), st.integers(0, 2 ** 31 - 1))
+    def test_cdf_and_ky_agree_distributionally(self, n, seed):
+        key = jax.random.PRNGKey(seed)
+        p = jax.random.dirichlet(key, jnp.ones(n))
+        w = quantize_probs(p, 10)
+        b = 20_000
+        kr = ky_sample(jax.random.PRNGKey(seed + 1), jnp.tile(w, (b, 1)))
+        cr = cdf_sample(jax.random.PRNGKey(seed + 2), jnp.tile(w, (b, 1)))
+        fk = _freqs(kr.sample, n)
+        fc = _freqs(cr.sample, n)
+        assert np.abs(fk - fc).max() < 0.05

@@ -1,0 +1,171 @@
+"""Per-arch smoke tests (reduced configs, one fwd/train step, shape +
+finite checks) and model-level correctness: prefill/decode consistency,
+SSD chunked-vs-recurrent, MoE routing invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import ModelConfig
+from repro.models.layers import unembed
+from repro.models.moe import apply_moe, init_moe, moe_capacity
+from repro.models.sampling import generate
+from repro.models.ssm import apply_ssm, init_ssm, init_ssm_state
+from repro.models.transformer import (
+    decode_step,
+    encode,
+    forward,
+    init_cache,
+    init_model,
+    loss_fn,
+    prefill_cross_cache,
+)
+from repro.training.data import make_batch
+from repro.configs.base import ShapeCfg
+
+
+def _smoke_batch(cfg, b=2, s=16):
+    batch = {"tokens": jnp.ones((b, s), jnp.int32),
+             "labels": jnp.ones((b, s), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["frontend"] = jnp.zeros((b, cfg.frontend_tokens, cfg.d_model),
+                                      jnp.float32)
+    if cfg.family in ("encdec", "audio"):
+        batch["src_embeds"] = jnp.zeros((b, cfg.enc_seq_len, cfg.d_model),
+                                        jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_forward_and_train_step(self, arch):
+        cfg = get_config(arch, smoke=True)
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        batch = _smoke_batch(cfg)
+        loss, grads = jax.value_and_grad(loss_fn)(params, cfg, batch, 8)
+        assert np.isfinite(float(loss)), arch
+        gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+        assert np.isfinite(gn) and gn > 0, arch
+
+    def test_decode_step(self, arch):
+        cfg = get_config(arch, smoke=True)
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        b = 2
+        cache = init_cache(cfg, b, 32)
+        if cfg.family in ("encdec", "audio"):
+            src = jnp.zeros((b, cfg.enc_seq_len, cfg.d_model), jnp.float32)
+            eo = encode(params, cfg, src.astype(cfg.dtype), 8)
+            cache = prefill_cross_cache(params, cfg, eo, cache)
+        logits, cache2 = decode_step(
+            params, cfg, jnp.ones((b, 1), jnp.int32), jnp.int32(0), cache)
+        assert logits.shape == (b, cfg.vocab)
+        assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+
+
+class TestConsistency:
+    @pytest.mark.parametrize("arch", ["qwen1.5-32b", "granite-20b",
+                                      "mamba2-130m", "hymba-1.5b",
+                                      "grok-1-314b"])
+    def test_prefill_decode_agree(self, arch):
+        # exact agreement with a bf16->f32 cache (int8 checked separately)
+        cfg = get_config(arch, smoke=True).replace(
+            dtype="float32", cache_dtype="bfloat16")
+        params = init_model(jax.random.PRNGKey(1), cfg)
+        b, s = 1, 8
+        toks = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, cfg.vocab)
+        h = forward(params, cfg, toks, q_block=8)
+        full = unembed(params["embed"], cfg, h)
+        cache = init_cache(cfg, b, s)
+        outs = []
+        for t in range(s):
+            lg, cache = decode_step(params, cfg, toks[:, t:t + 1],
+                                    jnp.int32(t), cache)
+            outs.append(lg)
+        dec = jnp.stack(outs, axis=1)
+        err = float(jnp.max(jnp.abs(full - dec)))
+        assert err < 5e-3, (arch, err)
+
+    def test_int8_cache_decode_close(self):
+        """The adopted int8 KV cache (§Perf A) stays within 5% relative
+        logit error of the exact prefill."""
+        cfg = get_config("qwen1.5-32b", smoke=True).replace(
+            dtype="float32", cache_dtype="int8")
+        params = init_model(jax.random.PRNGKey(1), cfg)
+        b, s = 1, 8
+        toks = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, cfg.vocab)
+        full = unembed(params["embed"], cfg, forward(params, cfg, toks, q_block=8))
+        cache = init_cache(cfg, b, s)
+        outs = []
+        for t in range(s):
+            lg, cache = decode_step(params, cfg, toks[:, t:t + 1],
+                                    jnp.int32(t), cache)
+            outs.append(lg)
+        dec = jnp.stack(outs, axis=1)
+        rel = float(jnp.max(jnp.abs(full - dec)) / jnp.max(jnp.abs(full)))
+        assert rel < 0.05, rel
+
+    def test_generate_ky_runs(self):
+        cfg = get_config("phi4-mini-3.8b", smoke=True)
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        prompt = jnp.ones((2, 4), jnp.int32)
+        toks, bits = generate(params, cfg, prompt, jax.random.PRNGKey(1),
+                              max_new=8, sampler="ky", q_block=4)
+        assert toks.shape == (2, 8)
+        # untrained nets can emit near-deterministic logits, for which the
+        # sampler's deterministic bypass legitimately uses 0 random bits
+        assert int(bits) >= 0
+        assert (np.asarray(toks) < cfg.vocab).all()
+
+
+class TestMoE:
+    def test_capacity_and_drops(self):
+        cfg = ModelConfig(name="m", family="moe", n_layers=1, d_model=32,
+                          n_heads=2, n_kv=1, d_head=16, d_ff=64, vocab=64,
+                          n_experts=4, top_k=2, moe_d_ff=64,
+                          capacity_factor=1.0)
+        p = init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32))
+        y, aux = apply_moe(p, cfg, x)
+        assert y.shape == x.shape
+        assert 0.0 <= float(aux["drop_frac"]) < 0.5
+        assert float(aux["load_balance"]) >= 1.0 - 1e-3  # >= 1 by Jensen
+
+    def test_top1_routes_to_single_expert(self):
+        cfg = ModelConfig(name="m", family="moe", n_layers=1, d_model=16,
+                          n_heads=2, n_kv=1, d_head=8, d_ff=32, vocab=64,
+                          n_experts=2, top_k=1, moe_d_ff=32,
+                          capacity_factor=2.0)
+        p = init_moe(jax.random.PRNGKey(2), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(3), (1, 8, 16))
+        y, aux = apply_moe(p, cfg, x)
+        assert float(aux["drop_frac"]) == 0.0  # cf=2, top-1: no drops
+
+
+class TestSSM:
+    def test_chunked_matches_recurrence(self):
+        cfg = get_config("mamba2-130m", smoke=True).replace(ssm_chunk=8)
+        p = init_ssm(jax.random.PRNGKey(0), cfg)
+        b, s = 2, 32
+        u = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model)) * 0.5
+        y_chunk, _ = apply_ssm(p, cfg, u)
+        st = init_ssm_state(cfg, b)
+        ys = []
+        for t in range(s):
+            yt, st = apply_ssm(p, cfg, u[:, t:t + 1], state=st)
+            ys.append(yt)
+        y_rec = jnp.concatenate(ys, axis=1)
+        err = float(jnp.max(jnp.abs(y_chunk - y_rec)))
+        assert err < 1e-3, err
+
+    def test_state_carries_context(self):
+        """An SSM decode with state differs from one without — the state
+        actually carries information (long-context mechanism)."""
+        cfg = get_config("mamba2-130m", smoke=True)
+        p = init_ssm(jax.random.PRNGKey(0), cfg)
+        u = jax.random.normal(jax.random.PRNGKey(1), (1, 1, cfg.d_model))
+        st0 = init_ssm_state(cfg, 1)
+        y0, _ = apply_ssm(p, cfg, u, state=st0)
+        warm = {k: v + 1.0 for k, v in st0.items()}
+        y1, _ = apply_ssm(p, cfg, u, state=warm)
+        assert float(jnp.max(jnp.abs(y0 - y1))) > 1e-6
