@@ -1,0 +1,56 @@
+"""Posterior query service under synthetic traffic (repro.serve).
+
+Measures what a serving stack cares about: queries/s and MSample/s for a
+cold plan cache (compiler chain + XLA compile on the critical path) vs a
+warm one (pure sampling), plus the cache hit rate.  Traffic cycles a
+small set of evidence patterns, as repeat sensor traffic does — the
+regime the (network, evidence-pattern) plan cache is designed for.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.pgm import networks
+from repro.serve.cli import synthetic_traffic
+from repro.serve.engine import PosteriorEngine
+
+
+def _pass(engine, traffic):
+    t0 = time.perf_counter()
+    results = engine.answer_batch(traffic)
+    dt = time.perf_counter() - t0
+    samples = sum(r.n_node_samples for r in results)
+    return dt, samples, results
+
+
+def run(name, network, *, n_queries=32, n_patterns=3, budget=2048,
+        chains=16, report=print):
+    bn = getattr(networks, network)()
+    traffic = synthetic_traffic(
+        bn, network, n_queries, n_patterns, np.random.default_rng(0), budget)
+    engine = PosteriorEngine({network: bn}, chains_per_query=chains,
+                             burn_in=32)
+    cold_dt, cold_samples, _ = _pass(engine, traffic)
+    warm_dt, warm_samples, results = _pass(engine, traffic)
+    conv = sum(r.converged for r in results)
+    s = engine.cache.stats
+    report(row(
+        f"serve_{name}_cold", cold_dt / n_queries * 1e6,
+        f"qps={n_queries/cold_dt:.2f};MSample/s={cold_samples/cold_dt/1e6:.3f}"))
+    report(row(
+        f"serve_{name}_warm", warm_dt / n_queries * 1e6,
+        f"qps={n_queries/warm_dt:.2f};MSample/s={warm_samples/warm_dt/1e6:.3f};"
+        f"speedup={cold_dt/warm_dt:.1f}x;hit_rate={s.hit_rate:.2f};"
+        f"converged={conv}/{n_queries}"))
+
+
+def main(report=print):
+    run("asia_8n", "asia", report=report)
+    run("child_scale_20n", "child_scale", n_queries=16, report=report)
+
+
+if __name__ == "__main__":
+    main()

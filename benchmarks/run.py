@@ -20,6 +20,7 @@ from benchmarks import (
     bench_mrf,
     bench_roofline,
     bench_schmoo,
+    bench_serve,
     bench_sota_table,
 )
 
@@ -29,6 +30,7 @@ SUITES = [
     ("interp", bench_interp),          # §II-B IU claim
     ("mrf", bench_mrf),                # Fig. 7 (MRF)
     ("bayesnet", bench_bayesnet),      # Fig. 7 (BN)
+    ("serve", bench_serve),            # ours: posterior query service
     ("halo", bench_halo),              # §II-A / Fig. 3b
     ("lm_decode", bench_lm_decode),    # ours: KY as LM token sampler
     ("sota_table", bench_sota_table),  # Table II

@@ -1,6 +1,7 @@
 """PGM substrate: model IR, coloring, compiler chain, Gibbs engines."""
 from repro.pgm.coloring import checkerboard, color_bayesnet, dsatur, verify_coloring
-from repro.pgm.compile import CompiledBN, compile_bayesnet, make_sweep, run_gibbs
+from repro.pgm.compile import (
+    CompiledBN, compile_bayesnet, init_states, make_sweep, run_gibbs)
 from repro.pgm.gibbs import checkerboard_halfstep, init_labels, mrf_gibbs
 from repro.pgm.graph import BayesNet, MRFGrid
 from repro.pgm.mesh_gibbs import make_mesh_gibbs_step, pad_mrf, shard_mrf
@@ -8,7 +9,7 @@ from repro.pgm import networks
 
 __all__ = [
     "checkerboard", "color_bayesnet", "dsatur", "verify_coloring",
-    "CompiledBN", "compile_bayesnet", "make_sweep", "run_gibbs",
+    "CompiledBN", "compile_bayesnet", "init_states", "make_sweep", "run_gibbs",
     "checkerboard_halfstep", "init_labels", "mrf_gibbs",
     "BayesNet", "MRFGrid", "make_mesh_gibbs_step", "pad_mrf", "shard_mrf",
     "networks",

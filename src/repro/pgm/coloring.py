@@ -24,15 +24,29 @@ def dsatur(graph: nx.Graph) -> dict[int, int]:
     return nx.coloring.greedy_color(graph, strategy="saturation_largest_first")
 
 
-def color_bayesnet(bn: BayesNet) -> list[np.ndarray]:
+def color_bayesnet(
+    bn: BayesNet, skip: frozenset[int] | set[int] = frozenset()
+) -> list[np.ndarray]:
     """Color the moral graph; returns per-color arrays of node ids.
 
     Invariant (checked): no two nodes in one color share an edge in the
     moral graph, i.e. they are conditionally independent given the rest —
     safe to Gibbs-update in parallel.
+
+    ``skip``: evidence-clamped nodes.  They are excluded from the coloring
+    entirely (they never get resampled), but the marriage edges they induce
+    between free co-parents stay — two free parents of an observed child
+    remain coupled through that child's CPT, so they must not share a
+    color.  Dropping the observed nodes typically *reduces* the color
+    count, which is exactly the paper's point about evidence shrinking the
+    sweep critical path.
     """
     g = bn.moralized()
+    if skip:
+        g = g.subgraph([v for v in g.nodes if v not in skip])
     coloring = dsatur(g)
+    if not coloring:
+        return []
     n_colors = max(coloring.values()) + 1
     groups = [
         np.array(sorted(v for v, c in coloring.items() if c == col), np.int32)

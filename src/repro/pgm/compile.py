@@ -54,17 +54,31 @@ class ColorPlan:
 
 @dataclass(frozen=True, eq=False)
 class CompiledBN:
-    """Output of the compiler chain; consumed by ``make_sweep``."""
+    """Output of the compiler chain; consumed by ``make_sweep``.
+
+    ``observed`` lists evidence-clamped node ids (the *evidence pattern*):
+    those nodes appear in no gather plan, so a sweep never resamples them —
+    their values are read straight out of the state vector by their
+    children's gathers, which is exactly CPT conditioning on the clamp.
+    One compiled program therefore serves *any* evidence values over the
+    same pattern, which is what makes plan caching by pattern sound.
+    """
 
     bn: BayesNet
     log_cpt: np.ndarray          # flat log-CPT bank (+ sentinel 0.0 at end)
     plans: tuple[ColorPlan, ...]
     max_card: int
     k: int                       # fixed-point weight precision
+    observed: tuple[int, ...] = ()
 
     @property
     def n_colors(self) -> int:
         return len(self.plans)
+
+    @property
+    def free_nodes(self) -> tuple[int, ...]:
+        obs = set(self.observed)
+        return tuple(v for v in range(self.bn.n_nodes) if v not in obs)
 
 
 def compile_bayesnet(
@@ -72,8 +86,18 @@ def compile_bayesnet(
     *,
     k: int = DEFAULT_K,
     quantize_cpt_bits: int | None = 16,
+    observed=(),
 ) -> CompiledBN:
-    """Run the full compiler chain on a BayesNet."""
+    """Run the full compiler chain on a BayesNet.
+
+    ``observed``: evidence pattern — node ids (or names) to clamp.  Values
+    are supplied at run time (``run_gibbs(evidence=...)`` or per-lane via
+    the serve engine), so the compiled program is reusable across queries
+    sharing the pattern.
+    """
+    observed = tuple(sorted({bn.index(v) for v in observed}))
+    if len(observed) == bn.n_nodes:
+        raise ValueError("all nodes observed — nothing to infer")
     # ---- stage 1: fixed-point quantization of the log-CPT bank ----------
     banks, offsets = [], {}
     pos = 0
@@ -90,8 +114,8 @@ def compile_bayesnet(
         flat = np.round(flat * scale) / scale
     flat = flat.astype(np.float32)
 
-    # ---- stage 2: coloring (moralize + DSatur) ---------------------------
-    groups = color_bayesnet(bn)
+    # ---- stage 2: coloring (moralize + DSatur), evidence nodes skipped ---
+    groups = color_bayesnet(bn, skip=frozenset(observed))
 
     # ---- stage 3: gather plans -------------------------------------------
     def strides(v: int) -> np.ndarray:
@@ -151,6 +175,7 @@ def compile_bayesnet(
         plans=tuple(plans),
         max_card=int(max(bn.card)),
         k=k,
+        observed=observed,
     )
 
 
@@ -217,6 +242,33 @@ def make_sweep(prog: CompiledBN, *, use_iu: bool = True):
     return jax.jit(sweep)
 
 
+def init_states(
+    key: jax.Array,
+    prog: CompiledBN,
+    n_chains: int,
+    evidence_values: jax.Array | None = None,
+) -> jax.Array:
+    """Random (B, n) initial states with evidence columns clamped.
+
+    ``evidence_values`` aligns with ``prog.observed``: either (O,) shared
+    across chains or (B, O) per-lane — the serve engine packs different
+    queries' values into different lanes of one jitted sweep.
+    """
+    n = prog.bn.n_nodes
+    card = jnp.asarray(prog.bn.card, jnp.int32)
+    u = jax.random.uniform(key, (n_chains, n))
+    x0 = (u * card[None]).astype(jnp.int32)
+    if prog.observed:
+        if evidence_values is None:
+            raise ValueError(
+                f"program clamps nodes {prog.observed} but no evidence given")
+        ev = jnp.asarray(evidence_values, jnp.int32)
+        if ev.ndim == 1:
+            ev = jnp.broadcast_to(ev[None], (n_chains, len(prog.observed)))
+        x0 = x0.at[:, jnp.asarray(prog.observed, jnp.int32)].set(ev)
+    return x0
+
+
 @partial(jax.jit, static_argnames=("prog", "n_sweeps", "n_chains", "burn_in", "use_iu"))
 def run_gibbs(
     key: jax.Array,
@@ -226,16 +278,21 @@ def run_gibbs(
     n_sweeps: int,
     burn_in: int,
     use_iu: bool = True,
+    evidence=None,
 ):
     """Run BN Gibbs; returns (final_states, marginal_counts, stats).
 
     marginal_counts: (n_nodes, max_card) int32 accumulated after burn-in.
+    ``evidence``: values for ``prog.observed`` (same order); required iff
+    the program was compiled with an evidence pattern.  Deliberately a
+    *traced* argument: one compiled program serves any values over its
+    pattern — changing them must not retrace.
     """
     n = prog.bn.n_nodes
-    card = jnp.asarray(prog.bn.card, jnp.int32)
     key, init_key = jax.random.split(key)
-    u = jax.random.uniform(init_key, (n_chains, n))
-    x0 = (u * card[None]).astype(jnp.int32)
+    x0 = init_states(
+        init_key, prog, n_chains,
+        None if evidence is None else jnp.asarray(evidence, jnp.int32))
     log_cpt = jnp.asarray(prog.log_cpt)
 
     def body(carry, i):

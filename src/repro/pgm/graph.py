@@ -14,6 +14,7 @@ DAGs) are in :mod:`repro.pgm.networks`.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 
 import networkx as nx
@@ -103,6 +104,33 @@ class BayesNet:
     def n_nodes(self) -> int:
         return len(self.card)
 
+    def index(self, node: int | str) -> int:
+        """Resolve a node given by id or name to its id."""
+        if isinstance(node, str):
+            try:
+                return self.names.index(node)
+            except ValueError:
+                raise KeyError(f"unknown node name {node!r}") from None
+        v = int(node)
+        if not 0 <= v < self.n_nodes:
+            raise KeyError(f"node id {v} out of range")
+        return v
+
+    def normalize_evidence(self, evidence) -> dict[int, int]:
+        """Map an {id-or-name: value} evidence dict to {id: value}, with
+        range checks — the canonical form the compiler/serve layers use."""
+        out: dict[int, int] = {}
+        for node, val in dict(evidence or {}).items():
+            v = self.index(node)
+            val = int(val)
+            if not 0 <= val < self.card[v]:
+                raise ValueError(
+                    f"evidence {self.names[v]}={val} outside card {self.card[v]}")
+            if v in out and out[v] != val:
+                raise ValueError(f"conflicting evidence for {self.names[v]}")
+            out[v] = val
+        return out
+
     def children(self, v: int) -> list[int]:
         return [c for c in range(self.n_nodes) if v in self.parents[c]]
 
@@ -160,15 +188,27 @@ class BayesNet:
             out[:, v] = (rows.cumsum(axis=-1) < u).sum(axis=-1)
         return out
 
-    def marginals_exact(self) -> list[np.ndarray]:
-        """Brute-force marginals (only for small nets — test oracle)."""
-        total = int(np.prod(self.card))
+    def marginals_exact(self, evidence=None) -> list[np.ndarray]:
+        """Brute-force (posterior) marginals — the test oracle.
+
+        With ``evidence`` ({id-or-name: value}), enumerates only the
+        assignments consistent with the observations and renormalizes,
+        i.e. returns ``P(v | e)`` for every node (a delta at the observed
+        value for evidence nodes).  Only for small nets.
+        """
+        total = math.prod(self.card)  # python ints: np.prod would overflow
         if total > 2_000_000:
             raise ValueError("net too large for brute force")
         grids = np.indices(tuple(self.card)).reshape(self.n_nodes, -1).T
+        ev = self.normalize_evidence(evidence)
+        for v, val in ev.items():
+            grids = grids[grids[:, v] == val]
         lp = self.logp(grids)
         p = np.exp(lp - lp.max())
-        p /= p.sum()
+        z = p.sum()
+        if not z > 0:
+            raise ValueError("evidence has zero probability")
+        p /= z
         return [
             np.bincount(grids[:, v], weights=p, minlength=self.card[v])
             for v in range(self.n_nodes)

@@ -1,0 +1,18 @@
+"""Posterior query service — evidence-conditioned, batched PGM inference.
+
+Turns the compiler chain + Gibbs substrate of :mod:`repro.pgm` into a
+*query engine*: callers submit (network, evidence, query vars, budget)
+requests and get posterior marginals back.  Compiled sweep programs are
+cached by evidence *pattern* so repeat traffic never recompiles, and
+compatible queries are micro-batched across chain lanes of one jitted
+sweep — the TPU analogue of AIA mapping many independent chains onto its
+cores (paper §III).
+"""
+from repro.serve.engine import PosteriorEngine, split_rhat
+from repro.serve.plan_cache import CacheStats, PlanCache
+from repro.serve.query import Query, Result, parse_evidence
+
+__all__ = [
+    "CacheStats", "PlanCache", "PosteriorEngine", "Query", "Result",
+    "parse_evidence", "split_rhat",
+]

@@ -1,0 +1,270 @@
+"""Micro-batching posterior engine: packs queries onto chain lanes.
+
+The serving analogue of AIA's core scheduler (paper §III): queries that
+share a network and an evidence *pattern* are compatible — they run the
+same compiled sweep program — so the engine packs them side by side
+along the chain (batch) axis of one jitted sweep, each query owning
+``chains_per_query`` lanes initialized with *its* evidence values.  One
+XLA dispatch then advances every query in the group.
+
+Sampling proceeds in rounds of ``sweeps_per_round`` sweeps.  After the
+burn-in rounds, each round accumulates thinned one-hot counts per lane
+(the online marginal estimate) and a per-lane mean state (the scalar
+statistic for convergence).  After every round the engine computes the
+split-R̂ of each query's chains and retires queries early once all of a
+group's queries converge — budget left over is simply not spent, which
+is where the paper's "approximate inference" throughput comes from.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fixedpoint import DEFAULT_K
+from repro.pgm.compile import (
+    BNSweepStats, CompiledBN, _color_update, compile_bayesnet, init_states)
+from repro.pgm.graph import BayesNet
+from repro.serve.plan_cache import PlanCache
+from repro.serve.query import Query, Result
+
+
+def split_rhat(draws: np.ndarray) -> float:
+    """Split-R̂ of per-chain draw sequences (chains, rounds).
+
+    Each chain's sequence is split in half (dropping the odd round, if
+    any) and the halves treated as separate chains — the standard
+    Gelman–Rubin split variant.  Returns 1.0 for degenerate (constant)
+    statistics, inf when between-chain variance dominates a vanishing
+    within-chain variance.
+    """
+    draws = np.asarray(draws, np.float64)
+    c, r = draws.shape
+    half = r // 2
+    if c < 2 or half < 2:
+        return float("inf")  # not enough draws to judge — keep sampling
+    seqs = np.concatenate([draws[:, :half], draws[:, half:2 * half]], axis=0)
+    w = float(seqs.var(axis=1, ddof=1).mean())
+    b = float(half * seqs.mean(axis=1).var(ddof=1))
+    if w < 1e-12:
+        return 1.0 if b < 1e-12 else float("inf")
+    var_plus = (half - 1) / half * w + b / half
+    return float(np.sqrt(var_plus / w))
+
+
+def make_round_runner(prog: CompiledBN, *, sweeps_per_round: int, thin: int,
+                      use_iu: bool):
+    """Jitted ``(key, x) -> (x, counts, xmean, stats)`` for one round.
+
+    ``counts``: (B, n, L) thinned one-hot draw counts this round.
+    ``xmean``:  (B, n) mean state over the round — per-lane scalar
+    statistics for split-R̂ (for a binary node this is its running
+    posterior-probability estimate).
+    """
+    log_cpt = jnp.asarray(prog.log_cpt)
+    n, L = prog.bn.n_nodes, prog.max_card
+
+    def round_fn(key: jax.Array, x: jax.Array):
+        def body(carry, i):
+            key, x, counts, xsum, bits, att = carry
+            key, sub = jax.random.split(key)
+            for plan in prog.plans:
+                sub, s2 = jax.random.split(sub)
+                x, st = _color_update(
+                    s2, x, plan, log_cpt, L, prog.k, use_iu)
+                bits, att = bits + st.bits_used, att + st.attempts
+            onehot = (x[..., None] == jnp.arange(L)).astype(jnp.int32)
+            counts = counts + jnp.where((i % thin) == 0, onehot, 0)
+            xsum = xsum + x.astype(jnp.float32)
+            return (key, x, counts, xsum, bits, att), None
+
+        counts0 = jnp.zeros(x.shape + (L,), jnp.int32)
+        xsum0 = jnp.zeros(x.shape, jnp.float32)
+        (key, x, counts, xsum, bits, att), _ = jax.lax.scan(
+            body, (key, x, counts0, xsum0, jnp.int32(0), jnp.int32(0)),
+            jnp.arange(sweeps_per_round))
+        return x, counts, xsum / sweeps_per_round, BNSweepStats(bits, att)
+
+    return jax.jit(round_fn)
+
+
+class PosteriorEngine:
+    """Answers batches of posterior queries over registered networks.
+
+    Parameters mirror a serving config: ``chains_per_query`` lanes per
+    query, ``sweeps_per_round`` sweeps per scheduling quantum, burn-in
+    and thinning in sweeps, and a split-R̂ target for early stopping.
+    """
+
+    def __init__(
+        self,
+        networks: Mapping[str, BayesNet] | None = None,
+        *,
+        chains_per_query: int = 32,
+        sweeps_per_round: int = 16,
+        burn_in: int = 64,
+        thin: int = 1,
+        rhat_target: float = 1.05,
+        min_rounds: int = 4,
+        max_rounds: int = 64,
+        k: int = DEFAULT_K,
+        use_iu: bool = True,
+        quantize_cpt_bits: int | None = 16,
+        cache: PlanCache | None = None,
+        seed: int = 0,
+    ):
+        self.networks: dict[str, BayesNet] = dict(networks or {})
+        self.chains_per_query = int(chains_per_query)
+        self.sweeps_per_round = int(sweeps_per_round)
+        self.burn_in = int(burn_in)
+        self.thin = int(thin)
+        self.rhat_target = float(rhat_target)
+        self.min_rounds = max(int(min_rounds), 4)  # split-R̂ needs >= 4
+        self.max_rounds = int(max_rounds)
+        self.k = k
+        self.use_iu = use_iu
+        self.quantize_cpt_bits = quantize_cpt_bits
+        self.cache = cache if cache is not None else PlanCache()
+        self._key = jax.random.PRNGKey(seed)
+
+    # -- registry ----------------------------------------------------------
+    def register(self, name: str, bn: BayesNet) -> None:
+        """Register (or replace) a network.  Replacing drops the name's
+        cached plans — they were compiled from the old network's CPTs."""
+        if self.networks.get(name) is not bn:
+            self.cache.invalidate(lambda key: key[0] == name)
+        self.networks[name] = bn
+
+    def _network(self, name: str) -> BayesNet:
+        try:
+            return self.networks[name]
+        except KeyError:
+            raise KeyError(
+                f"network {name!r} not registered "
+                f"(have: {sorted(self.networks)})") from None
+
+    # -- plan lookup -------------------------------------------------------
+    def _plan(self, name: str, pattern: tuple[int, ...]):
+        """(CompiledBN, round_runner, was_cache_hit) for one pattern."""
+        key = (name, pattern, self.k, self.use_iu, self.quantize_cpt_bits,
+               self.sweeps_per_round, self.thin)
+
+        def build():
+            prog = compile_bayesnet(
+                self._network(name), k=self.k,
+                quantize_cpt_bits=self.quantize_cpt_bits, observed=pattern)
+            runner = make_round_runner(
+                prog, sweeps_per_round=self.sweeps_per_round,
+                thin=self.thin, use_iu=self.use_iu)
+            return prog, runner
+
+        (prog, runner), hit = self.cache.get(key, build)
+        return prog, runner, hit
+
+    # -- serving -----------------------------------------------------------
+    def answer(self, query: Query) -> Result:
+        return self.answer_batch([query])[0]
+
+    def answer_batch(self, queries: list[Query]) -> list[Result]:
+        """Answer a batch; compatible queries share one jitted sweep."""
+        groups: dict[tuple, list[int]] = {}
+        normed = []
+        for i, q in enumerate(queries):
+            bn = self._network(q.network)
+            ev = bn.normalize_evidence(q.evidence)
+            qvars = tuple(bn.index(v) for v in q.query_vars) or tuple(
+                v for v in range(bn.n_nodes) if v not in ev)
+            clash = [bn.names[v] for v in qvars if v in ev]
+            if clash:
+                raise ValueError(f"query vars {clash} are observed")
+            pattern = tuple(sorted(ev))
+            normed.append((q, bn, ev, qvars))
+            groups.setdefault((q.network, pattern), []).append(i)
+
+        results: list[Result | None] = [None] * len(queries)
+        for (name, pattern), idxs in groups.items():
+            self._answer_group(name, pattern, idxs, normed, results)
+        return results  # type: ignore[return-value]
+
+    def _answer_group(self, name, pattern, idxs, normed, results) -> None:
+        t0 = time.perf_counter()
+        prog, runner, hit = self._plan(name, pattern)
+        bn = self._network(name)
+        c = self.chains_per_query
+        nq = len(idxs)
+        b = nq * c
+        n_free = len(prog.free_nodes)
+        kept_per_round = math.ceil(self.sweeps_per_round / self.thin)
+
+        # per-lane evidence values: query j owns lanes [j*c, (j+1)*c)
+        ev_vals = np.zeros((b, len(pattern)), np.int32)
+        for j, i in enumerate(idxs):
+            ev = normed[i][2]
+            ev_vals[j * c:(j + 1) * c] = [ev[v] for v in pattern]
+
+        self._key, init_key, run_key = jax.random.split(self._key, 3)
+        x = init_states(init_key, prog, b,
+                        jnp.asarray(ev_vals) if pattern else None)
+
+        burn_rounds = math.ceil(self.burn_in / self.sweeps_per_round)
+        budget_rounds = max(
+            math.ceil(normed[i][0].n_samples / (c * kept_per_round))
+            for i in idxs)
+        cap = min(max(budget_rounds, self.min_rounds), self.max_rounds)
+
+        bits = 0
+        for _ in range(burn_rounds):
+            run_key, sub = jax.random.split(run_key)
+            x, _, _, st = runner(sub, x)
+            bits += int(st.bits_used)  # burn-in draws spend bits too
+
+        counts = np.zeros((b, bn.n_nodes, prog.max_card), np.int64)
+        means = np.zeros((b, bn.n_nodes, cap), np.float32)  # R̂ statistics
+        rounds_run = 0
+        rhats = {i: float("inf") for i in idxs}
+        while rounds_run < cap:
+            run_key, sub = jax.random.split(run_key)
+            x, rc, xmean, st = runner(sub, x)
+            counts += np.asarray(rc, np.int64)
+            means[..., rounds_run] = np.asarray(xmean)
+            bits += int(st.bits_used)
+            rounds_run += 1
+            if rounds_run < self.min_rounds:
+                continue
+            for j, i in enumerate(idxs):
+                qvars = normed[i][3]
+                lanes = means[j * c:(j + 1) * c, :, :rounds_run]  # (C, n, r)
+                rhats[i] = max(
+                    split_rhat(lanes[:, v, :]) for v in qvars)
+            if all(r < self.rhat_target for r in rhats.values()):
+                break
+
+        jax.block_until_ready(x)
+        wall = time.perf_counter() - t0
+        total_sweeps = (burn_rounds + rounds_run) * self.sweeps_per_round
+        n_node_samples = b * n_free * total_sweeps
+        bps = bits / n_node_samples if n_node_samples else 0.0
+
+        for j, i in enumerate(idxs):
+            q, _, _, qvars = normed[i]
+            qc = counts[j * c:(j + 1) * c].sum(axis=0)   # (n, L)
+            marginals = {}
+            for v in qvars:
+                m = qc[v, :bn.card[v]].astype(np.float64)
+                marginals[bn.names[v]] = m / max(m.sum(), 1.0)
+            results[i] = Result(
+                query=q,
+                marginals=marginals,
+                n_samples=int(c * kept_per_round * rounds_run),
+                n_sweeps=total_sweeps,
+                n_node_samples=int(c * n_free * total_sweeps),
+                rhat=float(rhats[i]),
+                converged=bool(rhats[i] < self.rhat_target),
+                cache_hit=hit,
+                wall_s=wall,
+                bits_per_sample=bps,
+            )

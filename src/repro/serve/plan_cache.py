@@ -1,0 +1,73 @@
+"""Compiled-plan cache keyed by (network, evidence-pattern).
+
+The compiler chain (quantize → moralize+DSatur → gather plans → jit) is
+the expensive, *reusable* part of answering a query: one compiled sweep
+program serves every query that clamps the same set of nodes, whatever
+the observed values, because values live in the state vector, not the
+plan (see :class:`repro.pgm.compile.CompiledBN`).  Serving traffic is
+heavily repetitive in its evidence patterns (the same sensors report
+every time), so an LRU over patterns turns recompilation into a
+cold-start-only cost — the warm path goes straight to the jitted sweep.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Hashable
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+@dataclass
+class PlanCache:
+    """LRU cache of compiled sweep programs (and their jitted runners).
+
+    Entries are built on demand by the ``build`` thunk passed to
+    :meth:`get`, so the cache stays agnostic of what a "plan" is — the
+    engine stores (CompiledBN, round-runner) pairs, tests can store
+    sentinels.
+    """
+
+    capacity: int = 128
+    stats: CacheStats = field(default_factory=CacheStats)
+    _entries: OrderedDict = field(default_factory=OrderedDict, repr=False)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._entries
+
+    def get(self, key: Hashable, build: Callable[[], Any]) -> tuple[Any, bool]:
+        """Return ``(entry, was_hit)``; builds and inserts on miss."""
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            return self._entries[key], True
+        self.stats.misses += 1
+        entry = self._entries[key] = build()
+        if len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.stats.evictions += 1
+        return entry, False
+
+    def invalidate(self, predicate: Callable[[Hashable], bool]) -> int:
+        """Drop entries whose key matches; returns how many were dropped."""
+        stale = [k for k in self._entries if predicate(k)]
+        for k in stale:
+            del self._entries[k]
+        return len(stale)
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.stats = CacheStats()

@@ -1,0 +1,84 @@
+"""Request/response types of the posterior query service.
+
+A :class:`Query` is the unit of traffic: "given this network and these
+observations, what are the posterior marginals of these variables?"
+Nodes may be referred to by name (``"rain"``) or id; the engine
+normalizes both.  A :class:`Result` carries the marginals plus the
+diagnostics a serving stack needs (convergence, sample counts, cache
+behaviour, throughput accounting).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Mapping, Sequence
+
+import numpy as np
+
+
+def parse_evidence(spec: str) -> dict[str, int]:
+    """Parse a CLI evidence string ``"smoke=1,dysp=0"`` into a dict.
+
+    Shared by every driver that accepts ``--evidence`` (run_mcmc, the
+    bayesnet example); node-name validation happens later against the
+    network via :meth:`BayesNet.normalize_evidence`.
+    """
+    out: dict[str, int] = {}
+    for pair in filter(None, (p.strip() for p in spec.split(","))):
+        name, sep, val = pair.partition("=")
+        if not sep or not name:
+            raise ValueError(
+                f"bad evidence {pair!r}: expected name=value")
+        try:
+            out[name.strip()] = int(val)
+        except ValueError:
+            raise ValueError(
+                f"bad evidence value in {pair!r}: expected an integer") from None
+    return out
+
+
+@dataclass
+class Query:
+    """One posterior-marginal request.
+
+    ``n_samples`` is the *target* sample budget: roughly how many kept
+    (post burn-in, thinned) draws to accumulate for this query across all
+    of its chains.  The engine may stop earlier on split-R̂ convergence,
+    and may overshoot — rounds are quantized, a micro-batched group runs
+    to its largest member's budget, and the engine's ``max_rounds`` caps
+    the total.  ``Result.n_samples`` reports what was actually kept.
+    ``query_vars`` empty means "all unobserved variables".
+    """
+
+    network: str
+    evidence: Mapping[str | int, int] = field(default_factory=dict)
+    query_vars: Sequence[str | int] = ()
+    n_samples: int = 8192
+
+    def pattern_of(self, bn) -> tuple[int, ...]:
+        """The evidence *pattern* (observed node ids, sorted) — the plan
+        cache key component; values are deliberately excluded."""
+        return tuple(sorted(bn.normalize_evidence(self.evidence)))
+
+
+@dataclass
+class Result:
+    """Answer to one :class:`Query`."""
+
+    query: Query
+    marginals: dict[str, np.ndarray]   # node name -> posterior P(v | e)
+    n_samples: int                     # kept draws actually accumulated
+    n_sweeps: int                      # total sweeps incl. burn-in
+    n_node_samples: int                # free-node RV draws spent (throughput)
+    rhat: float                        # worst split-R̂ over query vars
+    converged: bool
+    cache_hit: bool                    # plan served from the cache
+    wall_s: float                      # wall time of the micro-batch group
+    bits_per_sample: float = 0.0       # random bits per free-node draw
+
+    def marginal(self, var: str) -> np.ndarray:
+        try:
+            return self.marginals[var]
+        except KeyError:
+            raise KeyError(
+                f"{var!r} was not a query variable of this request "
+                f"(have: {sorted(self.marginals)})") from None

@@ -1,0 +1,62 @@
+"""Hypothesis import shim.
+
+The suite's property tests use a small slice of hypothesis
+(``st.integers``, ``st.lists``, ``@given``, ``@settings``).  When the
+real library is installed we re-export it untouched; otherwise a
+deterministic mini-runner stands in, drawing ``max_examples`` pseudo-
+random examples from the same strategies with a fixed seed — weaker than
+hypothesis (no shrinking, no example database) but it keeps the property
+tests meaningful in minimal environments instead of failing collection.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # pragma: no cover - exercised without hypothesis
+    import functools
+    import random
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(r):
+                n = r.randint(min_size, max_size)
+                return [elements.draw(r) for _ in range(n)]
+
+            return _Strategy(draw)
+
+    def settings(max_examples=10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0)
+                n = getattr(wrapper, "_max_examples", 10)
+                for _ in range(n):
+                    drawn = [s.draw(rng) for s in strategies]
+                    fn(*args, *drawn, **kwargs)
+
+            # pytest follows __wrapped__ when inspecting signatures and
+            # would treat the drawn parameters as missing fixtures.
+            del wrapper.__wrapped__
+            wrapper._max_examples = getattr(fn, "_max_examples", 10)
+            return wrapper
+
+        return deco
+
+__all__ = ["given", "settings", "st"]

@@ -26,8 +26,13 @@ from repro.configs.base import ShapeCfg
 
 
 def _smoke_batch(cfg, b=2, s=16):
-    batch = {"tokens": jnp.ones((b, s), jnp.int32),
-             "labels": jnp.ones((b, s), jnp.int32)}
+    # Varied tokens with labels != tokens: a constant batch whose label
+    # equals its input saturates the tied-embedding softmax (gold logit
+    # wins by >16 nats) and the xent gradient rounds to exactly 0 in
+    # fp32, which falsely fails the gradient-flow check on SSM archs.
+    k1, k2 = jax.random.split(jax.random.PRNGKey(42))
+    batch = {"tokens": jax.random.randint(k1, (b, s), 0, cfg.vocab, jnp.int32),
+             "labels": jax.random.randint(k2, (b, s), 0, cfg.vocab, jnp.int32)}
     if cfg.family == "vlm":
         batch["frontend"] = jnp.zeros((b, cfg.frontend_tokens, cfg.d_model),
                                       jnp.float32)

@@ -1,0 +1,187 @@
+"""Posterior query service: evidence-conditioned marginals vs exact
+enumeration, clamp invariance, plan-cache behaviour, CLI smoke."""
+import jax
+import numpy as np
+import pytest
+
+from repro.pgm import compile_bayesnet, init_states, make_sweep, networks, run_gibbs
+from repro.serve import (
+    PlanCache, PosteriorEngine, Query, parse_evidence, split_rhat)
+
+
+def _registry():
+    return {"sprinkler": networks.sprinkler(), "asia": networks.asia()}
+
+
+class TestEvidenceConditioning:
+    def test_clamped_node_never_changes(self):
+        """Evidence nodes are excluded from every gather plan, so a sweep
+        can never resample them — the clamp is structural, not masked."""
+        bn = networks.asia()
+        prog = compile_bayesnet(bn, observed=("smoke", "xray"))
+        for plan in prog.plans:
+            assert not (set(plan.nodes.tolist()) & set(prog.observed))
+        sweep = make_sweep(prog)
+        ev = np.array([[1, 0]] * 8, np.int32)
+        x = init_states(jax.random.PRNGKey(0), prog, 8, ev)
+        for i in range(20):
+            x, _ = sweep(jax.random.PRNGKey(i), x)
+        x = np.asarray(x)
+        assert (x[:, bn.index("smoke")] == 1).all()
+        assert (x[:, bn.index("xray")] == 0).all()
+
+    def test_run_gibbs_posterior_matches_enumeration(self):
+        bn = networks.sprinkler()
+        prog = compile_bayesnet(bn, observed=("wetgrass",))
+        _, counts, _ = run_gibbs(
+            jax.random.PRNGKey(0), prog, n_chains=256, n_sweeps=600,
+            burn_in=150, evidence=(1,))
+        marg = np.asarray(counts, np.float64)
+        marg /= marg.sum(-1, keepdims=True)
+        exact = bn.marginals_exact({"wetgrass": 1})
+        for v in prog.free_nodes:
+            assert np.abs(marg[v, :2] - exact[v]).max() < 0.03, bn.names[v]
+
+    def test_all_observed_rejected(self):
+        bn = networks.sprinkler()
+        with pytest.raises(ValueError):
+            compile_bayesnet(bn, observed=tuple(range(bn.n_nodes)))
+
+    def test_conditional_oracle_consistency(self):
+        """P(v) == sum_e P(v|e) P(e) — the oracle obeys total probability."""
+        bn = networks.sprinkler()
+        prior = bn.marginals_exact()
+        w = bn.marginals_exact()[3]  # P(wetgrass)
+        mixed = sum(
+            w[e] * bn.marginals_exact({"wetgrass": e})[2] for e in (0, 1))
+        assert np.abs(mixed - prior[2]).max() < 1e-9
+
+
+class TestEngine:
+    def test_sprinkler_posterior_matches_enumeration(self):
+        eng = PosteriorEngine(_registry(), chains_per_query=64, burn_in=64)
+        res = eng.answer(Query("sprinkler", {"wetgrass": 1},
+                               ("rain", "sprinkler"), n_samples=32768))
+        exact = networks.sprinkler().marginals_exact({"wetgrass": 1})
+        assert np.abs(res.marginal("rain") - exact[2]).max() < 0.03
+        assert np.abs(res.marginal("sprinkler") - exact[1]).max() < 0.03
+        assert res.converged and res.rhat < 1.05
+
+    def test_asia_posterior_matches_enumeration(self):
+        eng = PosteriorEngine(_registry(), chains_per_query=64,
+                              burn_in=256, sweeps_per_round=64)
+        res = eng.answer(Query("asia", {"smoke": 1, "dysp": 1},
+                               ("bronc", "lung"), n_samples=300_000))
+        exact = networks.asia().marginals_exact({"smoke": 1, "dysp": 1})
+        bn = networks.asia()
+        assert np.abs(res.marginal("bronc") - exact[bn.index("bronc")]).max() < 0.04
+        assert np.abs(res.marginal("lung") - exact[bn.index("lung")]).max() < 0.04
+
+    def test_batch_mixed_patterns_and_networks(self):
+        """One batch spanning two networks and two evidence patterns comes
+        back in request order with per-query evidence respected."""
+        eng = PosteriorEngine(_registry(), chains_per_query=32, burn_in=32)
+        qs = [
+            Query("sprinkler", {"wetgrass": 1}, ("rain",), n_samples=16384),
+            Query("asia", {"smoke": 0}, ("bronc",), n_samples=8192),
+            Query("sprinkler", {"wetgrass": 0}, ("rain",), n_samples=16384),
+        ]
+        res = eng.answer_batch(qs)
+        assert [r.query is q for r, q in zip(res, qs)] == [True] * 3
+        spr = networks.sprinkler()
+        e1 = spr.marginals_exact({"wetgrass": 1})[2]
+        e0 = spr.marginals_exact({"wetgrass": 0})[2]
+        assert np.abs(res[0].marginal("rain") - e1).max() < 0.04
+        assert np.abs(res[2].marginal("rain") - e0).max() < 0.04
+        # the two sprinkler queries share a pattern -> same compiled plan
+        assert eng.cache.stats.misses == 2  # one per (network, pattern) pair
+
+    def test_query_var_cannot_be_observed(self):
+        eng = PosteriorEngine(_registry())
+        with pytest.raises(ValueError):
+            eng.answer(Query("sprinkler", {"rain": 1}, ("rain",)))
+
+    def test_unknown_network_rejected(self):
+        with pytest.raises(KeyError):
+            PosteriorEngine({}).answer(Query("nope", {}, ()))
+
+    def test_split_rhat_behaviour(self):
+        rng = np.random.default_rng(0)
+        mixed = rng.normal(0.5, 0.1, (8, 32))
+        assert split_rhat(mixed) < 1.1
+        stuck = np.concatenate(
+            [np.full((4, 32), 0.1), np.full((4, 32), 0.9)])
+        stuck += rng.normal(0, 1e-3, stuck.shape)
+        assert split_rhat(stuck) > 2.0
+        assert split_rhat(np.full((4, 8), 0.3)) == 1.0
+        assert split_rhat(np.zeros((4, 2))) == float("inf")  # too few rounds
+
+
+class TestPlanCache:
+    def test_hit_miss_and_eviction(self):
+        cache = PlanCache(capacity=2)
+        a, hit = cache.get("a", lambda: "A")
+        assert (a, hit) == ("A", False)
+        a, hit = cache.get("a", lambda: "A2")
+        assert (a, hit) == ("A", True)  # no rebuild on hit
+        cache.get("b", lambda: "B")
+        cache.get("c", lambda: "C")  # evicts "a" (LRU)
+        _, hit = cache.get("a", lambda: "A3")
+        assert not hit
+        assert cache.stats.hits == 1 and cache.stats.evictions == 2
+
+    def test_same_pattern_hits_different_pattern_misses(self):
+        eng = PosteriorEngine(_registry(), chains_per_query=8,
+                              burn_in=16, max_rounds=4)
+        eng.answer(Query("sprinkler", {"wetgrass": 1}, ("rain",),
+                         n_samples=256))
+        assert eng.cache.stats.misses == 1
+        # same pattern, different observed value -> hit, no recompile
+        eng.answer(Query("sprinkler", {"wetgrass": 0}, ("rain",),
+                         n_samples=256))
+        assert (eng.cache.stats.hits, eng.cache.stats.misses) == (1, 1)
+        # different pattern -> miss
+        eng.answer(Query("sprinkler", {"cloudy": 1}, ("rain",),
+                         n_samples=256))
+        assert (eng.cache.stats.hits, eng.cache.stats.misses) == (1, 2)
+
+    def test_reregister_invalidates_cached_plans(self):
+        """Replacing a network must not keep serving its old CPTs."""
+        eng = PosteriorEngine(_registry(), chains_per_query=8,
+                              burn_in=16, max_rounds=4)
+        eng.answer(Query("sprinkler", {"wetgrass": 1}, ("rain",),
+                         n_samples=256))
+        assert len(eng.cache) == 1
+        eng.register("sprinkler", networks.sprinkler())  # fresh object
+        assert len(eng.cache) == 0
+        eng.register("asia", eng.networks["asia"])  # same object -> no-op
+        # re-registering did not clear unrelated stats bookkeeping
+        eng.answer(Query("sprinkler", {"wetgrass": 1}, ("rain",),
+                         n_samples=256))
+        assert eng.cache.stats.misses == 2
+
+
+class TestParseEvidence:
+    def test_parse_and_errors(self):
+        assert parse_evidence("smoke=1,dysp=0") == {"smoke": 1, "dysp": 0}
+        assert parse_evidence("") == {}
+        with pytest.raises(ValueError):
+            parse_evidence("smoke")
+        with pytest.raises(ValueError):
+            parse_evidence("smoke=yes")
+
+
+class TestServeCLI:
+    @pytest.mark.slow
+    def test_cli_smoke(self, tmp_path):
+        from conftest import run_subprocess
+
+        code = (
+            "from repro.serve.cli import main\n"
+            "main(['--network', 'sprinkler', '--queries', '6',\n"
+            "      '--patterns', '2', '--chains', '8', '--budget', '512',\n"
+            "      '--burn-in', '16', '--show', '1'])\n"
+        )
+        rc, out = run_subprocess(code)
+        assert rc == 0, out
+        assert "warm/cold speedup" in out and "queries/s" in out
