@@ -8,15 +8,17 @@ import numpy as np
 
 from benchmarks.common import row, time_call
 from repro.pgm import networks
-from repro.pgm.compile import compile_bayesnet, run_gibbs
+from repro.pgm.compile import (
+    _run_gibbs_device, compile_bayesnet, sum_sweep_stats)
 
 
 def run(name, bn, chains=128, sweeps=150, burn=50, oracle=None, report=print):
     prog = compile_bayesnet(bn)
-    fn = jax.jit(lambda k: run_gibbs(k, prog, n_chains=chains,
-                                     n_sweeps=sweeps, burn_in=burn))
+    fn = jax.jit(lambda k: _run_gibbs_device(k, prog, n_chains=chains,
+                                             n_sweeps=sweeps, burn_in=burn))
     dt = time_call(fn, jax.random.PRNGKey(0), warmup=1, iters=3)
-    _, counts, stats = fn(jax.random.PRNGKey(0))
+    _, counts, per_sweep = fn(jax.random.PRNGKey(0))
+    stats = sum_sweep_stats(per_sweep)
     n_samples = chains * sweeps * bn.n_nodes
     bits = float(stats.bits_used) / n_samples
     err = ""

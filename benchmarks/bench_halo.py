@@ -15,15 +15,15 @@ _CODE = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
 import jax, re, json
+from repro.launch.mesh import make_pgm_mesh
 from repro.pgm.networks import penguin_task
 from repro.pgm.mesh_gibbs import make_mesh_gibbs_step, shard_mrf
-mesh = jax.make_mesh((4,4), ("row","col"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_pgm_mesh(4, 4)
 mrf, _ = penguin_task(h=100, w=68)
 key = jax.random.PRNGKey(0)
-lab, u, pw, _ = shard_mrf(mesh, mrf, n_chains=4, key=key)
+lab, u, pw, valid, _ = shard_mrf(mesh, mrf, n_chains=4, key=key)
 def cbytes(step):
-    txt = jax.jit(step).lower(key, lab, u, pw).compile().as_text()
+    txt = jax.jit(step).lower(key, lab, u, pw, valid).compile().as_text()
     tot = 0
     for line in txt.splitlines():
         for p in ("all-gather(", "all-gather-start", "collective-permute(",

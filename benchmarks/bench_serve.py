@@ -2,20 +2,40 @@
 
 Measures what a serving stack cares about: queries/s and MSample/s for a
 cold plan cache (compiler chain + XLA compile on the critical path) vs a
-warm one (pure sampling), plus the cache hit rate.  Traffic cycles a
-small set of evidence patterns, as repeat sensor traffic does — the
-regime the (network, evidence-pattern) plan cache is designed for.
+warm one (pure sampling), plus bits/sample and the cache hit rate.
+Traffic cycles a small set of evidence patterns, as repeat sensor
+traffic does — the regime the (network, evidence-pattern) plan cache is
+designed for.
+
+Invocation forms:
+
+  PYTHONPATH=src:. python -m benchmarks.bench_serve                # CSV rows
+  PYTHONPATH=src:. python -m benchmarks.bench_serve --smoke \\
+      --json BENCH_serve.json                                      # CI smoke
+  PYTHONPATH=src:. python -m benchmarks.bench_serve \\
+      --force-host-devices 4 --mesh-shape 4                        # sharded
+  PYTHONPATH=src:. python -m benchmarks.bench_serve --scaling 1,2,4,8 \\
+      --json BENCH_serve.json                  # device-scaling subprocesses
+
+``--json`` emits a machine-readable report (queries/s, MSample/s,
+bits/sample, cold/warm, and — with ``--scaling`` — per-device-count
+throughput from forced-host subprocesses) so CI can track the perf
+trajectory; ``-`` writes it to stdout.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
 
 from benchmarks.common import row
-from repro.pgm import networks
-from repro.serve.cli import synthetic_traffic
-from repro.serve.engine import PosteriorEngine
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _pass(engine, traffic):
@@ -27,15 +47,21 @@ def _pass(engine, traffic):
 
 
 def run(name, network, *, n_queries=32, n_patterns=3, budget=2048,
-        chains=16, report=print):
+        chains=16, mesh=None, report=print):
+    """Cold + warm pass over one network's traffic; returns metrics."""
+    from repro.pgm import networks
+    from repro.serve.cli import synthetic_traffic
+    from repro.serve.engine import PosteriorEngine
+
     bn = getattr(networks, network)()
     traffic = synthetic_traffic(
         bn, network, n_queries, n_patterns, np.random.default_rng(0), budget)
     engine = PosteriorEngine({network: bn}, chains_per_query=chains,
-                             burn_in=32)
+                             burn_in=32, mesh=mesh)
     cold_dt, cold_samples, _ = _pass(engine, traffic)
     warm_dt, warm_samples, results = _pass(engine, traffic)
     conv = sum(r.converged for r in results)
+    bits = float(np.mean([r.bits_per_sample for r in results]))
     s = engine.cache.stats
     report(row(
         f"serve_{name}_cold", cold_dt / n_queries * 1e6,
@@ -45,12 +71,111 @@ def run(name, network, *, n_queries=32, n_patterns=3, budget=2048,
         f"qps={n_queries/warm_dt:.2f};MSample/s={warm_samples/warm_dt/1e6:.3f};"
         f"speedup={cold_dt/warm_dt:.1f}x;hit_rate={s.hit_rate:.2f};"
         f"converged={conv}/{n_queries}"))
+    return {
+        "name": name,
+        "network": network,
+        "n_queries": n_queries,
+        "cold": {"wall_s": cold_dt, "queries_per_s": n_queries / cold_dt,
+                 "msample_per_s": cold_samples / cold_dt / 1e6},
+        "warm": {"wall_s": warm_dt, "queries_per_s": n_queries / warm_dt,
+                 "msample_per_s": warm_samples / warm_dt / 1e6},
+        "bits_per_sample": bits,
+        "cache_hit_rate": s.hit_rate,
+        "converged": conv,
+    }
 
 
-def main(report=print):
-    run("asia_8n", "asia", report=report)
-    run("child_scale_20n", "child_scale", n_queries=16, report=report)
+def main(report=print, *, smoke=False, mesh_shape=None):
+    """Benchmark-harness entry point; returns the JSON-able report."""
+    mesh = None
+    n_devices = 1
+    if mesh_shape is not None:
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh(mesh_shape)
+        n_devices = int(mesh.devices.size)
+        report(f"# serve mesh {dict(mesh.shape)} over {n_devices} devices")
+    kw = dict(mesh=mesh, report=report)
+    if smoke:
+        runs = [run("asia_8n", "asia", n_queries=8, budget=512, chains=8,
+                    **kw)]
+    else:
+        runs = [run("asia_8n", "asia", **kw),
+                run("child_scale_20n", "child_scale", n_queries=16, **kw)]
+    return {"suite": "serve", "n_devices": n_devices,
+            "mesh_shape": None if mesh_shape is None else list(mesh_shape),
+            "runs": runs}
+
+
+def scaling(device_counts, *, smoke=True, report=print):
+    """Device-scaling report: re-run this module in forced-host
+    subprocesses (XLA device count is fixed at backend init, so each
+    point needs a fresh interpreter) and collect queries/s + MSample/s
+    per device count."""
+    out = []
+    from repro.launch.mesh import force_host_devices
+
+    for n in device_counts:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = (
+            _REPO + os.pathsep + os.path.join(_REPO, "src") + os.pathsep
+            + env.get("PYTHONPATH", ""))
+        force_host_devices(n, env)
+        cmd = [sys.executable, "-m", "benchmarks.bench_serve",
+               "--mesh-shape", str(n), "--json", "-"]
+        if smoke:
+            cmd.append("--smoke")
+        p = subprocess.run(cmd, env=env, cwd=_REPO, capture_output=True,
+                           text=True, timeout=1800)
+        if p.returncode != 0:
+            raise RuntimeError(f"scaling point n={n} failed:\n{p.stderr}")
+        rep = json.loads(
+            [l for l in p.stdout.splitlines() if l.startswith("{")][-1])
+        warm = rep["runs"][0]["warm"]
+        out.append({"devices": n,
+                    "queries_per_s": warm["queries_per_s"],
+                    "msample_per_s": warm["msample_per_s"]})
+        report(row(f"serve_scaling_{n}dev", 1e6 / max(warm["queries_per_s"], 1e-9),
+                   f"qps={warm['queries_per_s']:.2f};"
+                   f"MSample/s={warm['msample_per_s']:.3f}"))
+    return out
+
+
+def _cli(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="single small network (fast CI datapoint)")
+    ap.add_argument("--json", default="",
+                    help="write a machine-readable report here ('-' = stdout)")
+    ap.add_argument("--mesh-shape", default="",
+                    help="serve mesh, e.g. 4 or 2x2")
+    ap.add_argument("--scaling", default="",
+                    help="comma-separated forced-host device counts, "
+                         "e.g. 1,2,4,8 — runs one subprocess per count")
+    ap.add_argument("--force-host-devices", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.force_host_devices:
+        from repro.launch.mesh import force_host_devices
+        force_host_devices(args.force_host_devices)
+
+    mesh_shape = None
+    if args.mesh_shape:
+        from repro.launch.mesh import parse_mesh_shape
+        mesh_shape = parse_mesh_shape(args.mesh_shape)
+
+    rep = main(smoke=args.smoke, mesh_shape=mesh_shape)
+    if args.scaling:
+        counts = [int(s) for s in args.scaling.split(",") if s]
+        # scaling points are always smoke-sized: one datapoint per device
+        # count, each paying its own interpreter + XLA compile
+        rep["scaling"] = scaling(counts, smoke=True)
+    if args.json == "-":
+        print(json.dumps(rep))
+    elif args.json:
+        with open(args.json, "w") as f:
+            json.dump(rep, f, indent=2)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":
-    main()
+    _cli()

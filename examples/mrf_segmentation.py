@@ -35,17 +35,18 @@ print(f"Penguin-like segmentation: {h}x{w}, L=2, {args.sweeps} sweeps")
 
 t0 = time.time()
 if args.mesh:
+    from repro.launch.mesh import make_pgm_mesh
+
     r, c = (int(x) for x in args.mesh.split("x"))
-    mesh = jax.make_mesh((r, c), ("row", "col"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_pgm_mesh(r, c)
     key = jax.random.PRNGKey(0)
-    lab, u, pw, _ = shard_mrf(mesh, mrf, n_chains=2, key=key)
+    lab, u, pw, valid, _ = shard_mrf(mesh, mrf, n_chains=2, key=key)
     step = make_mesh_gibbs_step(mesh)
     bits = 0
     for i in range(args.sweeps):
         key, sub = jax.random.split(key)
-        lab, b = step(sub, lab, u, pw)
-        bits += int(b)
+        lab, bgrid = step(sub, lab, u, pw, valid)
+        bits += int(np.asarray(bgrid, np.int64).sum())
     final = np.asarray(lab)[0][:h, :w]
     mode = f"{r}x{c} mesh halo-exchange"
 else:

@@ -115,19 +115,19 @@ def main() -> None:
     print(f"{cfg.name}: {h}x{w}, L={mrf.n_labels}")
 
     if args.mesh:
+        from repro.launch.mesh import make_pgm_mesh
+
         rows, cols = (int(x) for x in args.mesh.split("x"))
-        mesh = jax.make_mesh((rows, cols), ("row", "col"),
-                             devices=jax.devices()[: rows * cols],
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_pgm_mesh(rows, cols)
         key = jax.random.PRNGKey(0)
-        lab, u, pw, _ = shard_mrf(mesh, mrf, n_chains=chains, key=key)
+        lab, u, pw, valid, _ = shard_mrf(mesh, mrf, n_chains=chains, key=key)
         step = make_mesh_gibbs_step(mesh, k=cfg.k, use_iu=use_iu)
         t0 = time.time()
         bits = 0
         for i in range(sweeps):
             key, sub = jax.random.split(key)
-            lab, b = step(sub, lab, u, pw)
-            bits += int(b)
+            lab, bgrid = step(sub, lab, u, pw, valid)
+            bits += int(np.asarray(bgrid, np.int64).sum())
         jax.block_until_ready(lab)
         dt = time.time() - t0
         final = np.asarray(lab)[0][:h, :w]

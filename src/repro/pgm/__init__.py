@@ -1,7 +1,8 @@
 """PGM substrate: model IR, coloring, compiler chain, Gibbs engines."""
 from repro.pgm.coloring import checkerboard, color_bayesnet, dsatur, verify_coloring
 from repro.pgm.compile import (
-    CompiledBN, compile_bayesnet, init_states, make_sweep, run_gibbs)
+    BNSweepStats, CompiledBN, compile_bayesnet, init_states, make_sweep,
+    run_gibbs, sum_sweep_stats)
 from repro.pgm.gibbs import checkerboard_halfstep, init_labels, mrf_gibbs
 from repro.pgm.graph import BayesNet, MRFGrid
 from repro.pgm.mesh_gibbs import make_mesh_gibbs_step, pad_mrf, shard_mrf
@@ -9,7 +10,8 @@ from repro.pgm import networks
 
 __all__ = [
     "checkerboard", "color_bayesnet", "dsatur", "verify_coloring",
-    "CompiledBN", "compile_bayesnet", "init_states", "make_sweep", "run_gibbs",
+    "BNSweepStats", "CompiledBN", "compile_bayesnet", "init_states",
+    "make_sweep", "run_gibbs", "sum_sweep_stats",
     "checkerboard_halfstep", "init_labels", "mrf_gibbs",
     "BayesNet", "MRFGrid", "make_mesh_gibbs_step", "pad_mrf", "shard_mrf",
     "networks",

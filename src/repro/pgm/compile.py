@@ -180,8 +180,29 @@ def compile_bayesnet(
 
 
 class BNSweepStats(NamedTuple):
+    """Random-bit accounting of a sweep program.
+
+    Device code only ever holds *per-sweep* int32 values (a single sweep
+    cannot overflow int32 for any realistic lane count); totals across
+    sweeps are accumulated host-side in int64 via :func:`sum_sweep_stats`
+    — int32 carries silently wrapped on long runs, yielding negative
+    bits-per-sample in benchmarks.
+    """
+
     bits_used: jax.Array
     attempts: jax.Array
+
+
+def sum_sweep_stats(stats: "BNSweepStats") -> "BNSweepStats":
+    """Overflow-safe host-side total of per-sweep stats arrays.
+
+    Sums in np.int64, so totals beyond 2**31 (trivially reached by
+    lanes × nodes × sweeps × ~5 bits on long runs) stay exact.
+    """
+    return BNSweepStats(
+        bits_used=np.asarray(stats.bits_used, np.int64).sum(),
+        attempts=np.asarray(stats.attempts, np.int64).sum(),
+    )
 
 
 def _color_update(
@@ -270,6 +291,49 @@ def init_states(
 
 
 @partial(jax.jit, static_argnames=("prog", "n_sweeps", "n_chains", "burn_in", "use_iu"))
+def _run_gibbs_device(
+    key: jax.Array,
+    prog: CompiledBN,
+    *,
+    n_chains: int,
+    n_sweeps: int,
+    burn_in: int,
+    use_iu: bool = True,
+    evidence=None,
+):
+    """Jitted Gibbs scan; stats are *per-sweep* (n_sweeps,) int32 arrays.
+
+    The scan carry deliberately does not accumulate bits/attempts: an
+    int32 running total wraps on long runs (see :class:`BNSweepStats`).
+    Each sweep's contribution is emitted as a scan output instead and
+    totalled host-side by :func:`run_gibbs`.
+    """
+    n = prog.bn.n_nodes
+    key, init_key = jax.random.split(key)
+    x0 = init_states(
+        init_key, prog, n_chains,
+        None if evidence is None else jnp.asarray(evidence, jnp.int32))
+    log_cpt = jnp.asarray(prog.log_cpt)
+
+    def body(carry, i):
+        key, x, counts = carry
+        key, sub = jax.random.split(key)
+        bits, att = jnp.int32(0), jnp.int32(0)
+        for plan in prog.plans:
+            sub, s2 = jax.random.split(sub)
+            x, st = _color_update(
+                s2, x, plan, log_cpt, prog.max_card, prog.k, use_iu)
+            bits, att = bits + st.bits_used, att + st.attempts
+        onehot = (x[..., None] == jnp.arange(prog.max_card)[None, None]).astype(jnp.int32)
+        counts = counts + jnp.where(i >= burn_in, jnp.sum(onehot, axis=0), 0)
+        return (key, x, counts), BNSweepStats(bits, att)
+
+    counts0 = jnp.zeros((n, prog.max_card), jnp.int32)
+    (key, x, counts), per_sweep = jax.lax.scan(
+        body, (key, x0, counts0), jnp.arange(n_sweeps))
+    return x, counts, per_sweep
+
+
 def run_gibbs(
     key: jax.Array,
     prog: CompiledBN,
@@ -283,35 +347,19 @@ def run_gibbs(
     """Run BN Gibbs; returns (final_states, marginal_counts, stats).
 
     marginal_counts: (n_nodes, max_card) int32 accumulated after burn-in.
-    ``evidence``: values for ``prog.observed`` (same order); required iff
-    the program was compiled with an evidence pattern.  Deliberately a
-    *traced* argument: one compiled program serves any values over its
-    pattern — changing them must not retrace.
+    ``stats``: int64 host scalars (per-sweep device stats summed without
+    int32 wraparound).  ``evidence``: values for ``prog.observed`` (same
+    order); required iff the program was compiled with an evidence
+    pattern.  Deliberately a *traced* argument of the underlying jit: one
+    compiled program serves any values over its pattern — changing them
+    must not retrace.  Because totals materialize on the host, wrap this
+    function's *device* half (``_run_gibbs_device``) if you need to call
+    it under an outer ``jax.jit``.
     """
-    n = prog.bn.n_nodes
-    key, init_key = jax.random.split(key)
-    x0 = init_states(
-        init_key, prog, n_chains,
-        None if evidence is None else jnp.asarray(evidence, jnp.int32))
-    log_cpt = jnp.asarray(prog.log_cpt)
-
-    def body(carry, i):
-        key, x, counts, bits, att = carry
-        key, sub = jax.random.split(key)
-        for plan in prog.plans:
-            sub, s2 = jax.random.split(sub)
-            x, st = _color_update(
-                s2, x, plan, log_cpt, prog.max_card, prog.k, use_iu)
-            bits, att = bits + st.bits_used, att + st.attempts
-        onehot = (x[..., None] == jnp.arange(prog.max_card)[None, None]).astype(jnp.int32)
-        counts = counts + jnp.where(i >= burn_in, jnp.sum(onehot, axis=0), 0)
-        return (key, x, counts, bits, att), None
-
-    counts0 = jnp.zeros((n, prog.max_card), jnp.int32)
-    (key, x, counts, bits, att), _ = jax.lax.scan(
-        body, (key, x0, counts0, jnp.int32(0), jnp.int32(0)),
-        jnp.arange(n_sweeps))
-    return x, counts, BNSweepStats(bits, att)
+    x, counts, per_sweep = _run_gibbs_device(
+        key, prog, n_chains=n_chains, n_sweeps=n_sweeps, burn_in=burn_in,
+        use_iu=use_iu, evidence=evidence)
+    return x, counts, sum_sweep_stats(per_sweep)
 
 
 _EXP = exp_table()

@@ -14,8 +14,15 @@ the baseline moves `(H·W − ht·wt)·4B` through the all-gather — the
 benchmark reports the measured HLO collective bytes for both (the 3×
 memory-read reduction analogue of Fig. 3b).
 
+Grids whose H or W is not a tile multiple are padded; pad sites are
+pinned to label 0 by their unary term *and* masked out of their real
+neighbours' pairwise sums via the validity mask that `pad_mrf` /
+`shard_mrf` produce (see `pad_mrf` for why the mask is load-bearing).
+
 Devices: this module is mesh-agnostic; tests exercise it in a subprocess
-with `--xla_force_host_platform_device_count`.
+with `--xla_force_host_platform_device_count`.  `shard_map` is resolved
+from `jax.shard_map` with a fallback to `jax.experimental.shard_map` so
+the module also runs on older jax (0.4.x) installs.
 """
 from __future__ import annotations
 
@@ -32,6 +39,14 @@ from repro.core.interp import exp_table
 from repro.core.ky import ky_sample
 from repro.pgm.graph import MRFGrid
 
+try:
+    _shard_map = jax.shard_map
+    _SHARD_MAP_KW: dict = {}
+except AttributeError:  # pragma: no cover - jax < 0.6
+    from jax.experimental.shard_map import shard_map as _shard_map
+    # the old replication checker has no rule for while_loop (ky_sample)
+    _SHARD_MAP_KW = {"check_rep": False}
+
 _EXP = exp_table()
 
 
@@ -42,28 +57,41 @@ class MeshMRF(NamedTuple):
     w: int
 
 
-def pad_mrf(mrf: MRFGrid, nr: int, nc: int) -> tuple[np.ndarray, np.ndarray, int, int]:
-    """Pad unary to tile multiples with huge label-0 preference (dummy sites
-    pinned to label 0 contribute a constant factor and never flip)."""
+def pad_mrf(
+    mrf: MRFGrid, nr: int, nc: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, int, int]:
+    """Pad unary to tile multiples; returns (unary, pairwise, valid, H', W').
+
+    Pad (dummy) sites are pinned to label 0 by a huge unary penalty on
+    every other label, and ``valid`` — True exactly on the true H×W
+    extent — masks them out of their neighbours' pairwise sums.  The
+    pinning alone is NOT enough: pad sites sit adjacent to real boundary
+    sites, so without the mask they inject label-0 pairwise energy into
+    rows h-1 / cols w-1 and bias the marginals whenever H or W is not a
+    tile multiple.
+    """
     h, w = mrf.shape
     hp, wp = -h % nr, -w % nc
     unary = np.pad(mrf.unary, ((0, hp), (0, wp), (0, 0)))
     if hp or wp:
         unary[h:, :, 1:] = 1e6
         unary[:, w:, 1:] = 1e6
-    return unary, mrf.pairwise, h + hp, w + wp
+    valid = np.zeros((h + hp, w + wp), bool)
+    valid[:h, :w] = True
+    return unary, mrf.pairwise, valid, h + hp, w + wp
 
 
-def _halo_exchange(tile: jax.Array, row_axis: str, col_axis: str):
+def _halo_exchange(tile: jax.Array, row_axis: str, col_axis: str,
+                   nr: int, nc: int) -> jax.Array:
     """Collect N/S/E/W one-site halos of a (B, ht, wt) int32 tile.
 
-    Returns padded (B, ht+2, wt+2) labels and a validity mask for the
-    halo ring (False at the global boundary).
+    ``nr``/``nc`` are the static mesh axis sizes (the ppermute pairs need
+    concrete indices; ``jax.lax.axis_size`` is also absent on jax 0.4.x).
+    Returns the padded (B, ht+2, wt+2) labels; which halo entries are
+    *meaningful* is the caller's precomputed validity mask's business
+    (:func:`blocked_validity` covers both the global boundary and pad
+    sites).
     """
-    nr = jax.lax.axis_size(row_axis)
-    nc = jax.lax.axis_size(col_axis)
-    r = jax.lax.axis_index(row_axis)
-    c = jax.lax.axis_index(col_axis)
 
     def shift(x, axis_name, n, d):
         # receive from neighbour at index (i - d); edge devices get zeros
@@ -82,15 +110,7 @@ def _halo_exchange(tile: jax.Array, row_axis: str, col_axis: str):
     padded = padded.at[:, -1, 1:-1].set(south[:, 0])
     padded = padded.at[:, 1:-1, 0].set(west[:, :, 0])
     padded = padded.at[:, 1:-1, -1].set(east[:, :, 0])
-
-    valid = jnp.ones((ht + 2, wt + 2), bool)
-    valid = valid.at[0, :].set(r > 0)
-    valid = valid.at[-1, :].set(r < nr - 1)
-    valid = valid.at[:, 0].set(c > 0)
-    valid = valid.at[:, -1].set(c < nc - 1)
-    valid = valid.at[0, 0].set(False).at[0, -1].set(False)
-    valid = valid.at[-1, 0].set(False).at[-1, -1].set(False)
-    return padded, valid
+    return padded
 
 
 def _tile_energies(padded, valid, unary_tile, pairwise):
@@ -121,34 +141,47 @@ def make_mesh_gibbs_step(
     use_iu: bool = True,
     comm: str = "halo",  # "halo" (C3) | "allgather" (global-buffer baseline)
 ):
-    """Build the jitted distributed full-sweep fn (key, labels, unary, pw)."""
+    """Build the jitted distributed full-sweep fn.
+
+    Signature: ``(key, labels, unary, pairwise, valid) -> (labels, bits)``
+    with ``valid`` the *blocked padded* validity mask from
+    :func:`shard_mrf`: each device's (ht+2, wt+2) tile already combines
+    the global-boundary halo ring with the true-H×W extent, precomputed
+    host-side — it is static data, so it costs no per-sweep collective.
+    ``bits`` is a per-device (nr, nc) int32 grid of random bits spent by
+    *real* (non-pad) sites this sweep — sum it host-side in int64
+    (``np.asarray(bits, np.int64).sum()``); the old cross-mesh int32
+    ``psum`` silently wrapped on large grids / long accumulations.
+    """
     nr, nc = mesh.shape[row_axis], mesh.shape[col_axis]
 
-    def body(key, labels, unary_tile, pairwise):
+    def body(key, labels, unary_tile, pairwise, pvalid):
         r = jax.lax.axis_index(row_axis)
         c = jax.lax.axis_index(col_axis)
         key = jax.random.fold_in(key, r * nc + c)
         b, ht, wt = labels.shape
         l = unary_tile.shape[-1]
         row0, col0 = r * ht, c * wt
+        # Neighbour validity masks pad sites out of real boundary sites'
+        # pairwise sums (see pad_mrf); its interior is the tile's own
+        # update/stats mask.
+        valid_tile = pvalid[1:-1, 1:-1]
+
+        def gather(tile):
+            """(B, ht, wt) tile -> halo-padded (B, ht+2, wt+2) labels."""
+            if comm == "halo":
+                return _halo_exchange(tile, row_axis, col_axis, nr, nc)
+            full = jax.lax.all_gather(tile, row_axis, axis=1, tiled=True)
+            full = jax.lax.all_gather(full, col_axis, axis=2, tiled=True)
+            hg, wg = nr * ht, nc * wt
+            padded = jnp.zeros((tile.shape[0], hg + 2, wg + 2), tile.dtype)
+            padded = padded.at[:, 1:-1, 1:-1].set(full)
+            return jax.lax.dynamic_slice(
+                padded, (0, row0, col0), (tile.shape[0], ht + 2, wt + 2))
 
         def halfstep(labels, parity, subkey):
-            if comm == "halo":
-                padded, valid = _halo_exchange(labels, row_axis, col_axis)
-            else:
-                full = jax.lax.all_gather(labels, row_axis, axis=1, tiled=True)
-                full = jax.lax.all_gather(full, col_axis, axis=2, tiled=True)
-                hg, wg = nr * ht, nc * wt
-                padded = jnp.zeros((b, hg + 2, wg + 2), labels.dtype)
-                padded = padded.at[:, 1:-1, 1:-1].set(full)
-                padded = jax.lax.dynamic_slice(
-                    padded, (0, row0, col0), (b, ht + 2, wt + 2))
-                valid = jnp.ones((ht + 2, wt + 2), bool)
-                valid = valid.at[0, :].set(r > 0).at[-1, :].set(r < nr - 1)
-                vc = valid[:, 0] & (c > 0)
-                valid = valid.at[:, 0].set(vc)
-                valid = valid.at[:, -1].set(valid[:, -1] & (c < nc - 1))
-            e = _tile_energies(padded, valid, unary_tile, pairwise)
+            padded = gather(labels)
+            e = _tile_energies(padded, pvalid, unary_tile, pairwise)
             z = e - jnp.min(e, axis=-1, keepdims=True)
             y = _EXP(-z) if use_iu else jnp.exp(-z)
             wts = jnp.floor(y * (2.0 ** k - 1.0)).astype(jnp.int32)
@@ -156,34 +189,69 @@ def make_mesh_gibbs_step(
             new = res.sample.reshape((b, ht, wt))
             gi = row0 + jnp.arange(ht)[:, None]
             gj = col0 + jnp.arange(wt)[None, :]
-            mask = ((gi + gj) % 2) == parity
+            # pad sites neither update nor count toward bit accounting
+            mask = (((gi + gj) % 2) == parity) & valid_tile
             return jnp.where(mask[None], new, labels), jnp.sum(
                 jnp.where(mask[None], res.bits_used.reshape((b, ht, wt)), 0))
 
         k0, k1 = jax.random.split(key)
         labels, bits0 = halfstep(labels, 0, k0)
         labels, bits1 = halfstep(labels, 1, k1)
-        bits = jax.lax.psum(bits0 + bits1, (row_axis, col_axis))
-        return labels, bits
+        # per-device int32 is tile-local and safe; the global total is the
+        # caller's int64 sum of the (nr, nc) grid
+        return labels, (bits0 + bits1).reshape(1, 1)
 
-    mapped = jax.shard_map(
+    mapped = _shard_map(
         body,
         mesh=mesh,
-        in_specs=(P(), P(None, row_axis, col_axis), P(row_axis, col_axis, None), P()),
-        out_specs=(P(None, row_axis, col_axis), P()),
+        in_specs=(P(), P(None, row_axis, col_axis),
+                  P(row_axis, col_axis, None), P(), P(row_axis, col_axis)),
+        out_specs=(P(None, row_axis, col_axis), P(row_axis, col_axis)),
+        **_SHARD_MAP_KW,
     )
     return jax.jit(mapped)
 
 
+def blocked_validity(valid: np.ndarray, nr: int, nc: int) -> np.ndarray:
+    """Per-tile padded validity masks, blocked for P(row, col) sharding.
+
+    From the (H', W') extent mask, build a (nr*(ht+2), nc*(wt+2)) array
+    whose (r, c) block is tile (r, c)'s halo-padded mask: the tile's own
+    sites plus its one-site neighbour ring, False outside the global
+    lattice and on pad sites.  Static data — computing it here (host,
+    once) keeps the per-sweep step free of a mask exchange collective.
+    """
+    hp, wp = valid.shape
+    ht, wt = hp // nr, wp // nc
+    g = np.zeros((hp + 2, wp + 2), bool)
+    g[1:-1, 1:-1] = valid
+    out = np.zeros((nr * (ht + 2), nc * (wt + 2)), bool)
+    for r in range(nr):
+        for c in range(nc):
+            out[r * (ht + 2):(r + 1) * (ht + 2),
+                c * (wt + 2):(c + 1) * (wt + 2)] = (
+                g[r * ht:r * ht + ht + 2, c * wt:c * wt + wt + 2])
+    return out
+
+
 def shard_mrf(mesh: Mesh, mrf: MRFGrid, n_chains: int, key: jax.Array,
               row_axis: str = "row", col_axis: str = "col"):
-    """Pad + device_put the MRF and an initial label field onto the mesh."""
+    """Pad + device_put the MRF, its validity mask, and an initial label
+    field onto the mesh; returns ``(labels, unary, pairwise, valid, (H', W'))``.
+
+    ``valid`` is the blocked per-tile padded mask from
+    :func:`blocked_validity` — pass it straight to the step function
+    from :func:`make_mesh_gibbs_step`.
+    """
     nr, nc = mesh.shape[row_axis], mesh.shape[col_axis]
-    unary, pairwise, hp, wp = pad_mrf(mrf, nr, nc)
+    unary, pairwise, valid, hp, wp = pad_mrf(mrf, nr, nc)
     labels0 = jax.random.randint(key, (n_chains, hp, wp), 0, mrf.n_labels, jnp.int32)
+    labels0 = jnp.where(jnp.asarray(valid)[None], labels0, 0)  # pin pad sites
     u = jax.device_put(jnp.asarray(unary),
                        NamedSharding(mesh, P(row_axis, col_axis, None)))
     lab = jax.device_put(labels0,
                          NamedSharding(mesh, P(None, row_axis, col_axis)))
     pw = jax.device_put(jnp.asarray(pairwise), NamedSharding(mesh, P()))
-    return lab, u, pw, (hp, wp)
+    v = jax.device_put(jnp.asarray(blocked_validity(valid, nr, nc)),
+                       NamedSharding(mesh, P(row_axis, col_axis)))
+    return lab, u, pw, v, (hp, wp)

@@ -6,13 +6,25 @@ requests and get posterior marginals back.  Compiled sweep programs are
 cached by evidence *pattern* so repeat traffic never recompiles, and
 compatible queries are micro-batched across chain lanes of one jitted
 sweep — the TPU analogue of AIA mapping many independent chains onto its
-cores (paper §III).
+cores (paper §III).  With a serve mesh the lane axis additionally shards
+across devices (:func:`repro.launch.mesh.make_serve_mesh`).
+
+The engine (and with it jax) is imported lazily: the CLI must be able to
+apply ``--force-host-devices`` before the XLA backend initializes.
 """
-from repro.serve.engine import PosteriorEngine, split_rhat
-from repro.serve.plan_cache import CacheStats, PlanCache
+from repro.serve.plan_cache import CacheStats, PlanCache, plan_key
 from repro.serve.query import Query, Result, parse_evidence
+
+_LAZY = ("PosteriorEngine", "split_rhat", "make_round_runner")
 
 __all__ = [
     "CacheStats", "PlanCache", "PosteriorEngine", "Query", "Result",
-    "parse_evidence", "split_rhat",
+    "make_round_runner", "parse_evidence", "plan_key", "split_rhat",
 ]
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        from repro.serve import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

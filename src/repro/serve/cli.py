@@ -4,6 +4,9 @@
   PYTHONPATH=src python -m repro.serve.cli --network sprinkler --queries 32 \
       --patterns 2 --chains 16
   PYTHONPATH=src python -m repro.serve.cli --requests reqs.json
+  # shard query groups over 4 devices (forced-host CPU recipe)
+  PYTHONPATH=src python -m repro.serve.cli --network asia \
+      --force-host-devices 4 --mesh-shape 4
 
 Request-file format: a JSON list of objects
   {"network": "asia", "evidence": {"smoke": 1}, "query_vars": ["lung"],
@@ -13,6 +16,11 @@ Reports queries/s and MSample/s for a cold pass (empty plan cache, XLA
 compiles on the critical path) and a warm pass (same traffic replayed
 through the populated cache) — the speedup is the point of the plan
 cache.
+
+``--mesh-shape N`` (or RxC) builds a serve mesh and shards each query
+group's chain-lane axis over its "batch" axis; ``--force-host-devices``
+splits the CPU into fake devices (set before first jax use, so it works
+from this CLI without exporting XLA_FLAGS).
 """
 from __future__ import annotations
 
@@ -22,15 +30,17 @@ import time
 
 import numpy as np
 
-from repro.pgm import networks as _networks
-from repro.serve.engine import PosteriorEngine
-from repro.serve.query import Query, Result
+# NOTE: jax-touching imports (engine, networks) happen lazily inside the
+# functions below — importing the sampling stack initializes the XLA
+# backend, which must not happen before --force-host-devices takes effect.
+from repro.serve.query import Query
 
 NETWORKS = ("asia", "sprinkler", "child_scale", "alarm_scale",
             "hailfinder_scale")
 
 
 def build_registry(names=NETWORKS):
+    from repro.pgm import networks as _networks
     return {name: getattr(_networks, name)() for name in names}
 
 
@@ -70,7 +80,7 @@ def load_requests(path: str) -> list[Query]:
     ]
 
 
-def _pass(engine: PosteriorEngine, traffic: list[Query], label: str):
+def _pass(engine, traffic: list[Query], label: str):
     t0 = time.perf_counter()
     results = engine.answer_batch(traffic)
     dt = time.perf_counter() - t0
@@ -99,14 +109,35 @@ def main(argv=None) -> None:
     ap.add_argument("--rhat", type=float, default=1.05)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-iu", action="store_true")
+    ap.add_argument("--mesh-shape", default="",
+                    help="serve mesh, e.g. 4 or 2x2 — shard chain lanes "
+                         "over devices")
+    ap.add_argument("--force-host-devices", type=int, default=0,
+                    help="split the CPU into N fake devices "
+                         "(XLA_FLAGS recipe, applied before first jax use)")
     ap.add_argument("--show", type=int, default=3,
                     help="print marginals of the first N queries")
     args = ap.parse_args(argv)
 
+    if args.force_host_devices:
+        from repro.launch.mesh import force_host_devices
+        force_host_devices(args.force_host_devices)
+    from repro.serve.engine import PosteriorEngine
+
+    mesh = None
+    if args.mesh_shape:
+        import jax
+
+        from repro.launch.mesh import make_serve_mesh, parse_mesh_shape
+        mesh = make_serve_mesh(parse_mesh_shape(args.mesh_shape))
+        print(f"serve mesh {dict(mesh.shape)} over "
+              f"{mesh.devices.size}/{len(jax.devices())} devices")
+
     registry = build_registry()
     engine = PosteriorEngine(
         registry, chains_per_query=args.chains, burn_in=args.burn_in,
-        rhat_target=args.rhat, use_iu=not args.no_iu, seed=args.seed)
+        rhat_target=args.rhat, use_iu=not args.no_iu, mesh=mesh,
+        seed=args.seed)
 
     if args.requests:
         traffic = load_requests(args.requests)

@@ -14,6 +14,18 @@ statistic for convergence).  After every round the engine computes the
 split-R̂ of each query's chains and retires queries early once all of a
 group's queries converge — budget left over is simply not spent, which
 is where the paper's "approximate inference" throughput comes from.
+
+Multi-device serving: give the engine a mesh from
+``repro.launch.mesh.make_serve_mesh`` and each group's lane axis
+``(n_queries * chains_per_query, n_nodes)`` is sharded over the mesh's
+"batch" axis (the multicore analogue of the paper's 16 cores on one
+chip: one XLA dispatch advances every device's slice of the lanes).
+The flat log-CPT bank is replicated per device — or sharded over a 2D
+mesh's "model" axis for very large networks — so the ``_color_update``
+gathers stay local (``repro.sharding.specs``).  Lane counts are padded
+up to a mesh multiple with throwaway replicas of the first query;
+plans/runners are cached per (pattern, mesh fingerprint) so single- and
+multi-device programs never collide.
 """
 from __future__ import annotations
 
@@ -24,13 +36,17 @@ from typing import Mapping
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 
 from repro.core.fixedpoint import DEFAULT_K
+from repro.launch.mesh import mesh_fingerprint
 from repro.pgm.compile import (
     BNSweepStats, CompiledBN, _color_update, compile_bayesnet, init_states)
 from repro.pgm.graph import BayesNet
-from repro.serve.plan_cache import PlanCache
+from repro.serve.plan_cache import PlanCache, plan_key
 from repro.serve.query import Query, Result
+from repro.sharding.specs import (
+    serve_cpt_spec, serve_lane_multiple, serve_state_spec)
 
 
 def split_rhat(draws: np.ndarray) -> float:
@@ -57,37 +73,60 @@ def split_rhat(draws: np.ndarray) -> float:
 
 
 def make_round_runner(prog: CompiledBN, *, sweeps_per_round: int, thin: int,
-                      use_iu: bool):
-    """Jitted ``(key, x) -> (x, counts, xmean, stats)`` for one round.
+                      use_iu: bool, mesh=None):
+    """Jitted ``(key, x, offset) -> (x, counts, xmean, stats)`` per round.
+
+    ``offset`` (traced int32 scalar) is the global post-burn-in sweep
+    index of the round's first sweep: draws are kept where the *global*
+    index is a multiple of ``thin``.  A round-relative ``i % thin`` would
+    restart the phase every round, so for ``sweeps_per_round % thin != 0``
+    the kept-draw spacing (and every downstream sample count) drifted.
 
     ``counts``: (B, n, L) thinned one-hot draw counts this round.
     ``xmean``:  (B, n) mean state over the round — per-lane scalar
     statistics for split-R̂ (for a binary node this is its running
     posterior-probability estimate).
+    ``stats``:  per-sweep (sweeps_per_round,) int32 arrays — summed
+    host-side in int64 by the engine (int32 carries wrapped on long
+    runs; see :class:`repro.pgm.compile.BNSweepStats`).
+
+    With ``mesh`` the lane (batch) axis of ``x``/``counts`` is held to a
+    NamedSharding over the mesh's "batch" axis and the log-CPT bank is
+    placed per ``serve_cpt_spec`` — one compile per (plan, mesh).
     """
     log_cpt = jnp.asarray(prog.log_cpt)
+    state_sharding = None
+    if mesh is not None:
+        log_cpt = jax.device_put(
+            log_cpt, NamedSharding(mesh, serve_cpt_spec(mesh, log_cpt.size)))
+        state_sharding = NamedSharding(mesh, serve_state_spec(mesh))
     n, L = prog.bn.n_nodes, prog.max_card
 
-    def round_fn(key: jax.Array, x: jax.Array):
+    def round_fn(key: jax.Array, x: jax.Array, offset: jax.Array):
+        if state_sharding is not None:
+            x = jax.lax.with_sharding_constraint(x, state_sharding)
+
         def body(carry, i):
-            key, x, counts, xsum, bits, att = carry
+            key, x, counts, xsum = carry
             key, sub = jax.random.split(key)
+            bits, att = jnp.int32(0), jnp.int32(0)
             for plan in prog.plans:
                 sub, s2 = jax.random.split(sub)
                 x, st = _color_update(
                     s2, x, plan, log_cpt, L, prog.k, use_iu)
                 bits, att = bits + st.bits_used, att + st.attempts
             onehot = (x[..., None] == jnp.arange(L)).astype(jnp.int32)
-            counts = counts + jnp.where((i % thin) == 0, onehot, 0)
+            counts = counts + jnp.where(((offset + i) % thin) == 0, onehot, 0)
             xsum = xsum + x.astype(jnp.float32)
-            return (key, x, counts, xsum, bits, att), None
+            return (key, x, counts, xsum), BNSweepStats(bits, att)
 
         counts0 = jnp.zeros(x.shape + (L,), jnp.int32)
         xsum0 = jnp.zeros(x.shape, jnp.float32)
-        (key, x, counts, xsum, bits, att), _ = jax.lax.scan(
-            body, (key, x, counts0, xsum0, jnp.int32(0), jnp.int32(0)),
-            jnp.arange(sweeps_per_round))
-        return x, counts, xsum / sweeps_per_round, BNSweepStats(bits, att)
+        (key, x, counts, xsum), per_sweep = jax.lax.scan(
+            body, (key, x, counts0, xsum0), jnp.arange(sweeps_per_round))
+        if state_sharding is not None:
+            x = jax.lax.with_sharding_constraint(x, state_sharding)
+        return x, counts, xsum / sweeps_per_round, per_sweep
 
     return jax.jit(round_fn)
 
@@ -98,6 +137,9 @@ class PosteriorEngine:
     Parameters mirror a serving config: ``chains_per_query`` lanes per
     query, ``sweeps_per_round`` sweeps per scheduling quantum, burn-in
     and thinning in sweeps, and a split-R̂ target for early stopping.
+    ``mesh`` (from :func:`repro.launch.mesh.make_serve_mesh`) shards each
+    group's chain-lane axis over the mesh's "batch" axis; ``None`` keeps
+    the single-device path.
     """
 
     def __init__(
@@ -115,6 +157,7 @@ class PosteriorEngine:
         use_iu: bool = True,
         quantize_cpt_bits: int | None = 16,
         cache: PlanCache | None = None,
+        mesh=None,
         seed: int = 0,
     ):
         self.networks: dict[str, BayesNet] = dict(networks or {})
@@ -129,6 +172,7 @@ class PosteriorEngine:
         self.use_iu = use_iu
         self.quantize_cpt_bits = quantize_cpt_bits
         self.cache = cache if cache is not None else PlanCache()
+        self.mesh = mesh
         self._key = jax.random.PRNGKey(seed)
 
     # -- registry ----------------------------------------------------------
@@ -148,10 +192,15 @@ class PosteriorEngine:
                 f"(have: {sorted(self.networks)})") from None
 
     # -- plan lookup -------------------------------------------------------
+    def _plan_key(self, name: str, pattern: tuple[int, ...]) -> tuple:
+        return plan_key(
+            name, pattern, k=self.k, use_iu=self.use_iu,
+            quantize_cpt_bits=self.quantize_cpt_bits,
+            sweeps_per_round=self.sweeps_per_round, thin=self.thin,
+            mesh_fingerprint=mesh_fingerprint(self.mesh))
+
     def _plan(self, name: str, pattern: tuple[int, ...]):
         """(CompiledBN, round_runner, was_cache_hit) for one pattern."""
-        key = (name, pattern, self.k, self.use_iu, self.quantize_cpt_bits,
-               self.sweeps_per_round, self.thin)
 
         def build():
             prog = compile_bayesnet(
@@ -159,10 +208,11 @@ class PosteriorEngine:
                 quantize_cpt_bits=self.quantize_cpt_bits, observed=pattern)
             runner = make_round_runner(
                 prog, sweeps_per_round=self.sweeps_per_round,
-                thin=self.thin, use_iu=self.use_iu)
+                thin=self.thin, use_iu=self.use_iu, mesh=self.mesh)
             return prog, runner
 
-        (prog, runner), hit = self.cache.get(key, build)
+        (prog, runner), hit = self.cache.get(
+            self._plan_key(name, pattern), build)
         return prog, runner, hit
 
     # -- serving -----------------------------------------------------------
@@ -195,32 +245,42 @@ class PosteriorEngine:
         prog, runner, hit = self._plan(name, pattern)
         bn = self._network(name)
         c = self.chains_per_query
+        spr = self.sweeps_per_round
         nq = len(idxs)
         b = nq * c
+        # mesh path: pad the lane axis to a batch-shard multiple; pad
+        # lanes replicate query 0 and are sliced off every host read.
+        bt = b + (-b) % serve_lane_multiple(self.mesh)
         n_free = len(prog.free_nodes)
-        kept_per_round = math.ceil(self.sweeps_per_round / self.thin)
 
         # per-lane evidence values: query j owns lanes [j*c, (j+1)*c)
-        ev_vals = np.zeros((b, len(pattern)), np.int32)
+        ev_vals = np.zeros((bt, len(pattern)), np.int32)
         for j, i in enumerate(idxs):
             ev = normed[i][2]
             ev_vals[j * c:(j + 1) * c] = [ev[v] for v in pattern]
+        ev_vals[b:] = ev_vals[:1]
 
         self._key, init_key, run_key = jax.random.split(self._key, 3)
-        x = init_states(init_key, prog, b,
+        x = init_states(init_key, prog, bt,
                         jnp.asarray(ev_vals) if pattern else None)
+        if self.mesh is not None:
+            x = jax.device_put(x, NamedSharding(
+                self.mesh, serve_state_spec(self.mesh)))
 
-        burn_rounds = math.ceil(self.burn_in / self.sweeps_per_round)
-        budget_rounds = max(
-            math.ceil(normed[i][0].n_samples / (c * kept_per_round))
-            for i in idxs)
+        burn_rounds = math.ceil(self.burn_in / spr)
+        # smallest round count whose kept-draw total (global multiples of
+        # ``thin`` in [0, rounds*spr), times c lanes) covers the budget
+        kept_needed = max(
+            math.ceil(normed[i][0].n_samples / c) for i in idxs)
+        budget_rounds = math.ceil(((kept_needed - 1) * self.thin + 1) / spr)
         cap = min(max(budget_rounds, self.min_rounds), self.max_rounds)
 
         bits = 0
         for _ in range(burn_rounds):
             run_key, sub = jax.random.split(run_key)
-            x, _, _, st = runner(sub, x)
-            bits += int(st.bits_used)  # burn-in draws spend bits too
+            x, _, _, st = runner(sub, x, jnp.int32(0))
+            # burn-in draws spend bits too; int64 host accumulation
+            bits += int(np.asarray(st.bits_used, np.int64).sum())
 
         counts = np.zeros((b, bn.n_nodes, prog.max_card), np.int64)
         means = np.zeros((b, bn.n_nodes, cap), np.float32)  # R̂ statistics
@@ -228,10 +288,10 @@ class PosteriorEngine:
         rhats = {i: float("inf") for i in idxs}
         while rounds_run < cap:
             run_key, sub = jax.random.split(run_key)
-            x, rc, xmean, st = runner(sub, x)
-            counts += np.asarray(rc, np.int64)
-            means[..., rounds_run] = np.asarray(xmean)
-            bits += int(st.bits_used)
+            x, rc, xmean, st = runner(sub, x, jnp.int32(rounds_run * spr))
+            counts += np.asarray(rc, np.int64)[:b]
+            means[..., rounds_run] = np.asarray(xmean)[:b]
+            bits += int(np.asarray(st.bits_used, np.int64).sum())
             rounds_run += 1
             if rounds_run < self.min_rounds:
                 continue
@@ -245,9 +305,12 @@ class PosteriorEngine:
 
         jax.block_until_ready(x)
         wall = time.perf_counter() - t0
-        total_sweeps = (burn_rounds + rounds_run) * self.sweeps_per_round
-        n_node_samples = b * n_free * total_sweeps
+        total_sweeps = (burn_rounds + rounds_run) * spr
+        n_node_samples = bt * n_free * total_sweeps
         bps = bits / n_node_samples if n_node_samples else 0.0
+        # kept draws per lane: global sweep indices in [0, rounds*spr)
+        # that are multiples of ``thin``
+        kept_total = (rounds_run * spr + self.thin - 1) // self.thin
 
         for j, i in enumerate(idxs):
             q, _, _, qvars = normed[i]
@@ -259,7 +322,7 @@ class PosteriorEngine:
             results[i] = Result(
                 query=q,
                 marginals=marginals,
-                n_samples=int(c * kept_per_round * rounds_run),
+                n_samples=int(c * kept_total),
                 n_sweeps=total_sweeps,
                 n_node_samples=int(c * n_free * total_sweeps),
                 rhat=float(rhats[i]),

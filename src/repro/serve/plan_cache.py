@@ -16,6 +16,30 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Hashable
 
 
+def plan_key(
+    network: str,
+    pattern: tuple[int, ...],
+    *,
+    k: int,
+    use_iu: bool,
+    quantize_cpt_bits: int | None,
+    sweeps_per_round: int,
+    thin: int,
+    mesh_fingerprint=None,
+) -> tuple:
+    """Canonical cache key of one compiled (plan, round-runner) pair.
+
+    Everything a runner's compiled HLO depends on must appear here.  In
+    particular ``mesh_fingerprint`` ((shape, axis names, device ids), or
+    None for the single-device path): a runner jitted with sharding
+    constraints for one mesh layout — or placed on one set of devices —
+    must never be served to an engine on another; see
+    ``repro.launch.mesh.mesh_fingerprint``.
+    """
+    return (network, pattern, k, use_iu, quantize_cpt_bits,
+            sweeps_per_round, thin, mesh_fingerprint)
+
+
 @dataclass
 class CacheStats:
     hits: int = 0

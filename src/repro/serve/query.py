@@ -54,11 +54,6 @@ class Query:
     query_vars: Sequence[str | int] = ()
     n_samples: int = 8192
 
-    def pattern_of(self, bn) -> tuple[int, ...]:
-        """The evidence *pattern* (observed node ids, sorted) — the plan
-        cache key component; values are deliberately excluded."""
-        return tuple(sorted(bn.normalize_evidence(self.evidence)))
-
 
 @dataclass
 class Result:

@@ -193,6 +193,40 @@ def cache_specs(cfg: ModelConfig, mesh: Mesh, cache: dict, batch: int) -> dict:
     return out
 
 
+# -- posterior query service (repro.serve) --------------------------------
+# The engine's state tensor is (n_queries * chains_per_query, n_nodes):
+# pure chain-lane parallelism, so the lane axis shards over the serve
+# mesh's leading "batch" axis and every _color_update gather stays
+# device-local.  The flat log-CPT bank is replicated by default (it is
+# the gather operand — replication keeps the inner loop collective-free);
+# banks at/above SERVE_CPT_SHARD_ELEMS shard over a trailing "model"
+# axis instead, trading an all-gather at use for at-rest memory.
+SERVE_CPT_SHARD_ELEMS = 1 << 22
+
+
+def serve_batch_axis(mesh: Mesh) -> str:
+    """The serve mesh axis carrying the chain-lane batch (leading axis)."""
+    return mesh.axis_names[0]
+
+
+def serve_state_spec(mesh: Mesh) -> P:
+    """PartitionSpec of the (lanes, n_nodes) engine state / count tensors."""
+    return P(serve_batch_axis(mesh), None)
+
+
+def serve_cpt_spec(mesh: Mesh, n_elems: int) -> P:
+    """PartitionSpec of the flat log-CPT bank (1D, sentinel included)."""
+    m = _axis(mesh, "model")
+    if m > 1 and n_elems >= SERVE_CPT_SHARD_ELEMS and n_elems % m == 0:
+        return P("model")
+    return P()
+
+
+def serve_lane_multiple(mesh: Mesh | None) -> int:
+    """Lane-count divisibility the engine must pad micro-batches to."""
+    return 1 if mesh is None else mesh.shape[serve_batch_axis(mesh)]
+
+
 def zero_extend(spec: P, shape, mesh: Mesh) -> P:
     """ZeRO: additionally shard optimizer state over "data" on a free dim."""
     d = _axis(mesh, "data")

@@ -2,8 +2,14 @@
 smoke tests and benches keep seeing 1 device, per the task spec).
 
 Covers: mesh Gibbs halo-exchange vs all-gather equivalence + collective
-bytes, sharded train-step parity with single-device, dry-run builders on
-a small mesh, checkpoint restore-with-reshard (elastic restart).
+bytes, MRF pad-site masking on non-tile-multiple grids, the sharded
+posterior query service, sharded train-step parity with single-device,
+dry-run builders on a small mesh, checkpoint restore-with-reshard
+(elastic restart).
+
+The PGM/serve mesh layers run on any jax with shard_map/NamedSharding;
+the training meshes target the explicit-sharding API (AxisType,
+jax.set_mesh) and are gated on jax >= 0.6.
 """
 import json
 
@@ -12,10 +18,7 @@ import pytest
 
 from conftest import run_subprocess
 
-# The mesh layer targets the explicit-sharding API (jax.sharding.AxisType,
-# jax.set_mesh).  On older jax the subprocesses would die at import — gate
-# the whole module rather than fail on an environment mismatch.
-pytestmark = pytest.mark.skipif(
+requires_explicit_mesh = pytest.mark.skipif(
     not hasattr(jax.sharding, "AxisType"),
     reason="needs jax.sharding.AxisType / explicit-mesh API (jax >= 0.6)")
 
@@ -27,17 +30,17 @@ class TestMeshGibbs:
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np, re
+from repro.launch.mesh import make_pgm_mesh
 from repro.pgm.networks import penguin_task
 from repro.pgm.mesh_gibbs import make_mesh_gibbs_step, shard_mrf
-mesh = jax.make_mesh((2,2), ("row","col"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_pgm_mesh(2, 2)
 mrf, truth = penguin_task(h=32, w=24, beta=2.0)
 key = jax.random.PRNGKey(0)
-lab, u, pw, _ = shard_mrf(mesh, mrf, n_chains=2, key=key)
+lab, u, pw, valid, _ = shard_mrf(mesh, mrf, n_chains=2, key=key)
 step = make_mesh_gibbs_step(mesh, comm="halo")
 for i in range(25):
     key, sub = jax.random.split(key)
-    lab, bits = step(sub, lab, u, pw)
+    lab, bits = step(sub, lab, u, pw, valid)
 acc = (np.asarray(lab)[0][:32,:24] == truth).mean()
 assert acc > 0.9, acc
 
@@ -55,8 +58,8 @@ def cbytes(fn, *args):
                         if d: sz *= int(d)
                     tot[p] = tot.get(p, 0) + sz
     return tot
-halo = cbytes(step, key, lab, u, pw)
-ag = cbytes(make_mesh_gibbs_step(mesh, comm="allgather"), key, lab, u, pw)
+halo = cbytes(step, key, lab, u, pw, valid)
+ag = cbytes(make_mesh_gibbs_step(mesh, comm="allgather"), key, lab, u, pw, valid)
 assert halo.get("collective-permute", 0) > 0
 assert ag.get("all-gather", 0) > 5 * halo.get("collective-permute", 1)
 print("HALO_BYTES", json.dumps(halo) if (json := __import__("json")) else 0)
@@ -71,18 +74,18 @@ print("OK")
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
+from repro.launch.mesh import make_pgm_mesh
 from repro.pgm.networks import penguin_task
 from repro.pgm.gibbs import mrf_gibbs, init_labels
 from repro.pgm.mesh_gibbs import make_mesh_gibbs_step, shard_mrf
-mesh = jax.make_mesh((2,2), ("row","col"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_pgm_mesh(2, 2)
 mrf, truth = penguin_task(h=24, w=24)
 key = jax.random.PRNGKey(0)
-lab, u, pw, _ = shard_mrf(mesh, mrf, n_chains=2, key=key)
+lab, u, pw, valid, _ = shard_mrf(mesh, mrf, n_chains=2, key=key)
 step = make_mesh_gibbs_step(mesh)
 for i in range(20):
     key, sub = jax.random.split(key)
-    lab, _ = step(sub, lab, u, pw)
+    lab, _ = step(sub, lab, u, pw, valid)
 acc_mesh = (np.asarray(lab)[0] == truth).mean()
 lab1 = init_labels(jax.random.PRNGKey(5), mrf, 2)
 lab1, _ = mrf_gibbs(jax.random.PRNGKey(6), lab1, jnp.asarray(mrf.unary),
@@ -94,8 +97,115 @@ print("OK", acc_mesh, acc_sd)
         rc, out = run_subprocess(code, devices=4)
         assert rc == 0, out
 
+    def test_pad_sites_do_not_bias_boundary_marginals(self):
+        """Regression: on a grid that is NOT a tile multiple, pad sites
+        are pinned to label 0 — without the validity mask they leak
+        label-0 pairwise energy into real boundary sites.  A symmetric
+        MRF (uniform unary + Potts) has exact marginal 0.5 everywhere;
+        the old code pushed the boundary row/col to ~0.76 and the corner
+        to ~0.85."""
+        code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from repro.launch.mesh import make_pgm_mesh
+from repro.pgm.graph import MRFGrid
+from repro.pgm.gibbs import mrf_gibbs, init_labels
+from repro.pgm.mesh_gibbs import make_mesh_gibbs_step, shard_mrf
+h, w, beta = 17, 13, 0.6   # 17x13 on a 2x2 mesh -> pads to 18x14
+mrf = MRFGrid.potts(np.zeros((h, w, 2), np.float32), beta=beta)
+mesh = make_pgm_mesh(2, 2)
+key = jax.random.PRNGKey(0)
+lab, u, pw, valid, _ = shard_mrf(mesh, mrf, n_chains=64, key=key)
+step = make_mesh_gibbs_step(mesh)
+burn, keep = 40, 120
+freq = np.zeros((h, w))
+for i in range(burn + keep):
+    key, sub = jax.random.split(key)
+    lab, _ = step(sub, lab, u, pw, valid)
+    if i >= burn:
+        freq += (np.asarray(lab)[:, :h, :w] == 0).mean(0)
+freq /= keep
+# exact symmetric answer: 0.5 at every site incl. the padded boundary
+assert abs(freq[-1, -1] - 0.5) < 0.06, freq[-1, -1]       # corner
+assert abs(freq[-1, :].mean() - 0.5) < 0.05, freq[-1, :].mean()
+assert abs(freq[:, -1].mean() - 0.5) < 0.05, freq[:, -1].mean()
+# and the single-device reference agrees on the same boundary sites
+lab1 = init_labels(jax.random.PRNGKey(5), mrf, 64)
+ref = np.zeros((h, w))
+k2 = jax.random.PRNGKey(6)
+for i in range(burn + keep):
+    k2, sub = jax.random.split(k2)
+    lab1, _ = mrf_gibbs(sub, lab1, jnp.asarray(mrf.unary),
+                        jnp.asarray(mrf.pairwise), n_sweeps=1)
+    if i >= burn:
+        ref += (np.asarray(lab1) == 0).mean(0)
+ref /= keep
+assert np.abs(freq - ref)[-1, :].max() < 0.06
+assert np.abs(freq - ref)[:, -1].max() < 0.06
+print("OK", freq[-1, -1], ref[-1, -1])
+"""
+        rc, out = run_subprocess(code, devices=4)
+        assert rc == 0, out
+
 
 @pytest.mark.slow
+class TestShardedServe:
+    def test_sharded_engine_matches_single_device_and_exact(self):
+        """The tentpole acceptance check: on a forced-host 4-device mesh
+        the engine's posterior answers equal the single-device engine's
+        (same seeds -> identical lane streams) and match exact
+        enumeration; the lane-padding path (chains not divisible by the
+        mesh) stays within statistical tolerance of the oracle."""
+        code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, numpy as np
+from repro.launch.mesh import make_serve_mesh
+from repro.pgm import networks
+from repro.serve import PosteriorEngine, Query
+mesh = make_serve_mesh((4,))
+registry = {"sprinkler": networks.sprinkler(), "asia": networks.asia()}
+kw = dict(chains_per_query=32, burn_in=64, seed=3)
+qs = [Query("sprinkler", {"wetgrass": 1}, ("rain", "sprinkler"),
+            n_samples=32768),
+      Query("asia", {"smoke": 1}, ("lung", "bronc"), n_samples=32768)]
+sharded = PosteriorEngine(registry, mesh=mesh, **kw).answer_batch(qs)
+single = PosteriorEngine(registry, **kw).answer_batch(qs)
+for rs, r1, q in zip(sharded, single, qs):
+    bn = registry[q.network]
+    exact = bn.marginals_exact(q.evidence)
+    for var in rs.marginals:
+        np.testing.assert_allclose(rs.marginal(var), r1.marginal(var),
+                                   atol=1e-12)  # same seeds, same draws
+        assert np.abs(rs.marginal(var) - exact[bn.index(var)]).max() < 0.04
+# lane padding: 2 queries x 6 chains = 12 lanes -> padded to 12+4k
+pe = PosteriorEngine(registry, mesh=mesh, chains_per_query=6, burn_in=64,
+                     max_rounds=48, seed=7)
+rp = pe.answer(Query("sprinkler", {"wetgrass": 1}, ("rain",),
+                     n_samples=16384))
+exact = registry["sprinkler"].marginals_exact({"wetgrass": 1})
+assert np.abs(rp.marginal("rain") - exact[2]).max() < 0.05
+print("OK")
+"""
+        rc, out = run_subprocess(code, devices=4)
+        assert rc == 0, out
+
+    def test_mesh_shape_2d_and_cli(self):
+        """2D ("batch", "model") serve mesh + the CLI flags end to end."""
+        code = """
+from repro.serve.cli import main
+main(["--network", "sprinkler", "--queries", "4", "--patterns", "2",
+      "--chains", "8", "--budget", "256", "--burn-in", "16", "--show", "0",
+      "--force-host-devices", "4", "--mesh-shape", "2x2"])
+"""
+        rc, out = run_subprocess(code)
+        assert rc == 0, out
+        assert "warm/cold speedup" in out and "serve mesh" in out
+
+
+@pytest.mark.slow
+@requires_explicit_mesh
 class TestShardedTraining:
     def test_sharded_step_matches_single_device(self):
         code = """
@@ -175,6 +285,7 @@ print("OK")
 
 
 @pytest.mark.slow
+@requires_explicit_mesh
 class TestDryrunSmall:
     def test_builders_compile_on_small_mesh(self):
         """The cell builders lower+compile on a 2x2 mesh for one arch of

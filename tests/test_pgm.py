@@ -8,6 +8,7 @@ from _hyp import given, settings, st
 
 from repro.pgm import (
     BayesNet,
+    BNSweepStats,
     checkerboard,
     color_bayesnet,
     compile_bayesnet,
@@ -15,6 +16,7 @@ from repro.pgm import (
     mrf_gibbs,
     networks,
     run_gibbs,
+    sum_sweep_stats,
     verify_coloring,
 )
 
@@ -121,6 +123,40 @@ class TestMRFGibbs:
         n_samples = 16 * 16 * 5
         bits = float(stats.bits_used) / n_samples
         assert 1.0 < bits < 8.0  # binary labels: H+2 <= 3ish
+
+
+class TestSweepStatsOverflow:
+    def test_sum_sweep_stats_survives_int32_wrap_magnitudes(self):
+        """Totals that wrapped the old int32 scan carry stay exact: the
+        old path accumulated bits/attempts in an int32 carry across all
+        sweeps, so 8 sweeps of 2**30 bits summed to 2**33 mod 2**32 = 0
+        (and long real runs went negative)."""
+        per_sweep = BNSweepStats(
+            bits_used=np.full(8, 2**30, np.int32),
+            attempts=np.full(8, 2**30, np.int32))
+        with np.errstate(over="ignore"):
+            wrapped = per_sweep.bits_used.sum(dtype=np.int32)
+        assert wrapped == 0  # what the old carry produced
+        tot = sum_sweep_stats(per_sweep)
+        assert tot.bits_used.dtype == np.int64
+        assert int(tot.bits_used) == 8 * 2**30
+        assert int(tot.attempts) == 8 * 2**30
+
+    def test_run_gibbs_stats_are_host_int64_totals(self):
+        from repro.pgm.compile import _run_gibbs_device
+
+        bn = networks.sprinkler()
+        prog = compile_bayesnet(bn)
+        _, _, stats = run_gibbs(jax.random.PRNGKey(0), prog, n_chains=8,
+                                n_sweeps=10, burn_in=2)
+        assert stats.bits_used.dtype == np.int64
+        assert int(stats.bits_used) > 0 and int(stats.attempts) > 0
+        # totals equal the per-sweep device stats, which stay int32-sized
+        _, _, per_sweep = _run_gibbs_device(
+            jax.random.PRNGKey(0), prog, n_chains=8, n_sweeps=10, burn_in=2)
+        assert per_sweep.bits_used.shape == (10,)
+        assert (int(np.asarray(per_sweep.bits_used, np.int64).sum())
+                == int(stats.bits_used))
 
 
 class TestCompilerChain:

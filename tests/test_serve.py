@@ -1,12 +1,15 @@
 """Posterior query service: evidence-conditioned marginals vs exact
-enumeration, clamp invariance, plan-cache behaviour, CLI smoke."""
+enumeration, clamp invariance, thinning/accounting arithmetic,
+plan-cache behaviour (incl. mesh fingerprints), CLI smoke."""
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.pgm import compile_bayesnet, init_states, make_sweep, networks, run_gibbs
 from repro.serve import (
-    PlanCache, PosteriorEngine, Query, parse_evidence, split_rhat)
+    PlanCache, PosteriorEngine, Query, make_round_runner, parse_evidence,
+    split_rhat)
 
 
 def _registry():
@@ -117,6 +120,44 @@ class TestEngine:
         assert split_rhat(np.zeros((4, 2))) == float("inf")  # too few rounds
 
 
+class TestThinning:
+    def test_round_runner_uses_global_offset(self):
+        """Draws are kept on *global* post-burn-in sweep indices that are
+        multiples of ``thin`` — a round-relative phase (the old bug) kept
+        ceil(spr/thin) draws every round regardless of alignment."""
+        prog = compile_bayesnet(networks.sprinkler())
+        runner = make_round_runner(
+            prog, sweeps_per_round=16, thin=3, use_iu=True)
+        x = init_states(jax.random.PRNGKey(0), prog, 4)
+        x, counts, _, _ = runner(jax.random.PRNGKey(1), x, jnp.int32(0))
+        # kept global sweeps in [0, 16): 0, 3, 6, 9, 12, 15
+        assert int(np.asarray(counts).sum(-1)[0, 0]) == 6
+        x, counts, _, _ = runner(jax.random.PRNGKey(2), x, jnp.int32(16))
+        # kept global sweeps in [16, 32): 18, 21, 24, 27, 30 — the
+        # round-relative restart kept 6 with the wrong spacing
+        assert int(np.asarray(counts).sum(-1)[0, 0]) == 5
+
+    def test_engine_kept_count_accounting(self):
+        """Result.n_samples equals lanes x (global multiples of thin in
+        the sampled sweep range), not lanes x rounds x ceil(spr/thin)."""
+        eng = PosteriorEngine(
+            _registry(), chains_per_query=8, burn_in=16, sweeps_per_round=16,
+            thin=3, rhat_target=0.0, min_rounds=4, max_rounds=4)
+        res = eng.answer(Query("sprinkler", {"wetgrass": 1}, ("rain",),
+                               n_samples=10**6))
+        # 4 rounds x 16 sweeps: multiples of 3 in [0, 64) -> 22 per lane
+        assert res.n_samples == 8 * 22  # old accounting claimed 8 * 24
+        assert abs(res.marginal("rain").sum() - 1.0) < 1e-9
+
+    def test_thin_one_unchanged(self):
+        eng = PosteriorEngine(
+            _registry(), chains_per_query=8, burn_in=16, sweeps_per_round=16,
+            rhat_target=0.0, min_rounds=4, max_rounds=4)
+        res = eng.answer(Query("sprinkler", {"wetgrass": 1}, ("rain",),
+                               n_samples=10**6))
+        assert res.n_samples == 8 * 64
+
+
 class TestPlanCache:
     def test_hit_miss_and_eviction(self):
         cache = PlanCache(capacity=2)
@@ -144,6 +185,30 @@ class TestPlanCache:
         eng.answer(Query("sprinkler", {"cloudy": 1}, ("rain",),
                          n_samples=256))
         assert (eng.cache.stats.hits, eng.cache.stats.misses) == (1, 2)
+
+    def test_mesh_and_single_device_plan_keys_never_collide(self):
+        """A runner jitted with sharding constraints for one mesh layout
+        must not be served to an engine on another: keys carry the mesh
+        fingerprint (shape + axis names + device ids), None for
+        single-device."""
+        from repro.launch.mesh import make_serve_mesh, mesh_fingerprint
+
+        cache = PlanCache()
+        e1 = PosteriorEngine(_registry(), chains_per_query=8, burn_in=16,
+                             max_rounds=4, cache=cache)
+        e2 = PosteriorEngine(_registry(), chains_per_query=8, burn_in=16,
+                             max_rounds=4, cache=cache,
+                             mesh=make_serve_mesh((1,)))
+        assert mesh_fingerprint(e2.mesh) == (
+            (1,), ("batch",), (jax.devices()[0].id,))
+        assert (e1._plan_key("sprinkler", (3,))
+                != e2._plan_key("sprinkler", (3,)))
+        q = Query("sprinkler", {"wetgrass": 1}, ("rain",), n_samples=256)
+        e1.answer(q)
+        e2.answer(q)  # same pattern, different mesh -> must MISS
+        assert (cache.stats.hits, cache.stats.misses) == (0, 2)
+        e2.answer(q)  # same mesh -> hit
+        assert (cache.stats.hits, cache.stats.misses) == (1, 2)
 
     def test_reregister_invalidates_cached_plans(self):
         """Replacing a network must not keep serving its old CPTs."""
