@@ -7,10 +7,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import row, time_call
-from repro.core import exp_table, iu_log, log_table
+from repro.core import exp_table, iu_log
 
 
 def main(report=print):

@@ -2,12 +2,11 @@
 (falls back to analytic-only if reports/dryrun is absent)."""
 from __future__ import annotations
 
-import glob
 import json
 import os
 
 from benchmarks.common import row
-from repro.configs import ARCH_IDS, SHAPES, cell_runnable, get_config, shape_by_name
+from repro.configs import ARCH_IDS, SHAPES, cell_runnable, get_config
 from repro.launch.roofline import roofline_cell
 
 

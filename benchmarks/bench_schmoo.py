@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import row, time_call
 from repro.core import entropy_bits, ky_sample, quantize_probs

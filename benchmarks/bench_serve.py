@@ -10,17 +10,26 @@ designed for.
 Invocation forms:
 
   PYTHONPATH=src:. python -m benchmarks.bench_serve                # CSV rows
-  PYTHONPATH=src:. python -m benchmarks.bench_serve --smoke \\
+  PYTHONPATH=src:. python -m benchmarks.bench_serve --smoke --stream \\
       --json BENCH_serve.json                                      # CI smoke
   PYTHONPATH=src:. python -m benchmarks.bench_serve \\
       --force-host-devices 4 --mesh-shape 4                        # sharded
   PYTHONPATH=src:. python -m benchmarks.bench_serve --scaling 1,2,4,8 \\
       --json BENCH_serve.json                  # device-scaling subprocesses
 
+``--stream`` adds the open-loop streaming benchmark: traffic arrives at
+a fixed rate (default 4x the measured synchronous rate), is served
+through the admission queue (:mod:`repro.serve.queue`), and reported as
+queries/s plus p50/p99 latency against a one-query-at-a-time
+synchronous baseline — with a bitwise identity check of queued vs
+``answer_batch`` results for the same traffic.
+
 ``--json`` emits a machine-readable report (queries/s, MSample/s,
-bits/sample, cold/warm, and — with ``--scaling`` — per-device-count
-throughput from forced-host subprocesses) so CI can track the perf
-trajectory; ``-`` writes it to stdout.
+bits/sample, cold/warm, stream metrics, and — with ``--scaling`` —
+per-device-count throughput from forced-host subprocesses) so CI can
+track the perf trajectory; ``benchmarks/check_serve_regression.py``
+gates CI on it against ``benchmarks/baselines/BENCH_serve.json``.
+``-`` writes it to stdout.
 """
 from __future__ import annotations
 
@@ -85,7 +94,68 @@ def run(name, network, *, n_queries=32, n_patterns=3, budget=2048,
     }
 
 
-def main(report=print, *, smoke=False, mesh_shape=None):
+def _identical(a, b) -> bool:
+    return (a.n_samples == b.n_samples and a.rhat == b.rhat
+            and set(a.marginals) == set(b.marginals)
+            and all(np.array_equal(a.marginals[k], b.marginals[k])
+                    for k in a.marginals))
+
+
+def run_stream(name, network, *, n_queries=32, n_patterns=2, budget=2048,
+               chains=16, rate_qps=0.0, max_wait_ms=250.0, mesh=None,
+               report=print):
+    """Open-loop streaming benchmark: queued admission vs one-query-at-a-
+    time synchronous serving over the same traffic, plus a bitwise
+    identity check of queued vs ``answer_batch`` results."""
+    from repro.pgm import networks
+    from repro.serve.cli import measure_stream, synthetic_traffic
+    from repro.serve.engine import PosteriorEngine
+    from repro.serve.queue import AdmissionQueue
+
+    bn = getattr(networks, network)()
+    traffic = synthetic_traffic(
+        bn, network, n_queries, n_patterns, np.random.default_rng(0), budget)
+    kw = dict(chains_per_query=chains, burn_in=32, mesh=mesh)
+
+    # shared protocol (repro.serve.cli.measure_stream): sync baseline +
+    # open-loop queued replay.  The 8x multiplier keeps the admission
+    # window full — far above what one-at-a-time serving sustains, which
+    # is the regime the queue exists for (machine-relative, CI-stable).
+    metrics, _ = measure_stream(
+        PosteriorEngine({network: bn}, **kw),
+        PosteriorEngine({network: bn}, **kw),
+        traffic, rate_qps=rate_qps, rate_multiplier=8.0,
+        max_wait_ms=max_wait_ms)
+
+    # identity: same traffic, same seeds -> queued == caller-batched, bitwise
+    eng_a = PosteriorEngine({network: bn}, **kw, seed=7)
+    ref = eng_a.answer_batch(traffic)
+    eng_b = PosteriorEngine({network: bn}, **kw, seed=7)
+    queue_b = AdmissionQueue(eng_b, max_wait_ms=3_600_000.0,
+                             max_group_lanes=n_queries * chains)
+    try:
+        handles = [queue_b.submit(q) for q in traffic]
+        queue_b.flush()
+        streamed = [h.result(timeout=600) for h in handles]
+    finally:
+        queue_b.close()
+    identical = all(_identical(a, b) for a, b in zip(ref, streamed))
+
+    report(row(
+        f"serve_{name}_stream",
+        1e6 / max(metrics["queries_per_s"], 1e-9),
+        f"qps={metrics['queries_per_s']:.2f};"
+        f"sync_qps={metrics['sync_queries_per_s']:.2f};"
+        f"speedup={metrics['speedup']:.2f}x;"
+        f"p50_ms={metrics['p50_ms']:.1f};p99_ms={metrics['p99_ms']:.1f};"
+        f"groups={metrics['dispatched_groups']};"
+        f"backfilled={metrics['backfilled']};identical={identical}"))
+    return {"name": name, "network": network,
+            **{k: v for k, v in metrics.items() if k != "submitted"},
+            "identical": bool(identical)}
+
+
+def main(report=print, *, smoke=False, stream=False, mesh_shape=None):
     """Benchmark-harness entry point; returns the JSON-able report."""
     mesh = None
     n_devices = 1
@@ -101,9 +171,17 @@ def main(report=print, *, smoke=False, mesh_shape=None):
     else:
         runs = [run("asia_8n", "asia", **kw),
                 run("child_scale_20n", "child_scale", n_queries=16, **kw)]
-    return {"suite": "serve", "n_devices": n_devices,
-            "mesh_shape": None if mesh_shape is None else list(mesh_shape),
-            "runs": runs}
+    rep = {"suite": "serve", "n_devices": n_devices,
+           "mesh_shape": None if mesh_shape is None else list(mesh_shape),
+           "runs": runs}
+    if stream:
+        if smoke:
+            rep["stream"] = run_stream(
+                "asia_8n", "asia", n_queries=32, n_patterns=2, budget=512,
+                chains=8, **kw)
+        else:
+            rep["stream"] = run_stream("asia_8n", "asia", **kw)
+    return rep
 
 
 def scaling(device_counts, *, smoke=True, report=print):
@@ -129,7 +207,7 @@ def scaling(device_counts, *, smoke=True, report=print):
         if p.returncode != 0:
             raise RuntimeError(f"scaling point n={n} failed:\n{p.stderr}")
         rep = json.loads(
-            [l for l in p.stdout.splitlines() if l.startswith("{")][-1])
+            [ln for ln in p.stdout.splitlines() if ln.startswith("{")][-1])
         warm = rep["runs"][0]["warm"]
         out.append({"devices": n,
                     "queries_per_s": warm["queries_per_s"],
@@ -144,6 +222,9 @@ def _cli(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
                     help="single small network (fast CI datapoint)")
+    ap.add_argument("--stream", action="store_true",
+                    help="add the open-loop streaming benchmark (admission "
+                         "queue vs one-query-at-a-time synchronous serving)")
     ap.add_argument("--json", default="",
                     help="write a machine-readable report here ('-' = stdout)")
     ap.add_argument("--mesh-shape", default="",
@@ -163,7 +244,7 @@ def _cli(argv=None):
         from repro.launch.mesh import parse_mesh_shape
         mesh_shape = parse_mesh_shape(args.mesh_shape)
 
-    rep = main(smoke=args.smoke, mesh_shape=mesh_shape)
+    rep = main(smoke=args.smoke, stream=args.stream, mesh_shape=mesh_shape)
     if args.scaling:
         counts = [int(s) for s in args.scaling.split(",") if s]
         # scaling points are always smoke-sized: one datapoint per device

@@ -1,0 +1,118 @@
+"""CI perf gate: compare a fresh BENCH_serve.json against the committed
+baseline and fail on regression.
+
+  PYTHONPATH=src:. python -m benchmarks.bench_serve --smoke --stream \
+      --json BENCH_serve.json
+  python benchmarks/check_serve_regression.py BENCH_serve.json \
+      benchmarks/baselines/BENCH_serve.json --tolerance 0.30
+
+Checks, per run matched by name against the baseline:
+
+* warm queries/s must not drop more than ``--tolerance`` (relative) —
+  warm throughput is pure sampling, the number the serving stack lives
+  on; cold numbers are compile-dominated and too noisy to gate.
+* the streaming section (when both reports carry one): queued queries/s
+  under the same tolerance, queued-vs-synchronous speedup at least
+  ``--min-stream-speedup``, and the queued-vs-``answer_batch`` identity
+  bit must be True — a perf gate that lets the queue drift numerically
+  would be enforcing the wrong thing.
+
+The default tolerance is deliberately loose (30%) to absorb shared-CI
+runner noise; the gate exists to catch step-function regressions (an
+accidental recompile per query, a lost micro-batch), not single-digit
+jitter.  The absolute queries/s comparison is still machine-relative to
+wherever the baseline was generated — if the CI runner fleet changes
+speed class, refresh the baseline from a CI-produced ``BENCH_serve``
+artifact rather than a developer machine.  ``--update`` rewrites the
+baseline from the current report instead of checking (commit the
+result).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+
+
+def _fail(failures: list[str]) -> None:
+    for f in failures:
+        print(f"FAIL: {f}")
+    sys.exit(1)
+
+
+def check(current: dict, baseline: dict, *, tolerance: float,
+          min_stream_speedup: float) -> list[str]:
+    failures = []
+    floor = 1.0 - tolerance
+    base_runs = {r["name"]: r for r in baseline.get("runs", [])}
+    for run in current.get("runs", []):
+        base = base_runs.get(run["name"])
+        if base is None:
+            continue
+        cur_qps = run["warm"]["queries_per_s"]
+        base_qps = base["warm"]["queries_per_s"]
+        print(f"{run['name']}: warm {cur_qps:.2f} qps "
+              f"(baseline {base_qps:.2f}, floor {base_qps * floor:.2f})")
+        if cur_qps < base_qps * floor:
+            failures.append(
+                f"{run['name']}: warm queries/s regressed "
+                f"{cur_qps:.2f} < {base_qps:.2f} * {floor:.2f}")
+    missing = set(base_runs) - {r["name"] for r in current.get("runs", [])}
+    if missing:
+        failures.append(f"runs missing from current report: {sorted(missing)}")
+
+    stream, base_stream = current.get("stream"), baseline.get("stream")
+    if stream is not None:
+        if not stream.get("identical", False):
+            failures.append(
+                "stream: queued results are not identical to answer_batch")
+        speedup = stream.get("speedup", 0.0)
+        print(f"stream: {stream['queries_per_s']:.2f} qps, "
+              f"speedup {speedup:.2f}x vs sync "
+              f"(floor {min_stream_speedup:.2f}x)")
+        if speedup < min_stream_speedup:
+            failures.append(
+                f"stream: queued/sync speedup {speedup:.2f}x "
+                f"< {min_stream_speedup:.2f}x")
+        if base_stream is not None:
+            cur, base = stream["queries_per_s"], base_stream["queries_per_s"]
+            if cur < base * floor:
+                failures.append(
+                    f"stream: queued queries/s regressed "
+                    f"{cur:.2f} < {base:.2f} * {floor:.2f}")
+    elif base_stream is not None:
+        failures.append("baseline has a stream section but current doesn't "
+                        "(did the bench run without --stream?)")
+    return failures
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("current", help="fresh BENCH_serve.json")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed relative throughput drop (default 0.30)")
+    ap.add_argument("--min-stream-speedup", type=float, default=1.5,
+                    help="required queued/sync queries/s ratio")
+    ap.add_argument("--update", action="store_true",
+                    help="overwrite the baseline with the current report")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline updated: {args.baseline}")
+        return
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = check(current, baseline, tolerance=args.tolerance,
+                     min_stream_speedup=args.min_stream_speedup)
+    if failures:
+        _fail(failures)
+    print("perf gate: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,6 @@ single-device or distributed with halo exchange (C3).
 """
 import argparse
 import os
-import sys
 import time
 
 ap = argparse.ArgumentParser()

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import entropy_bits, ky_sample, ky_sample_tokens, quantize_probs
+from repro.core import entropy_bits, ky_sample, quantize_probs
 from repro.configs import get_config
 from repro.models.sampling import generate
 from repro.models.transformer import init_model

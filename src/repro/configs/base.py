@@ -8,7 +8,7 @@ values live in ``repro/configs/<id>.py``; every config also provides a
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

@@ -27,7 +27,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.fixedpoint import DEFAULT_K, quantize_logits
+from repro.core.fixedpoint import DEFAULT_K
 from repro.core.ky import ky_sample
 
 

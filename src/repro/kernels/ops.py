@@ -50,7 +50,6 @@ def ky_sample_kernel(
     budget = 31 * max_attempts
     words = rng_lib.random_bit_words(key, (b,), budget)
 
-    bb = min(block_b, b) if b % min(block_b, b) == 0 else 1
     # pad batch to a block multiple, outcomes to a lane multiple
     flat_p = _pad_to(_pad_to(flat, 1, 128), 0, block_b)
     # padded rows must be valid distributions: give them weight-1 outcome 0

@@ -186,7 +186,6 @@ def roofline_cell(cfg: ModelConfig, shape: ShapeCfg, *,
     b, s = shape.global_batch, shape.seq_len
     l = cfg.n_layers
     n_params = cfg.param_count()
-    n_active = cfg.param_count(active_only=True)
     r = Roofline(cfg.name, shape.name, mesh_name, chips)
     sh = _tp_sharded(cfg, tp)
 

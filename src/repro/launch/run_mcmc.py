@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import argparse
 import os
-import sys
 import time
 
 

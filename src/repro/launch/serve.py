@@ -2,22 +2,39 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \
       --smoke --batch 4 --prompt-len 16 --max-new 32 --sampler ky
+
+``--stream`` switches to the *posterior* streaming service instead:
+timestamped query traffic is replayed open-loop through the admission
+queue (every other argument is forwarded to ``repro.serve.cli``, which
+owns the streaming flags):
+
+  PYTHONPATH=src python -m repro.launch.serve --stream --network asia \
+      --rate 50 --max-wait-ms 20
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
-import jax
-import jax.numpy as jnp
 
-from repro.configs import get_config
-from repro.models.sampling import generate
-from repro.models.transformer import init_model
-from repro.training.data import make_batch
+def main(argv: list[str] | None = None) -> None:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--stream" in argv:
+        # streaming posterior traffic lives in repro.serve.cli (jax must
+        # not initialize before its --force-host-devices handling runs)
+        from repro.serve.cli import main as serve_main
+        serve_main(argv)
+        return
 
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
 
-def main() -> None:
+    from repro.configs import get_config
+    from repro.models.sampling import generate
+    from repro.models.transformer import init_model
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
@@ -27,7 +44,7 @@ def main() -> None:
     ap.add_argument("--sampler", default="ky",
                     choices=("ky", "categorical", "greedy"))
     ap.add_argument("--temperature", type=float, default=1.0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     key = jax.random.PRNGKey(0)
@@ -56,8 +73,7 @@ def main() -> None:
     if args.sampler == "ky":
         print(f"random bits consumed: {int(bits)} "
               f"({int(bits)/n:.2f} bits/token — softmax-free KY decode)")
-    print("sample tokens[0]:", np.asarray(tokens[0])[:16].tolist()
-          if (np := __import__('numpy')) else None)
+    print("sample tokens[0]:", np.asarray(tokens[0])[:16].tolist())
 
 
 if __name__ == "__main__":

@@ -16,13 +16,11 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.configs import get_config, shape_by_name
-from repro.configs.base import ShapeCfg
+from repro.configs import get_config
 from repro.models.transformer import init_model
-from repro.sharding.specs import batch_specs, named, param_specs
+from repro.sharding.specs import named, param_specs
 from repro.training import (
     AsyncCheckpointer,
     DataConfig,
@@ -32,12 +30,7 @@ from repro.training import (
     latest_step,
     restore,
 )
-from repro.training.data import make_batch
-from repro.training.train_step import (
-    TrainState,
-    init_train_state,
-    make_train_step,
-)
+from repro.training.train_step import init_train_state, make_train_step
 
 
 def make_mesh_arg(spec: str) -> Mesh:
@@ -62,7 +55,6 @@ def main() -> None:
 
     cfg = get_config(args.arch, smoke=args.smoke)
     mesh = make_mesh_arg(args.mesh)
-    shape = ShapeCfg("cli", args.seq_len, args.batch, "train")
 
     key = jax.random.PRNGKey(0)
     with jax.set_mesh(mesh):

@@ -17,11 +17,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.token_sampler import categorical_baseline, ky_sample_tokens
-from repro.models.layers import unembed
 from repro.models.transformer import (
     decode_step,
     encode,
-    forward,
     init_cache,
     prefill_cross_cache,
 )

@@ -16,7 +16,6 @@ Public entry points: ``init_model``, ``forward`` (train/prefill),
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -92,12 +92,10 @@ def checkerboard_halfstep(
     new = res.sample.reshape((b, h, w))
     mask = ((jnp.arange(h)[:, None] + jnp.arange(w)[None, :]) % 2) == parity
     labels = jnp.where(mask[None], new, labels)
-    active = jnp.sum(mask)
     stats = SweepStats(
         bits_used=jnp.sum(jnp.where(mask[None], res.bits_used.reshape(labels.shape), 0)),
         attempts=jnp.sum(jnp.where(mask[None], res.attempts.reshape(labels.shape), 0)),
     )
-    del active
     return labels, stats
 
 

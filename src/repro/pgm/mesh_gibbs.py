@@ -26,7 +26,6 @@ the module also runs on older jax (0.4.x) installs.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax

@@ -3,28 +3,49 @@
 Turns the compiler chain + Gibbs substrate of :mod:`repro.pgm` into a
 *query engine*: callers submit (network, evidence, query vars, budget)
 requests and get posterior marginals back.  Compiled sweep programs are
-cached by evidence *pattern* so repeat traffic never recompiles, and
-compatible queries are micro-batched across chain lanes of one jitted
-sweep — the TPU analogue of AIA mapping many independent chains onto its
-cores (paper §III).  With a serve mesh the lane axis additionally shards
-across devices (:func:`repro.launch.mesh.make_serve_mesh`).
+cached by evidence *pattern* so repeat traffic never recompiles (and
+persist to disk via ``plan_cache_dir`` so warm process starts skip the
+compiler chain), and compatible queries are micro-batched across chain
+lanes of one jitted sweep — the TPU analogue of AIA mapping many
+independent chains onto its cores (paper §III).  With a serve mesh the
+lane axis additionally shards across devices
+(:func:`repro.launch.mesh.make_serve_mesh`).
+
+Streaming traffic goes through :class:`AdmissionQueue`
+(:mod:`repro.serve.queue`): per-plan buckets dispatch on a deadline or
+size trigger, each submission gets a cancellable :class:`QueryHandle`,
+and queries retire individually on split-R̂ convergence so freed chain
+lanes backfill mid-flight.
 
 The engine (and with it jax) is imported lazily: the CLI must be able to
 apply ``--force-host-devices`` before the XLA backend initializes.
 """
-from repro.serve.plan_cache import CacheStats, PlanCache, plan_key
-from repro.serve.query import Query, Result, parse_evidence
+from repro.serve.plan_cache import (
+    CacheStats, PlanCache, load_compiled, network_fingerprint,
+    persisted_plan_path, plan_key, save_compiled)
+from repro.serve.query import (
+    Query, QueryCancelled, QueryHandle, QueryStatus, Result, parse_evidence)
 
-_LAZY = ("PosteriorEngine", "split_rhat", "make_round_runner")
+_LAZY = {
+    "PosteriorEngine": "repro.serve.engine",
+    "GroupRun": "repro.serve.engine",
+    "split_rhat": "repro.serve.engine",
+    "make_round_runner": "repro.serve.engine",
+    "AdmissionQueue": "repro.serve.queue",
+    "QueueStats": "repro.serve.queue",
+}
 
 __all__ = [
-    "CacheStats", "PlanCache", "PosteriorEngine", "Query", "Result",
-    "make_round_runner", "parse_evidence", "plan_key", "split_rhat",
+    "AdmissionQueue", "CacheStats", "GroupRun", "PlanCache",
+    "PosteriorEngine", "Query", "QueryCancelled", "QueryHandle",
+    "QueryStatus", "QueueStats", "Result", "load_compiled",
+    "make_round_runner", "network_fingerprint", "parse_evidence",
+    "persisted_plan_path", "plan_key", "save_compiled", "split_rhat",
 ]
 
 
 def __getattr__(name: str):
     if name in _LAZY:
-        from repro.serve import engine
-        return getattr(engine, name)
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -4,18 +4,29 @@
   PYTHONPATH=src python -m repro.serve.cli --network sprinkler --queries 32 \
       --patterns 2 --chains 16
   PYTHONPATH=src python -m repro.serve.cli --requests reqs.json
+  # streaming: replay timestamped traffic through the admission queue
+  PYTHONPATH=src python -m repro.serve.cli --network asia --stream \
+      --rate 50 --max-wait-ms 20
+  # persist compiled plans so warm process starts skip the compiler chain
+  PYTHONPATH=src python -m repro.serve.cli --network asia \
+      --plan-cache-dir /tmp/aia-plans
   # shard query groups over 4 devices (forced-host CPU recipe)
   PYTHONPATH=src python -m repro.serve.cli --network asia \
       --force-host-devices 4 --mesh-shape 4
 
 Request-file format: a JSON list of objects
   {"network": "asia", "evidence": {"smoke": 1}, "query_vars": ["lung"],
-   "n_samples": 8192}
+   "n_samples": 8192, "t": 0.125}
+(``t`` — the arrival timestamp in seconds, optional — is only used by
+``--stream``, which replays the file open-loop at those offsets.)
 
-Reports queries/s and MSample/s for a cold pass (empty plan cache, XLA
-compiles on the critical path) and a warm pass (same traffic replayed
-through the populated cache) — the speedup is the point of the plan
-cache.
+Batch mode reports queries/s and MSample/s for a cold pass (empty plan
+cache, XLA compiles on the critical path) and a warm pass (same traffic
+replayed through the populated cache) — the speedup is the point of the
+plan cache.  Stream mode replays the same traffic open-loop through
+:class:`repro.serve.queue.AdmissionQueue` and reports p50/p99 latency
+and queries/s against a one-query-at-a-time synchronous baseline — the
+speedup there is the point of admission-queue micro-batching.
 
 ``--mesh-shape N`` (or RxC) builds a serve mesh and shards each query
 group's chain-lane axis over its "batch" axis; ``--force-host-devices``
@@ -30,8 +41,8 @@ import time
 
 import numpy as np
 
-# NOTE: jax-touching imports (engine, networks) happen lazily inside the
-# functions below — importing the sampling stack initializes the XLA
+# NOTE: jax-touching imports (engine, queue, networks) happen lazily inside
+# the functions below — importing the sampling stack initializes the XLA
 # backend, which must not happen before --force-host-devices takes effect.
 from repro.serve.query import Query
 
@@ -69,15 +80,113 @@ def synthetic_traffic(
     return out
 
 
-def load_requests(path: str) -> list[Query]:
+def load_requests(path: str) -> tuple[list[Query], list[float] | None]:
+    """Parse a JSON request file; arrival timestamps (``"t"``) come back
+    as a second list when every request carries one, else None."""
     with open(path) as f:
         reqs = json.load(f)
-    return [
+    queries = [
         Query(r["network"], r.get("evidence", {}),
               tuple(r.get("query_vars", ())),
               n_samples=int(r.get("n_samples", 8192)))
         for r in reqs
     ]
+    arrivals = None
+    n_stamped = sum("t" in r for r in reqs)
+    if reqs and n_stamped == len(reqs):
+        arrivals = [float(r["t"]) for r in reqs]
+    elif n_stamped:
+        raise ValueError(
+            f"request file is partially timestamped ({n_stamped}/{len(reqs)} "
+            f"entries carry 't') — give every request a timestamp or none")
+    return queries, arrivals
+
+
+def measure_stream(engine, sync_engine, traffic: list[Query],
+                   arrivals: list[float] | None = None, *,
+                   rate_qps: float = 0.0, rate_multiplier: float = 4.0,
+                   max_wait_ms: float = 20.0, timeout: float = 600.0):
+    """The streaming measurement protocol, shared by the CLI and
+    ``benchmarks.bench_serve`` so the two entry points can never drift:
+
+    1. warm both plan caches off the clock (the sync engine at its only
+       lane shape, the queued engine over the pow2 group-shape ladder),
+    2. time one-query-at-a-time synchronous serving of ``traffic``,
+    3. replay the same traffic open-loop through an admission queue at
+       ``rate_qps`` (or ``rate_multiplier`` x the measured sync rate,
+       keeping the load regime machine-relative), at the given
+       ``arrivals`` offsets when the traffic is timestamped.
+
+    Returns ``(metrics, results)``: a JSON-able metrics dict (rates,
+    p50/p99 ms, speedup, queue stats) and the per-query results in
+    submission order.
+    """
+    from repro.serve.queue import AdmissionQueue
+
+    queue = AdmissionQueue(engine, max_wait_ms=max_wait_ms)
+    seen: dict[tuple, Query] = {}
+    for q in traffic:
+        _, _, _, pattern = engine.normalize(q)
+        seen.setdefault((q.network, pattern), q)
+    sync_engine.answer_batch(list(seen.values()))
+    queue.warm(traffic)
+
+    t0 = time.perf_counter()
+    for q in traffic:
+        sync_engine.answer(q)
+    sync_qps = len(traffic) / (time.perf_counter() - t0)
+
+    if arrivals is None:
+        rate = rate_qps if rate_qps > 0 else rate_multiplier * sync_qps
+        arrivals = [i / rate for i in range(len(traffic))]
+    else:
+        rate = len(traffic) / max(arrivals[-1], 1e-9)
+    try:
+        results, lat, wall = replay_stream(
+            queue, traffic, arrivals, timeout=timeout)
+    finally:
+        queue.close()
+    qps = len(traffic) / wall
+    p50, p99 = np.percentile(np.asarray(lat) * 1e3, [50, 99])
+    st = queue.stats
+    metrics = {
+        "n_queries": len(traffic),
+        "rate_qps": rate,
+        "sync_queries_per_s": sync_qps,
+        "queries_per_s": qps,
+        "speedup": qps / sync_qps,
+        "p50_ms": float(p50),
+        "p99_ms": float(p99),
+        "converged": int(sum(r.converged for r in results)),
+        "dispatched_groups": st.dispatched_groups,
+        "backfilled": st.backfilled,
+        "submitted": st.submitted,
+    }
+    return metrics, results
+
+
+def replay_stream(queue, traffic: list[Query], arrivals: list[float],
+                  *, timeout: float = 600.0):
+    """Open-loop replay: submit each query at its arrival offset
+    (seconds from the replay start), regardless of completions — the
+    arrival process never waits for the server, which is what makes the
+    measured latency an honest open-loop number.
+
+    Returns ``(results, latencies_s, wall_s)``: per-query results in
+    submission order, per-query latency (completion − *scheduled*
+    arrival), and the wall clock from start to last completion.
+    """
+    t0 = time.perf_counter()
+    handles = []
+    for q, t_arr in zip(traffic, arrivals):
+        lag = t_arr - (time.perf_counter() - t0)
+        if lag > 0:
+            time.sleep(lag)
+        handles.append(queue.submit(q))
+    results = [h.result(timeout=timeout) for h in handles]
+    lat = [(h.t_done - t0) - t_arr for h, t_arr in zip(handles, arrivals)]
+    wall = max(h.t_done for h in handles) - t0
+    return results, lat, wall
 
 
 def _pass(engine, traffic: list[Query], label: str):
@@ -92,6 +201,39 @@ def _pass(engine, traffic: list[Query], label: str):
           f"{samples/dt/1e6:.2f} MSample/s, "
           f"{bits:.2f} bits/sample, converged {conv}/{len(traffic)}")
     return dt, results
+
+
+def _run_batch(args, engine, registry, traffic):
+    cold_dt, _ = _pass(engine, traffic, "cold")
+    warm_dt, results = _pass(engine, traffic, "warm")
+    s = engine.cache.stats
+    print(f"warm/cold speedup: {cold_dt/warm_dt:.1f}x   "
+          f"plan cache: {s.hits} hits / {s.misses} misses "
+          f"(hit rate {s.hit_rate:.0%}, {len(engine.cache)} plans)")
+
+    for r in results[:args.show]:
+        bn = registry[r.query.network]
+        ev = {bn.names[bn.index(k)]: v for k, v in r.query.evidence.items()}
+        print(f"  {r.query.network} | evidence {ev}: "
+              f"rhat={r.rhat:.3f} kept={r.n_samples}")
+        for var, m in r.marginals.items():
+            print(f"    P({var} | e) = {np.round(m, 3)}")
+
+
+def _run_stream(args, engine, sync_engine, traffic, arrivals):
+    m, _ = measure_stream(
+        engine, sync_engine, traffic, arrivals,
+        rate_qps=args.rate, max_wait_ms=args.max_wait_ms)
+    print(f"stream: {m['n_queries']} queries arriving at "
+          f"{m['rate_qps']:.1f}/s -> {m['queries_per_s']:.1f} queries/s, "
+          f"p50 {m['p50_ms']:.0f} ms, p99 {m['p99_ms']:.0f} ms, "
+          f"converged {m['converged']}/{m['n_queries']}")
+    print(f"  sync one-at-a-time baseline: "
+          f"{m['sync_queries_per_s']:.1f} queries/s "
+          f"-> queued speedup {m['speedup']:.2f}x")
+    print(f"  {m['dispatched_groups']} groups "
+          f"(avg {m['submitted']/max(m['dispatched_groups'],1):.1f} "
+          f"queries), {m['backfilled']} backfilled into freed lanes")
 
 
 def main(argv=None) -> None:
@@ -109,6 +251,18 @@ def main(argv=None) -> None:
     ap.add_argument("--rhat", type=float, default=1.05)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-iu", action="store_true")
+    ap.add_argument("--stream", action="store_true",
+                    help="replay traffic open-loop through the admission "
+                         "queue; report p50/p99 latency + queries/s vs the "
+                         "one-query-at-a-time synchronous baseline")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="open-loop arrival rate (queries/s) for --stream; "
+                         "0 = 4x the measured synchronous rate")
+    ap.add_argument("--max-wait-ms", type=float, default=20.0,
+                    help="admission-queue deadline trigger")
+    ap.add_argument("--plan-cache-dir", default="",
+                    help="persist compiled plans here (.npz per plan-key); "
+                         "warm process starts skip the compiler chain")
     ap.add_argument("--mesh-shape", default="",
                     help="serve mesh, e.g. 4 or 2x2 — shard chain lanes "
                          "over devices")
@@ -134,14 +288,17 @@ def main(argv=None) -> None:
               f"{mesh.devices.size}/{len(jax.devices())} devices")
 
     registry = build_registry()
-    engine = PosteriorEngine(
-        registry, chains_per_query=args.chains, burn_in=args.burn_in,
+    engine_kw = dict(
+        chains_per_query=args.chains, burn_in=args.burn_in,
         rhat_target=args.rhat, use_iu=not args.no_iu, mesh=mesh,
-        seed=args.seed)
+        plan_cache_dir=args.plan_cache_dir or None, seed=args.seed)
+    engine = PosteriorEngine(registry, **engine_kw)
 
+    arrivals = None
     if args.requests:
-        traffic = load_requests(args.requests)
-        print(f"loaded {len(traffic)} requests from {args.requests}")
+        traffic, arrivals = load_requests(args.requests)
+        print(f"loaded {len(traffic)} requests from {args.requests}"
+              + (" (timestamped)" if arrivals else ""))
     else:
         rng = np.random.default_rng(args.seed)
         bn = registry[args.network]
@@ -150,20 +307,11 @@ def main(argv=None) -> None:
         print(f"network={args.network}: {bn.n_nodes} nodes, "
               f"{args.queries} queries over {args.patterns} evidence patterns")
 
-    cold_dt, _ = _pass(engine, traffic, "cold")
-    warm_dt, results = _pass(engine, traffic, "warm")
-    s = engine.cache.stats
-    print(f"warm/cold speedup: {cold_dt/warm_dt:.1f}x   "
-          f"plan cache: {s.hits} hits / {s.misses} misses "
-          f"(hit rate {s.hit_rate:.0%}, {len(engine.cache)} plans)")
-
-    for r in results[:args.show]:
-        bn = registry[r.query.network]
-        ev = {bn.names[bn.index(k)]: v for k, v in r.query.evidence.items()}
-        print(f"  {r.query.network} | evidence {ev}: "
-              f"rhat={r.rhat:.3f} kept={r.n_samples}")
-        for var, m in r.marginals.items():
-            print(f"    P({var} | e) = {np.round(m, 3)}")
+    if args.stream:
+        sync_engine = PosteriorEngine(registry, **engine_kw)
+        _run_stream(args, engine, sync_engine, traffic, arrivals)
+    else:
+        _run_batch(args, engine, registry, traffic)
 
 
 if __name__ == "__main__":

@@ -10,10 +10,15 @@ XLA dispatch then advances every query in the group.
 Sampling proceeds in rounds of ``sweeps_per_round`` sweeps.  After the
 burn-in rounds, each round accumulates thinned one-hot counts per lane
 (the online marginal estimate) and a per-lane mean state (the scalar
-statistic for convergence).  After every round the engine computes the
-split-R̂ of each query's chains and retires queries early once all of a
-group's queries converge — budget left over is simply not spent, which
-is where the paper's "approximate inference" throughput comes from.
+statistic for convergence).  Convergence is judged *per query*: after
+every round each query's own chains get a split-R̂, and a query retires
+— its Result finalized — the moment its chains converge, independent of
+its group mates.  Budget left over is simply not spent, which is where
+the paper's "approximate inference" throughput comes from; a retired
+query's lane block is also free real estate that :class:`GroupRun.admit`
+can hand to a waiting query of the same plan mid-flight (how the
+admission queue in :mod:`repro.serve.queue` backfills under streaming
+traffic).
 
 Multi-device serving: give the engine a mesh from
 ``repro.launch.mesh.make_serve_mesh`` and each group's lane axis
@@ -31,6 +36,7 @@ from __future__ import annotations
 
 import math
 import time
+from dataclasses import dataclass
 from typing import Mapping
 
 import jax
@@ -41,9 +47,11 @@ from jax.sharding import NamedSharding
 from repro.core.fixedpoint import DEFAULT_K
 from repro.launch.mesh import mesh_fingerprint
 from repro.pgm.compile import (
-    BNSweepStats, CompiledBN, _color_update, compile_bayesnet, init_states)
+    BNSweepStats, CompiledBN, _color_update, compile_bayesnet, init_states,
+    sum_sweep_stats)
 from repro.pgm.graph import BayesNet
-from repro.serve.plan_cache import PlanCache, plan_key
+from repro.serve.plan_cache import (
+    PlanCache, load_compiled, persisted_plan_path, plan_key, save_compiled)
 from repro.serve.query import Query, Result
 from repro.sharding.specs import (
     serve_cpt_spec, serve_lane_multiple, serve_state_spec)
@@ -76,11 +84,15 @@ def make_round_runner(prog: CompiledBN, *, sweeps_per_round: int, thin: int,
                       use_iu: bool, mesh=None):
     """Jitted ``(key, x, offset) -> (x, counts, xmean, stats)`` per round.
 
-    ``offset`` (traced int32 scalar) is the global post-burn-in sweep
-    index of the round's first sweep: draws are kept where the *global*
-    index is a multiple of ``thin``.  A round-relative ``i % thin`` would
-    restart the phase every round, so for ``sweeps_per_round % thin != 0``
-    the kept-draw spacing (and every downstream sample count) drifted.
+    ``offset`` (traced int32, scalar or per-lane ``(B,)``) is the global
+    post-burn-in sweep index of the round's first sweep: draws are kept
+    where the *global* index is a multiple of ``thin``.  A round-relative
+    ``i % thin`` would restart the phase every round, so for
+    ``sweeps_per_round % thin != 0`` the kept-draw spacing (and every
+    downstream sample count) drifted.  The per-lane form lets one round
+    serve lanes at *different* points of their thinning schedule — slots
+    backfilled mid-flight by :meth:`GroupRun.admit` restart their own
+    phase at 0 while their group mates keep counting.
 
     ``counts``: (B, n, L) thinned one-hot draw counts this round.
     ``xmean``:  (B, n) mean state over the round — per-lane scalar
@@ -116,7 +128,10 @@ def make_round_runner(prog: CompiledBN, *, sweeps_per_round: int, thin: int,
                     s2, x, plan, log_cpt, L, prog.k, use_iu)
                 bits, att = bits + st.bits_used, att + st.attempts
             onehot = (x[..., None] == jnp.arange(L)).astype(jnp.int32)
-            counts = counts + jnp.where(((offset + i) % thin) == 0, onehot, 0)
+            kept = ((offset + i) % thin) == 0
+            if kept.ndim:  # per-lane offsets: broadcast over (node, label)
+                kept = kept[:, None, None]
+            counts = counts + jnp.where(kept, onehot, 0)
             xsum = xsum + x.astype(jnp.float32)
             return (key, x, counts, xsum), BNSweepStats(bits, att)
 
@@ -131,6 +146,230 @@ def make_round_runner(prog: CompiledBN, *, sweeps_per_round: int, thin: int,
     return jax.jit(round_fn)
 
 
+@dataclass
+class GroupEntry:
+    """One normalized query inside a (network, pattern) group.
+
+    ``handle`` is the admission queue's :class:`repro.serve.query.
+    QueryHandle` when the entry arrived via streaming submission, None
+    for the synchronous ``answer_batch`` path.  ``result`` is filled in
+    at retirement.
+    """
+
+    query: Query
+    ev: dict[int, int]
+    qvars: tuple[int, ...]
+    handle: object | None = None
+    result: Result | None = None
+
+
+@dataclass
+class _Slot:
+    """Bookkeeping of one lane block [j*c, (j+1)*c) of a running group.
+
+    ``entry`` is None for a *vacant* slot: a lane block that exists only
+    because the group's slot count was padded up to a shape bucket.  A
+    vacant slot is born ``done`` — it samples throwaway replicas of
+    query 0 until :meth:`GroupRun.admit` backfills it.
+    """
+
+    entry: GroupEntry | None
+    j: int                      # slot index (lane block)
+    cap: int                    # retirement round cap (budget/max_rounds)
+    burn_left: int              # burn-in rounds still owed by this slot
+    t0: float                   # admission wall-clock (perf_counter)
+    rounds: int = 0             # post-burn-in rounds accumulated
+    counts: np.ndarray | None = None       # (n, L) int64, lane-summed
+    means: np.ndarray | None = None        # (c, n, cap) R̂ statistics
+    rhat: float = float("inf")
+    done: bool = False
+    cancelled: bool = False
+
+
+class GroupRun:
+    """Incremental run of one plan-compatible micro-batched group.
+
+    Owns the device state of a group and advances it one round per
+    :meth:`step` call, retiring queries individually as they converge or
+    exhaust their budget.  ``answer_batch`` drives the same lifecycle to
+    completion synchronously, so the admission queue's streamed dispatch
+    is numerically identical to a synchronous ``answer_batch`` over the
+    same groups (same PRNG stream, same draws).
+
+    A retired slot's lane block can be handed to a *new* query of the
+    same plan via :meth:`admit`: its lanes are re-initialized with the
+    newcomer's evidence, it burns in privately (its counts/means are
+    discarded host-side for ``burn_rounds`` rounds), then counts on its
+    own thinning phase via the runner's per-lane ``offset``.
+    """
+
+    def __init__(self, engine: "PosteriorEngine", name: str,
+                 pattern: tuple[int, ...], entries: list[GroupEntry]):
+        if not entries:
+            raise ValueError("empty group")
+        t0 = time.perf_counter()
+        self.engine = engine
+        self.name, self.pattern = name, pattern
+        self.prog, self.runner, self.cache_hit = engine._plan(name, pattern)
+        self.bn = engine._network(name)
+        self.c = engine.chains_per_query
+        self.spr = engine.sweeps_per_round
+        self.burn_rounds = math.ceil(engine.burn_in / self.spr)
+        self.n_free = len(self.prog.free_nodes)
+        nq = len(entries)
+        # shape bucketing: pad the slot count up to a power of two so
+        # streaming traffic only ever compiles O(log max_group) distinct
+        # lane shapes instead of one per group size (XLA re-jits per
+        # shape; a compile storm would eat the micro-batching win).  Pad
+        # blocks are *vacant slots* — free real estate for ``admit``.
+        shape_q = 1 << (nq - 1).bit_length() if engine.pow2_group_shapes else nq
+        b = shape_q * self.c
+        # mesh path: additionally pad the lane axis to a batch-shard
+        # multiple; pad lanes replicate query 0 and are sliced off every
+        # host read.
+        self.bt = b + (-b) % serve_lane_multiple(engine.mesh)
+
+        ev_vals = np.zeros((self.bt, len(pattern)), np.int32)
+        for j, e in enumerate(entries):
+            ev_vals[j * self.c:(j + 1) * self.c] = [e.ev[v] for v in pattern]
+        ev_vals[nq * self.c:] = ev_vals[:1]
+        engine._key, init_key, self._run_key = jax.random.split(engine._key, 3)
+        x = init_states(init_key, self.prog, self.bt,
+                        jnp.asarray(ev_vals) if pattern else None)
+        if engine.mesh is not None:
+            x = jax.device_put(x, NamedSharding(
+                engine.mesh, serve_state_spec(engine.mesh)))
+        self.x = x
+        self.slots = [self._fresh_slot(e, j, t0) for j, e in enumerate(entries)]
+        self.slots += [
+            _Slot(entry=None, j=j, cap=0, burn_left=0, t0=t0, done=True)
+            for j in range(nq, self.bt // self.c)
+        ]
+        self.bits = 0         # cumulative random bits, incl. burn-in (int64)
+        self.sweeps_done = 0  # group sweeps so far, incl. burn-in
+
+    def _fresh_slot(self, entry: GroupEntry, j: int, t0: float) -> _Slot:
+        cap = self._cap(entry.query)
+        return _Slot(
+            entry=entry, j=j, cap=cap, burn_left=self.burn_rounds, t0=t0,
+            counts=np.zeros((self.bn.n_nodes, self.prog.max_card), np.int64),
+            means=np.empty((self.c, self.bn.n_nodes, cap), np.float32))
+
+    def _cap(self, q: Query) -> int:
+        """Smallest round count whose kept-draw total (global multiples
+        of ``thin`` in [0, rounds*spr), times c lanes) covers the
+        query's budget, clamped to [min_rounds, max_rounds]."""
+        eng = self.engine
+        kept_needed = max(1, math.ceil(q.n_samples / self.c))
+        budget_rounds = math.ceil(((kept_needed - 1) * eng.thin + 1) / self.spr)
+        return min(max(budget_rounds, eng.min_rounds), eng.max_rounds)
+
+    # -- lifecycle ---------------------------------------------------------
+    @property
+    def active(self) -> bool:
+        return any(not s.done for s in self.slots)
+
+    def free_slots(self) -> int:
+        return sum(s.done for s in self.slots)
+
+    def step(self) -> list[GroupEntry]:
+        """Advance the whole group one round; returns entries that
+        retired this round (their ``result`` is filled in, or left None
+        if cancelled)."""
+        eng = self.engine
+        offsets = np.zeros(self.bt, np.int32)
+        for s in self.slots:
+            if not s.done and not s.burn_left:
+                offsets[s.j * self.c:(s.j + 1) * self.c] = s.rounds * self.spr
+        self._run_key, sub = jax.random.split(self._run_key)
+        self.x, rc, xmean, st = self.runner(sub, self.x, jnp.asarray(offsets))
+        self.bits += int(sum_sweep_stats(st).bits_used)
+        self.sweeps_done += self.spr
+
+        rc_np = xmean_np = None  # host transfer only if a slot counts
+        retired: list[GroupEntry] = []
+        for s in self.slots:
+            if s.done:
+                continue
+            if s.burn_left:
+                s.burn_left -= 1
+                continue
+            if rc_np is None:
+                rc_np = np.asarray(rc, np.int64)
+                xmean_np = np.asarray(xmean)
+            sl = slice(s.j * self.c, (s.j + 1) * self.c)
+            s.counts += rc_np[sl].sum(axis=0)
+            s.means[..., s.rounds] = xmean_np[sl]
+            s.rounds += 1
+            if s.rounds >= eng.min_rounds:
+                s.rhat = max(
+                    split_rhat(s.means[:, v, :s.rounds])
+                    for v in s.entry.qvars)
+            if ((s.rounds >= eng.min_rounds and s.rhat < eng.rhat_target)
+                    or s.rounds >= s.cap):
+                self._retire(s)
+                retired.append(s.entry)
+        return retired
+
+    def run_to_completion(self) -> None:
+        while self.active:
+            self.step()
+
+    def cancel(self, entry: GroupEntry) -> bool:
+        """Mid-flight cancellation: free the entry's slot without a
+        result.  Returns False if the entry already retired."""
+        for s in self.slots:
+            if s.entry is entry and not s.done:
+                s.done = s.cancelled = True
+                return True
+        return False
+
+    def admit(self, entry: GroupEntry) -> None:
+        """Backfill a waiting query of the same plan into a freed slot:
+        re-initialize its lane block with the newcomer's evidence and
+        give it a private burn-in before it starts counting."""
+        slot = next((s for s in self.slots if s.done), None)
+        if slot is None:
+            raise RuntimeError("no free slot to admit into")
+        c = self.c
+        ev = None
+        if self.pattern:
+            ev = jnp.asarray(np.tile(
+                np.array([entry.ev[v] for v in self.pattern], np.int32),
+                (c, 1)))
+        self.engine._key, init_key = jax.random.split(self.engine._key)
+        x0 = init_states(init_key, self.prog, c, ev)
+        self.x = self.x.at[slot.j * c:(slot.j + 1) * c].set(x0)
+        self.slots[slot.j] = self._fresh_slot(
+            entry, slot.j, time.perf_counter())
+
+    def _retire(self, s: _Slot) -> None:
+        s.done = True
+        eng, bn = self.engine, self.bn
+        marginals = {}
+        for v in s.entry.qvars:
+            m = s.counts[v, :bn.card[v]].astype(np.float64)
+            marginals[bn.names[v]] = m / max(m.sum(), 1.0)
+        # kept draws per lane: global sweep indices in [0, rounds*spr)
+        # that are multiples of ``thin``
+        kept_total = (s.rounds * self.spr + eng.thin - 1) // eng.thin
+        total_sweeps = (self.burn_rounds + s.rounds) * self.spr
+        group_node_samples = self.bt * self.n_free * self.sweeps_done
+        s.entry.result = Result(
+            query=s.entry.query,
+            marginals=marginals,
+            n_samples=int(self.c * kept_total),
+            n_sweeps=total_sweeps,
+            n_node_samples=int(self.c * self.n_free * total_sweeps),
+            rhat=float(s.rhat),
+            converged=bool(s.rhat < eng.rhat_target),
+            cache_hit=self.cache_hit,
+            wall_s=time.perf_counter() - s.t0,
+            bits_per_sample=(
+                self.bits / group_node_samples if group_node_samples else 0.0),
+        )
+
+
 class PosteriorEngine:
     """Answers batches of posterior queries over registered networks.
 
@@ -139,7 +378,12 @@ class PosteriorEngine:
     and thinning in sweeps, and a split-R̂ target for early stopping.
     ``mesh`` (from :func:`repro.launch.mesh.make_serve_mesh`) shards each
     group's chain-lane axis over the mesh's "batch" axis; ``None`` keeps
-    the single-device path.
+    the single-device path.  ``plan_cache_dir`` persists compiled plans
+    (the ColorPlan tensors, not the jitted HLO) as ``.npz`` files so warm
+    process starts skip the compiler chain.  ``pow2_group_shapes`` pads
+    each group's slot count to a power of two — streaming traffic then
+    compiles O(log max-group) distinct lane shapes instead of one per
+    observed group size, and the pad blocks double as backfill targets.
     """
 
     def __init__(
@@ -158,6 +402,8 @@ class PosteriorEngine:
         quantize_cpt_bits: int | None = 16,
         cache: PlanCache | None = None,
         mesh=None,
+        plan_cache_dir: str | None = None,
+        pow2_group_shapes: bool = True,
         seed: int = 0,
     ):
         self.networks: dict[str, BayesNet] = dict(networks or {})
@@ -173,6 +419,8 @@ class PosteriorEngine:
         self.quantize_cpt_bits = quantize_cpt_bits
         self.cache = cache if cache is not None else PlanCache()
         self.mesh = mesh
+        self.plan_cache_dir = plan_cache_dir
+        self.pow2_group_shapes = bool(pow2_group_shapes)
         self._key = jax.random.PRNGKey(seed)
 
     # -- registry ----------------------------------------------------------
@@ -203,9 +451,20 @@ class PosteriorEngine:
         """(CompiledBN, round_runner, was_cache_hit) for one pattern."""
 
         def build():
-            prog = compile_bayesnet(
-                self._network(name), k=self.k,
-                quantize_cpt_bits=self.quantize_cpt_bits, observed=pattern)
+            bn = self._network(name)
+            prog = None
+            path = None
+            if self.plan_cache_dir is not None:
+                path = persisted_plan_path(
+                    self.plan_cache_dir, name, pattern, bn, k=self.k,
+                    quantize_cpt_bits=self.quantize_cpt_bits)
+                prog = load_compiled(path, bn)
+            if prog is None:
+                prog = compile_bayesnet(
+                    bn, k=self.k,
+                    quantize_cpt_bits=self.quantize_cpt_bits, observed=pattern)
+                if path is not None:
+                    save_compiled(path, prog)
             runner = make_round_runner(
                 prog, sweeps_per_round=self.sweeps_per_round,
                 thin=self.thin, use_iu=self.use_iu, mesh=self.mesh)
@@ -216,118 +475,32 @@ class PosteriorEngine:
         return prog, runner, hit
 
     # -- serving -----------------------------------------------------------
+    def normalize(self, query: Query):
+        """Resolve a query against its network: ``(bn, evidence-by-id,
+        query-var ids, evidence pattern)``.  Raises on unknown networks,
+        bad evidence, or query vars that are observed — the admission
+        queue calls this at submit time so bad requests fail fast."""
+        bn = self._network(query.network)
+        ev = bn.normalize_evidence(query.evidence)
+        qvars = tuple(bn.index(v) for v in query.query_vars) or tuple(
+            v for v in range(bn.n_nodes) if v not in ev)
+        clash = [bn.names[v] for v in qvars if v in ev]
+        if clash:
+            raise ValueError(f"query vars {clash} are observed")
+        return bn, ev, qvars, tuple(sorted(ev))
+
     def answer(self, query: Query) -> Result:
         return self.answer_batch([query])[0]
 
     def answer_batch(self, queries: list[Query]) -> list[Result]:
         """Answer a batch; compatible queries share one jitted sweep."""
-        groups: dict[tuple, list[int]] = {}
-        normed = []
-        for i, q in enumerate(queries):
-            bn = self._network(q.network)
-            ev = bn.normalize_evidence(q.evidence)
-            qvars = tuple(bn.index(v) for v in q.query_vars) or tuple(
-                v for v in range(bn.n_nodes) if v not in ev)
-            clash = [bn.names[v] for v in qvars if v in ev]
-            if clash:
-                raise ValueError(f"query vars {clash} are observed")
-            pattern = tuple(sorted(ev))
-            normed.append((q, bn, ev, qvars))
-            groups.setdefault((q.network, pattern), []).append(i)
-
-        results: list[Result | None] = [None] * len(queries)
-        for (name, pattern), idxs in groups.items():
-            self._answer_group(name, pattern, idxs, normed, results)
-        return results  # type: ignore[return-value]
-
-    def _answer_group(self, name, pattern, idxs, normed, results) -> None:
-        t0 = time.perf_counter()
-        prog, runner, hit = self._plan(name, pattern)
-        bn = self._network(name)
-        c = self.chains_per_query
-        spr = self.sweeps_per_round
-        nq = len(idxs)
-        b = nq * c
-        # mesh path: pad the lane axis to a batch-shard multiple; pad
-        # lanes replicate query 0 and are sliced off every host read.
-        bt = b + (-b) % serve_lane_multiple(self.mesh)
-        n_free = len(prog.free_nodes)
-
-        # per-lane evidence values: query j owns lanes [j*c, (j+1)*c)
-        ev_vals = np.zeros((bt, len(pattern)), np.int32)
-        for j, i in enumerate(idxs):
-            ev = normed[i][2]
-            ev_vals[j * c:(j + 1) * c] = [ev[v] for v in pattern]
-        ev_vals[b:] = ev_vals[:1]
-
-        self._key, init_key, run_key = jax.random.split(self._key, 3)
-        x = init_states(init_key, prog, bt,
-                        jnp.asarray(ev_vals) if pattern else None)
-        if self.mesh is not None:
-            x = jax.device_put(x, NamedSharding(
-                self.mesh, serve_state_spec(self.mesh)))
-
-        burn_rounds = math.ceil(self.burn_in / spr)
-        # smallest round count whose kept-draw total (global multiples of
-        # ``thin`` in [0, rounds*spr), times c lanes) covers the budget
-        kept_needed = max(
-            math.ceil(normed[i][0].n_samples / c) for i in idxs)
-        budget_rounds = math.ceil(((kept_needed - 1) * self.thin + 1) / spr)
-        cap = min(max(budget_rounds, self.min_rounds), self.max_rounds)
-
-        bits = 0
-        for _ in range(burn_rounds):
-            run_key, sub = jax.random.split(run_key)
-            x, _, _, st = runner(sub, x, jnp.int32(0))
-            # burn-in draws spend bits too; int64 host accumulation
-            bits += int(np.asarray(st.bits_used, np.int64).sum())
-
-        counts = np.zeros((b, bn.n_nodes, prog.max_card), np.int64)
-        means = np.zeros((b, bn.n_nodes, cap), np.float32)  # R̂ statistics
-        rounds_run = 0
-        rhats = {i: float("inf") for i in idxs}
-        while rounds_run < cap:
-            run_key, sub = jax.random.split(run_key)
-            x, rc, xmean, st = runner(sub, x, jnp.int32(rounds_run * spr))
-            counts += np.asarray(rc, np.int64)[:b]
-            means[..., rounds_run] = np.asarray(xmean)[:b]
-            bits += int(np.asarray(st.bits_used, np.int64).sum())
-            rounds_run += 1
-            if rounds_run < self.min_rounds:
-                continue
-            for j, i in enumerate(idxs):
-                qvars = normed[i][3]
-                lanes = means[j * c:(j + 1) * c, :, :rounds_run]  # (C, n, r)
-                rhats[i] = max(
-                    split_rhat(lanes[:, v, :]) for v in qvars)
-            if all(r < self.rhat_target for r in rhats.values()):
-                break
-
-        jax.block_until_ready(x)
-        wall = time.perf_counter() - t0
-        total_sweeps = (burn_rounds + rounds_run) * spr
-        n_node_samples = bt * n_free * total_sweeps
-        bps = bits / n_node_samples if n_node_samples else 0.0
-        # kept draws per lane: global sweep indices in [0, rounds*spr)
-        # that are multiples of ``thin``
-        kept_total = (rounds_run * spr + self.thin - 1) // self.thin
-
-        for j, i in enumerate(idxs):
-            q, _, _, qvars = normed[i]
-            qc = counts[j * c:(j + 1) * c].sum(axis=0)   # (n, L)
-            marginals = {}
-            for v in qvars:
-                m = qc[v, :bn.card[v]].astype(np.float64)
-                marginals[bn.names[v]] = m / max(m.sum(), 1.0)
-            results[i] = Result(
-                query=q,
-                marginals=marginals,
-                n_samples=int(c * kept_total),
-                n_sweeps=total_sweeps,
-                n_node_samples=int(c * n_free * total_sweeps),
-                rhat=float(rhats[i]),
-                converged=bool(rhats[i] < self.rhat_target),
-                cache_hit=hit,
-                wall_s=wall,
-                bits_per_sample=bps,
-            )
+        groups: dict[tuple, list[GroupEntry]] = {}
+        entries = []
+        for q in queries:
+            _, ev, qvars, pattern = self.normalize(q)
+            e = GroupEntry(q, ev, qvars)
+            entries.append(e)
+            groups.setdefault((q.network, pattern), []).append(e)
+        for (name, pattern), group in groups.items():
+            GroupRun(self, name, pattern, group).run_to_completion()
+        return [e.result for e in entries]  # type: ignore[return-value]

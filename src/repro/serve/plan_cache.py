@@ -8,12 +8,25 @@ plan (see :class:`repro.pgm.compile.CompiledBN`).  Serving traffic is
 heavily repetitive in its evidence patterns (the same sensors report
 every time), so an LRU over patterns turns recompilation into a
 cold-start-only cost — the warm path goes straight to the jitted sweep.
+
+Plans also persist across *processes*: a :class:`CompiledBN` is nothing
+but plain numpy tensors (the flat log-CPT bank plus per-color int32
+gather plans), so :func:`save_compiled` / :func:`load_compiled` round-
+trip one through an ``.npz`` per plan-key and a warm process start skips
+the compiler chain entirely (XLA still jits the round runner on first
+use — only the HLO is rebuilt, not the plans).  Files are keyed by a
+content fingerprint of the network (structure + CPT bytes), so a stale
+cache directory can never serve plans for a renamed or retrained net.
 """
 from __future__ import annotations
 
+import hashlib
+import os
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Hashable
+
+import numpy as np
 
 
 def plan_key(
@@ -95,3 +108,80 @@ class PlanCache:
     def clear(self) -> None:
         self._entries.clear()
         self.stats = CacheStats()
+
+
+# -- on-disk persistence ---------------------------------------------------
+_PLAN_FIELDS = (
+    "nodes", "card", "self_base_off", "self_pa", "self_pa_stride",
+    "ch_off", "ch_vstride", "ch_self", "ch_self_stride", "ch_pa",
+    "ch_pa_stride")
+_FORMAT_VERSION = 1
+
+
+def network_fingerprint(bn) -> str:
+    """Content hash of a BayesNet: structure (cards, parents) + CPT
+    bytes.  Two nets with the same fingerprint compile to identical
+    plans, so it is the only identity a persisted plan needs."""
+    h = hashlib.sha1()
+    h.update(repr((int(bn.n_nodes), tuple(int(c) for c in bn.card),
+                   tuple(tuple(p) for p in bn.parents))).encode())
+    for t in bn.cpt:
+        h.update(np.ascontiguousarray(t, np.float64).tobytes())
+    return h.hexdigest()
+
+
+def persisted_plan_path(directory: str, network: str,
+                        pattern: tuple[int, ...], bn, *,
+                        k: int, quantize_cpt_bits: int | None) -> str:
+    """``.npz`` path of one persisted plan.  The filename folds in every
+    input of the compiler chain — pattern, fixed-point precision,
+    quantization, and the network's content fingerprint — but *not*
+    runner parameters (sweeps_per_round, thin, mesh): those shape the
+    jitted HLO, which is rebuilt per process anyway."""
+    tag = hashlib.sha1(repr(
+        (network, tuple(pattern), k, quantize_cpt_bits,
+         network_fingerprint(bn), _FORMAT_VERSION)).encode()).hexdigest()[:16]
+    return os.path.join(directory, f"plan_{network}_{tag}.npz")
+
+
+def save_compiled(path: str, prog) -> None:
+    """Serialize a CompiledBN's tensors (log-CPT bank + ColorPlans) to
+    ``path``.  Written atomically (tmp + rename) so a crashed writer
+    never leaves a half-file for the next process to trip over."""
+    payload = {
+        "version": np.int64(_FORMAT_VERSION),
+        "log_cpt": prog.log_cpt,
+        "max_card": np.int64(prog.max_card),
+        "k": np.int64(prog.k),
+        "observed": np.asarray(prog.observed, np.int32),
+        "n_plans": np.int64(len(prog.plans)),
+    }
+    for i, plan in enumerate(prog.plans):
+        for f in _PLAN_FIELDS:
+            payload[f"plan{i}_{f}"] = getattr(plan, f)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as fh:
+        np.savez_compressed(fh, **payload)
+    os.replace(tmp, path)
+
+
+def load_compiled(path: str, bn):
+    """Rebuild a CompiledBN from ``path``; None if absent or unreadable
+    (a corrupt file degrades to a recompile, never an error)."""
+    import zipfile
+
+    from repro.pgm.compile import ColorPlan, CompiledBN
+    try:
+        with np.load(path) as z:
+            if int(z["version"]) != _FORMAT_VERSION:
+                return None
+            plans = tuple(
+                ColorPlan(**{f: z[f"plan{i}_{f}"] for f in _PLAN_FIELDS})
+                for i in range(int(z["n_plans"])))
+            return CompiledBN(
+                bn=bn, log_cpt=z["log_cpt"], plans=plans,
+                max_card=int(z["max_card"]), k=int(z["k"]),
+                observed=tuple(int(v) for v in z["observed"]))
+    except (OSError, KeyError, ValueError, zipfile.BadZipFile):
+        return None

@@ -6,9 +6,17 @@ Nodes may be referred to by name (``"rain"``) or id; the engine
 normalizes both.  A :class:`Result` carries the marginals plus the
 diagnostics a serving stack needs (convergence, sample counts, cache
 behaviour, throughput accounting).
+
+Streaming submission (:mod:`repro.serve.queue`) wraps each query in a
+:class:`QueryHandle` — a future supporting blocking :meth:`QueryHandle.
+result`, status inspection, and per-query :meth:`QueryHandle.cancel`
+both before dispatch and mid-flight.
 """
 from __future__ import annotations
 
+import enum
+import threading
+import time
 from dataclasses import dataclass, field
 from typing import Mapping, Sequence
 
@@ -77,3 +85,94 @@ class Result:
             raise KeyError(
                 f"{var!r} was not a query variable of this request "
                 f"(have: {sorted(self.marginals)})") from None
+
+
+class QueryCancelled(RuntimeError):
+    """Raised by :meth:`QueryHandle.result` for a cancelled query."""
+
+
+class QueryStatus(enum.Enum):
+    QUEUED = "queued"        # admitted, waiting for a dispatch trigger
+    RUNNING = "running"      # packed into a live group (incl. burn-in)
+    DONE = "done"            # result available
+    CANCELLED = "cancelled"  # cancelled pre-dispatch or mid-flight
+    FAILED = "failed"        # dispatch raised; result() re-raises
+
+
+class QueryHandle:
+    """Future for one streamed query.
+
+    Thread-safe: the admission queue's dispatcher resolves it, any
+    thread may :meth:`result`/:meth:`cancel`.  ``cancel`` before
+    dispatch removes the query from its bucket immediately; mid-flight
+    it is honoured at the next round boundary, freeing the query's
+    chain lanes for a waiting query.  Cancellation after completion is
+    a no-op returning False.
+    """
+
+    def __init__(self, query: Query, *, on_cancel=None):
+        self.query = query
+        self.t_submit = time.perf_counter()
+        self.t_done: float | None = None
+        self._status = QueryStatus.QUEUED
+        self._result: Result | None = None
+        self._error: BaseException | None = None
+        self._event = threading.Event()
+        self._lock = threading.Lock()
+        self._on_cancel = on_cancel       # queue callback: pre-dispatch unlink
+        self.cancel_requested = False     # dispatcher polls at round edges
+
+    @property
+    def status(self) -> QueryStatus:
+        return self._status
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def cancel(self) -> bool:
+        """Request cancellation; True if the query will not produce a
+        result (already-finished queries return False)."""
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self.cancel_requested = True
+        if self._on_cancel is not None:
+            self._on_cancel(self)
+        return True
+
+    def result(self, timeout: float | None = None) -> Result:
+        """Block for the result.  Raises :class:`QueryCancelled` on
+        cancellation, the original exception on dispatch failure, and
+        TimeoutError if ``timeout`` elapses first."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"query not finished within {timeout}s "
+                f"(status={self._status.value})")
+        if self._status is QueryStatus.CANCELLED:
+            raise QueryCancelled(f"query {self.query} was cancelled")
+        if self._error is not None:
+            raise self._error
+        return self._result  # type: ignore[return-value]
+
+    # -- dispatcher-side transitions (queue internal) ----------------------
+    def _mark_running(self) -> None:
+        with self._lock:
+            if not self._event.is_set():
+                self._status = QueryStatus.RUNNING
+
+    def _finish(self, status: QueryStatus, *, result: Result | None = None,
+                error: BaseException | None = None) -> QueryStatus | None:
+        """Resolve the future; returns the status actually applied (None
+        if already resolved).  A DONE racing a cancel() that has already
+        returned True resolves CANCELLED — cancel's promise ("will not
+        produce a result") is kept atomically under the handle lock."""
+        with self._lock:
+            if self._event.is_set():
+                return None
+            if status is QueryStatus.DONE and self.cancel_requested:
+                status, result = QueryStatus.CANCELLED, None
+            self._status = status
+            self._result, self._error = result, error
+            self.t_done = time.perf_counter()
+            self._event.set()
+            return status

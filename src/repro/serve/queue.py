@@ -1,0 +1,318 @@
+"""Async admission queue: micro-batching under *streaming* traffic.
+
+``answer_batch`` exploits chain-lane packing only when the caller hands
+it a pre-assembled batch; real serving traffic arrives one query at a
+time from many clients.  :class:`AdmissionQueue` closes that gap — the
+serving analogue of AIA's compiler keeping 16 cores busy from a stream
+of independent programs (paper §III): incoming queries accumulate in
+per-``(network, evidence-pattern)`` buckets, and a bucket dispatches as
+one packed :class:`repro.serve.engine.GroupRun` when either
+
+* a **deadline** fires — the bucket's oldest query has waited
+  ``max_wait_ms`` (bounds tail latency under trickle traffic), or
+* a **size trigger** fires — the bucket can fill ``max_group_lanes``
+  chain lanes (defaults to a multiple of the mesh's
+  ``serve_lane_multiple``, so a full group shards without padding).
+
+Each ``submit`` returns a :class:`repro.serve.query.QueryHandle`
+supporting blocking ``result()`` and per-query ``cancel()`` — honoured
+immediately pre-dispatch, and at the next round boundary mid-flight.
+Because the engine retires queries individually on split-R̂
+convergence, a converged (or cancelled) query frees its chain lanes
+mid-flight and the queue *backfills* them with waiting queries of the
+same plan — lanes stay hot instead of idling until the slowest group
+member converges.
+
+Single dispatcher thread; the queue owns the engine while open (do not
+call ``answer_batch`` on the same engine concurrently).  Buckets are
+served FIFO by their oldest arrival, so no evidence pattern starves.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+from repro.serve.engine import GroupEntry, GroupRun, PosteriorEngine
+from repro.serve.query import Query, QueryHandle, QueryStatus
+from repro.sharding.specs import serve_lane_multiple
+
+# Default size trigger, in queries, per dispatch group (scaled by the
+# mesh width so a full group's lane count is shard-aligned).
+DEFAULT_GROUP_QUERIES = 8
+
+# dispatch_log is a diagnostics ring, not an audit trail — bounded so a
+# long-lived queue doesn't leak one tuple per group forever
+DISPATCH_LOG_MAXLEN = 256
+
+
+@dataclass
+class QueueStats:
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    cancelled_pending: int = 0
+    cancelled_in_flight: int = 0
+    dispatched_groups: int = 0
+    backfilled: int = 0
+    # (network, pattern, n_queries) of recent dispatched groups, in order
+    dispatch_log: deque = field(
+        default_factory=lambda: deque(maxlen=DISPATCH_LOG_MAXLEN))
+
+
+class AdmissionQueue:
+    """Streaming front door of a :class:`PosteriorEngine`.
+
+    Parameters
+    ----------
+    max_wait_ms:
+        Deadline trigger — a bucket flushes once its oldest query has
+        waited this long (the latency/batching trade-off knob).
+    max_group_lanes:
+        Size trigger — a bucket flushes as soon as its queries fill
+        this many chain lanes.  Defaults to ``DEFAULT_GROUP_QUERIES *
+        chains_per_query * serve_lane_multiple(mesh)``.
+    backfill:
+        Re-use the lanes of retired (converged/cancelled) queries for
+        waiting queries of the same plan mid-flight.
+    """
+
+    def __init__(self, engine: PosteriorEngine, *, max_wait_ms: float = 10.0,
+                 max_group_lanes: int | None = None, backfill: bool = True):
+        self.engine = engine
+        self.max_wait_s = float(max_wait_ms) / 1e3
+        c = engine.chains_per_query
+        if max_group_lanes is None:
+            max_group_lanes = (
+                DEFAULT_GROUP_QUERIES * c * serve_lane_multiple(engine.mesh))
+        self.max_group_queries = max(1, int(max_group_lanes) // c)
+        self.backfill = bool(backfill)
+        self.stats = QueueStats()
+        self._buckets: dict[tuple, deque[GroupEntry]] = {}
+        self._cv = threading.Condition()
+        self._closed = False
+        self._flush_before = -1.0  # flush(): entries at/before this are ripe
+        self._inflight: list[GroupEntry] = []  # current group, under _cv
+        self._thread = threading.Thread(
+            target=self._run, name="admission-queue", daemon=True)
+        self._thread.start()
+
+    # -- client side -------------------------------------------------------
+    def submit(self, query: Query) -> QueryHandle:
+        """Admit one query; returns its future.  Raises immediately on
+        malformed queries (unknown network, bad evidence, observed
+        query vars) — validation must not wait for the dispatcher."""
+        _, ev, qvars, pattern = self.engine.normalize(query)
+        handle = QueryHandle(query, on_cancel=self._cancel_pending)
+        entry = GroupEntry(query, ev, qvars, handle=handle)
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("queue is closed")
+            self._buckets.setdefault(
+                (query.network, pattern), deque()).append(entry)
+            self.stats.submitted += 1
+            self._cv.notify_all()
+        return handle
+
+    def pending(self) -> int:
+        with self._cv:
+            return sum(len(d) for d in self._buckets.values())
+
+    def warm(self, traffic: list[Query]) -> None:
+        """Pre-compile, off the serving clock, every (plan, lane-shape)
+        combination streamed dispatch of ``traffic`` can produce: one
+        query per distinct (network, evidence-pattern), answered at each
+        pow2 group size up to this queue's size trigger.  Call before
+        the first ``submit`` — it drives the engine from the caller's
+        thread, which is only safe while the dispatcher is idle."""
+        seen: dict[tuple, Query] = {}
+        for q in traffic:
+            _, _, _, pattern = self.engine.normalize(q)
+            seen.setdefault((q.network, pattern), q)
+        for q in seen.values():
+            # minimal-budget probe: compiling the (plan, shape) is the
+            # point — n_samples=1 clamps each rung to min_rounds instead
+            # of sampling the caller's full budget per shape
+            probe = Query(q.network, q.evidence, q.query_vars, n_samples=1)
+            n = 1
+            while True:
+                # a full pop of max_group_queries pads to the pow2 above
+                # it, so the ladder must cover that ceiling too (e.g.
+                # max 24 -> shapes 1,2,4,8,16 and 32-via-24)
+                self.engine.answer_batch(
+                    [probe] * min(n, self.max_group_queries))
+                if n >= self.max_group_queries:
+                    break
+                n *= 2
+
+    def flush(self) -> None:
+        """Make everything currently pending dispatchable now, ignoring
+        deadlines (queries submitted *after* the flush keep theirs)."""
+        with self._cv:
+            self._flush_before = time.perf_counter()
+            self._cv.notify_all()
+
+    def close(self, *, drain: bool = True, timeout: float | None = None):
+        """Stop accepting queries.  ``drain=True`` dispatches everything
+        still pending first; ``drain=False`` cancels pending *and*
+        in-flight queries (the dispatcher honours the in-flight
+        cancellations at the next round boundary, so close does not
+        block on a slow-converging group running out its cap)."""
+        with self._cv:
+            self._closed = True
+            if not drain:
+                for dq in self._buckets.values():
+                    for e in dq:
+                        e.handle._finish(QueryStatus.CANCELLED)
+                        self.stats.cancelled_pending += 1
+                self._buckets.clear()
+                for e in self._inflight:
+                    e.handle.cancel_requested = True
+            self._cv.notify_all()
+        self._thread.join(timeout)
+
+    def __enter__(self) -> "AdmissionQueue":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=exc == (None, None, None))
+
+    # -- cancellation ------------------------------------------------------
+    def _cancel_pending(self, handle: QueryHandle) -> None:
+        """Pre-dispatch path of ``handle.cancel()``: unlink from the
+        bucket and resolve now.  If the query already left its bucket,
+        the dispatcher honours ``cancel_requested`` at the next round
+        boundary instead."""
+        with self._cv:
+            for key, dq in self._buckets.items():
+                for e in dq:
+                    if e.handle is handle:
+                        dq.remove(e)
+                        if not dq:
+                            del self._buckets[key]
+                        handle._finish(QueryStatus.CANCELLED)
+                        self.stats.cancelled_pending += 1
+                        return
+
+    # -- dispatcher --------------------------------------------------------
+    def _ripe(self, dq: deque, now: float) -> bool:
+        return (len(dq) >= self.max_group_queries
+                or now - dq[0].handle.t_submit >= self.max_wait_s
+                or dq[0].handle.t_submit <= self._flush_before
+                or self._closed)
+
+    def _pop_ready_locked(self):
+        """Oldest-arrival ripe bucket (FIFO across evidence patterns),
+        popped up to the size trigger; None if nothing is ripe."""
+        now = time.perf_counter()
+        ready = [(dq[0].handle.t_submit, key)
+                 for key, dq in self._buckets.items() if self._ripe(dq, now)]
+        if not ready:
+            return None
+        _, key = min(ready)
+        dq = self._buckets[key]
+        batch = [dq.popleft() for _ in range(
+            min(len(dq), self.max_group_queries))]
+        if not dq:
+            del self._buckets[key]
+        return key, batch
+
+    def _next_deadline_locked(self) -> float | None:
+        if not self._buckets:
+            return None
+        oldest = min(dq[0].handle.t_submit for dq in self._buckets.values())
+        return max(0.0, oldest + self.max_wait_s - time.perf_counter())
+
+    def _other_bucket_ripe(self, key: tuple) -> bool:
+        """True if some *other* plan's bucket is already dispatchable —
+        backfill yields to it so one hot pattern cannot starve the rest
+        (FIFO fairness across evidence patterns)."""
+        now = time.perf_counter()
+        with self._cv:
+            return any(k != key and self._ripe(dq, now)
+                       for k, dq in self._buckets.items())
+
+    def _take_pending(self, key: tuple, n: int) -> list[GroupEntry]:
+        """Up to ``n`` waiting entries of one plan bucket, for backfill."""
+        out: list[GroupEntry] = []
+        with self._cv:
+            dq = self._buckets.get(key)
+            while dq and len(out) < n:
+                e = dq.popleft()
+                if e.handle.cancel_requested:
+                    e.handle._finish(QueryStatus.CANCELLED)
+                    self.stats.cancelled_pending += 1
+                    continue
+                out.append(e)
+            if dq is not None and not dq:
+                del self._buckets[key]
+        return out
+
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                item = self._pop_ready_locked()
+                while item is None:
+                    if self._closed and not self._buckets:
+                        return
+                    self._cv.wait(self._next_deadline_locked())
+                    item = self._pop_ready_locked()
+                # registered under the SAME lock hold that popped the
+                # batch: a close(drain=False) can never observe queries
+                # that left their bucket but aren't in-flight yet
+                self._inflight = list(item[1])
+            key, batch = item
+            self._dispatch(key, batch)
+
+    def _dispatch(self, key: tuple, batch: list[GroupEntry]) -> None:
+        name, pattern = key
+        for e in batch:
+            e.handle._mark_running()
+        try:
+            self._dispatch_run(key, name, pattern, batch)
+        finally:
+            with self._cv:
+                self._inflight = []
+
+    def _dispatch_run(self, key, name, pattern, batch) -> None:
+        try:
+            run = GroupRun(self.engine, name, pattern, batch)
+        except BaseException as exc:
+            for e in batch:
+                e.handle._finish(QueryStatus.FAILED, error=exc)
+                self.stats.failed += 1
+            return
+        self.stats.dispatched_groups += 1
+        self.stats.dispatch_log.append((name, pattern, len(batch)))
+        try:
+            while run.active:
+                # mid-flight cancellations, honoured at round boundaries
+                for s in run.slots:
+                    if (not s.done and s.entry.handle.cancel_requested
+                            and run.cancel(s.entry)):
+                        s.entry.handle._finish(QueryStatus.CANCELLED)
+                        self.stats.cancelled_in_flight += 1
+                if not run.active:
+                    break
+                for e in run.step():
+                    # a cancel() that already promised "no result" wins
+                    # over the retirement (resolved atomically in _finish)
+                    final = e.handle._finish(QueryStatus.DONE, result=e.result)
+                    if final is QueryStatus.CANCELLED:
+                        self.stats.cancelled_in_flight += 1
+                    elif final is not None:
+                        self.stats.completed += 1
+                if (self.backfill and run.active and run.free_slots()
+                        and not self._other_bucket_ripe(key)):
+                    for e in self._take_pending(key, run.free_slots()):
+                        with self._cv:
+                            self._inflight.append(e)
+                        e.handle._mark_running()
+                        run.admit(e)
+                        self.stats.backfilled += 1
+        except BaseException as exc:
+            for s in run.slots:
+                if s.entry is not None and not s.entry.handle.done():
+                    s.entry.handle._finish(QueryStatus.FAILED, error=exc)
+                    self.stats.failed += 1

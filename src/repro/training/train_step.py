@@ -12,7 +12,6 @@ per-tensor scale, which XLA then all-reduces in int8 width).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

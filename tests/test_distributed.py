@@ -11,7 +11,6 @@ The PGM/serve mesh layers run on any jax with shard_map/NamedSharding;
 the training meshes target the explicit-sharding API (AxisType,
 jax.set_mesh) and are gated on jax >= 0.6.
 """
-import json
 
 import jax
 import pytest

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import exp_table, log_table, quantize_probs, sigmoid_table
+from repro.core import exp_table, quantize_probs, sigmoid_table
 from repro.core import rng as rng_lib
 from repro.kernels import ref as ref_lib
 from repro.kernels.interp_lut import interp_pallas

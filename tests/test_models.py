@@ -9,7 +9,7 @@ import pytest
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import ModelConfig
 from repro.models.layers import unembed
-from repro.models.moe import apply_moe, init_moe, moe_capacity
+from repro.models.moe import apply_moe, init_moe
 from repro.models.sampling import generate
 from repro.models.ssm import apply_ssm, init_ssm, init_ssm_state
 from repro.models.transformer import (
@@ -21,8 +21,6 @@ from repro.models.transformer import (
     loss_fn,
     prefill_cross_cache,
 )
-from repro.training.data import make_batch
-from repro.configs.base import ShapeCfg
 
 
 def _smoke_batch(cfg, b=2, s=16):

@@ -3,11 +3,9 @@ marginals, compiler-chain correctness, MRF energy descent."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hyp import given, settings, st
 
 from repro.pgm import (
-    BayesNet,
     BNSweepStats,
     checkerboard,
     color_bayesnet,

@@ -1,6 +1,9 @@
 """Posterior query service: evidence-conditioned marginals vs exact
 enumeration, clamp invariance, thinning/accounting arithmetic,
-plan-cache behaviour (incl. mesh fingerprints), CLI smoke."""
+plan-cache behaviour (incl. mesh fingerprints, on-disk persistence),
+CLI smoke."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,8 +11,8 @@ import pytest
 
 from repro.pgm import compile_bayesnet, init_states, make_sweep, networks, run_gibbs
 from repro.serve import (
-    PlanCache, PosteriorEngine, Query, make_round_runner, parse_evidence,
-    split_rhat)
+    PlanCache, PosteriorEngine, Query, load_compiled, make_round_runner,
+    parse_evidence, persisted_plan_path, save_compiled, split_rhat)
 
 
 def _registry():
@@ -121,6 +124,25 @@ class TestEngine:
 
 
 class TestThinning:
+    def test_per_lane_offsets_match_scalar(self):
+        """A uniform per-lane offset vector keeps every lane on the same
+        thinning schedule as the scalar form (the vector form exists so
+        backfilled slots can restart their phase mid-group)."""
+        prog = compile_bayesnet(networks.sprinkler())
+        runner = make_round_runner(
+            prog, sweeps_per_round=16, thin=3, use_iu=True)
+        x = init_states(jax.random.PRNGKey(0), prog, 4)
+        _, c_scalar, _, _ = runner(jax.random.PRNGKey(1), x, jnp.int32(16))
+        _, c_vec, _, _ = runner(
+            jax.random.PRNGKey(1), x, jnp.full((4,), 16, jnp.int32))
+        assert np.array_equal(np.asarray(c_scalar), np.asarray(c_vec))
+        # mixed offsets: lanes 2,3 run a fresh phase (6 kept in [0,16))
+        # while lanes 0,1 continue an old one (5 kept in [16,32))
+        _, c_mix, _, _ = runner(
+            jax.random.PRNGKey(1), x, jnp.asarray([16, 16, 0, 0], jnp.int32))
+        kept = np.asarray(c_mix).sum(-1)[:, 0]
+        assert kept.tolist() == [5, 5, 6, 6]
+
     def test_round_runner_uses_global_offset(self):
         """Draws are kept on *global* post-burn-in sweep indices that are
         multiples of ``thin`` — a round-relative phase (the old bug) kept
@@ -226,6 +248,65 @@ class TestPlanCache:
         assert eng.cache.stats.misses == 2
 
 
+class TestPlanPersistence:
+    def test_save_load_roundtrip(self, tmp_path):
+        """Every tensor of a CompiledBN survives the .npz round-trip."""
+        bn = networks.asia()
+        prog = compile_bayesnet(bn, observed=("smoke",))
+        path = persisted_plan_path(
+            str(tmp_path), "asia", prog.observed, bn, k=prog.k,
+            quantize_cpt_bits=16)
+        save_compiled(path, prog)
+        loaded = load_compiled(path, bn)
+        assert loaded is not None
+        assert np.array_equal(loaded.log_cpt, prog.log_cpt)
+        assert (loaded.max_card, loaded.k) == (prog.max_card, prog.k)
+        assert loaded.observed == prog.observed
+        assert len(loaded.plans) == len(prog.plans)
+        for a, b in zip(loaded.plans, prog.plans):
+            for f in ("nodes", "card", "self_base_off", "self_pa",
+                      "self_pa_stride", "ch_off", "ch_vstride", "ch_self",
+                      "ch_self_stride", "ch_pa", "ch_pa_stride"):
+                assert np.array_equal(getattr(a, f), getattr(b, f)), f
+
+    def test_warm_start_skips_compiler_chain(self, tmp_path, monkeypatch):
+        """Second engine over the same cache dir must never reach
+        compile_bayesnet — the persisted plans stand in for the whole
+        compiler chain."""
+        kw = dict(chains_per_query=8, burn_in=16, max_rounds=4, seed=5)
+        q = Query("sprinkler", {"wetgrass": 1}, ("rain",), n_samples=256)
+        e1 = PosteriorEngine(_registry(), plan_cache_dir=str(tmp_path), **kw)
+        r1 = e1.answer(q)
+        assert any(f.endswith(".npz") for f in os.listdir(tmp_path))
+
+        import repro.serve.engine as engine_mod
+
+        def boom(*a, **k):
+            raise AssertionError("compiler chain ran despite persisted plan")
+
+        monkeypatch.setattr(engine_mod, "compile_bayesnet", boom)
+        e2 = PosteriorEngine(_registry(), plan_cache_dir=str(tmp_path), **kw)
+        r2 = e2.answer(q)
+        # same seed, same plan -> bit-identical marginals
+        assert np.array_equal(r1.marginal("rain"), r2.marginal("rain"))
+
+    def test_content_fingerprint_keys_the_file(self, tmp_path):
+        """A renamed/retrained network must not collide with a stale
+        persisted plan: the path folds in the CPT content hash."""
+        spr, asia = networks.sprinkler(), networks.asia()
+        p1 = persisted_plan_path(str(tmp_path), "net", (0,), spr,
+                                 k=12, quantize_cpt_bits=16)
+        p2 = persisted_plan_path(str(tmp_path), "net", (0,), asia,
+                                 k=12, quantize_cpt_bits=16)
+        assert p1 != p2
+
+    def test_corrupt_file_degrades_to_recompile(self, tmp_path):
+        path = os.path.join(str(tmp_path), "plan_bad.npz")
+        with open(path, "wb") as f:
+            f.write(b"not an npz")
+        assert load_compiled(path, networks.sprinkler()) is None
+
+
 class TestParseEvidence:
     def test_parse_and_errors(self):
         assert parse_evidence("smoke=1,dysp=0") == {"smoke": 1, "dysp": 0}
@@ -250,3 +331,23 @@ class TestServeCLI:
         rc, out = run_subprocess(code)
         assert rc == 0, out
         assert "warm/cold speedup" in out and "queries/s" in out
+
+    @pytest.mark.slow
+    def test_cli_stream_smoke(self, tmp_path):
+        """--stream replays open-loop through the admission queue and
+        --plan-cache-dir persists compiled plans on the way."""
+        from conftest import run_subprocess
+
+        cache_dir = str(tmp_path / "plans")
+        code = (
+            "from repro.serve.cli import main\n"
+            "main(['--network', 'sprinkler', '--queries', '8',\n"
+            "      '--patterns', '2', '--chains', '8', '--budget', '256',\n"
+            "      '--burn-in', '16', '--stream', '--rate', '200',\n"
+            f"      '--max-wait-ms', '50', '--plan-cache-dir', {cache_dir!r}])\n"
+        )
+        rc, out = run_subprocess(code)
+        assert rc == 0, out
+        assert "stream:" in out and "p50" in out and "speedup" in out
+        import os
+        assert any(f.endswith(".npz") for f in os.listdir(cache_dir)), out

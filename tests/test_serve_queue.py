@@ -1,0 +1,241 @@
+"""Admission queue: deadline/size dispatch triggers, per-query
+cancellation (pre-dispatch + mid-flight), per-query early retirement
+with identity against synchronous ``answer_batch``, lane backfill, and
+FIFO fairness across evidence patterns."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.pgm import networks
+from repro.serve import (
+    AdmissionQueue, PosteriorEngine, Query, QueryCancelled, QueryStatus)
+
+# generous: CI runners pay an XLA compile inside the dispatcher thread
+RESULT_TIMEOUT = 300.0
+
+
+def _registry():
+    return {"sprinkler": networks.sprinkler(), "asia": networks.asia()}
+
+
+def _engine(**kw):
+    kw.setdefault("chains_per_query", 8)
+    kw.setdefault("burn_in", 16)
+    kw.setdefault("max_rounds", 4)
+    return PosteriorEngine(_registry(), **kw)
+
+
+def _wait_status(handle, status, timeout=60.0):
+    t0 = time.time()
+    while handle.status is not status and time.time() - t0 < timeout:
+        time.sleep(0.005)
+    return handle.status is status
+
+
+class TestDispatchTriggers:
+    def test_deadline_flush(self):
+        """A partial bucket dispatches once its oldest query has waited
+        max_wait_ms — no size trigger needed."""
+        queue = AdmissionQueue(_engine(), max_wait_ms=200.0,
+                               max_group_lanes=1024 * 8)
+        try:
+            hs = [queue.submit(Query("sprinkler", {"wetgrass": 1}, ("rain",),
+                                     n_samples=256)) for _ in range(2)]
+            rs = [h.result(timeout=RESULT_TIMEOUT) for h in hs]
+        finally:
+            queue.close()
+        assert all(abs(r.marginal("rain").sum() - 1.0) < 1e-9 for r in rs)
+        # both flushed as one deadline-triggered group
+        assert list(queue.stats.dispatch_log) == [("sprinkler", (3,), 2)]
+
+    def test_size_trigger_flush_at_lane_capacity(self):
+        """A bucket dispatches the moment its queries fill
+        max_group_lanes chain lanes, long before any deadline."""
+        eng = _engine()
+        queue = AdmissionQueue(eng, max_wait_ms=3_600_000.0,
+                               max_group_lanes=2 * eng.chains_per_query)
+        try:
+            hs = [queue.submit(Query("sprinkler", {"wetgrass": 1}, ("rain",),
+                                     n_samples=256)) for _ in range(2)]
+            # the hour-long deadline would time this out if the size
+            # trigger didn't fire
+            rs = [h.result(timeout=RESULT_TIMEOUT) for h in hs]
+        finally:
+            queue.close()
+        assert len(rs) == 2
+        assert list(queue.stats.dispatch_log) == [("sprinkler", (3,), 2)]
+
+    def test_fifo_across_two_evidence_patterns(self):
+        """Buckets dispatch oldest-arrival first: pattern A (submitted
+        first) must run before pattern B."""
+        queue = AdmissionQueue(_engine(), max_wait_ms=150.0,
+                               max_group_lanes=1024 * 8)
+        try:
+            ha = queue.submit(Query("sprinkler", {"wetgrass": 1}, ("rain",),
+                                    n_samples=256))
+            time.sleep(0.01)
+            hb = queue.submit(Query("sprinkler", {"cloudy": 0}, ("rain",),
+                                    n_samples=256))
+            ha.result(timeout=RESULT_TIMEOUT)
+            hb.result(timeout=RESULT_TIMEOUT)
+        finally:
+            queue.close()
+        patterns = [pat for (_, pat, _) in queue.stats.dispatch_log]
+        assert patterns == [(3,), (0,)]  # wetgrass bucket, then cloudy
+
+    def test_submit_validates_immediately(self):
+        queue = AdmissionQueue(_engine(), max_wait_ms=10.0)
+        try:
+            with pytest.raises(KeyError):
+                queue.submit(Query("nope", {}, ()))
+            with pytest.raises(ValueError):
+                queue.submit(Query("sprinkler", {"rain": 1}, ("rain",)))
+        finally:
+            queue.close()
+
+    def test_close_rejects_new_submissions(self):
+        queue = AdmissionQueue(_engine(), max_wait_ms=10.0)
+        queue.close()
+        with pytest.raises(RuntimeError):
+            queue.submit(Query("sprinkler", {"wetgrass": 1}, ("rain",)))
+
+
+class TestCancellation:
+    def test_cancel_pre_dispatch(self):
+        queue = AdmissionQueue(_engine(), max_wait_ms=3_600_000.0)
+        try:
+            h = queue.submit(Query("sprinkler", {"wetgrass": 1}, ("rain",)))
+            assert h.cancel() is True
+            assert h.status is QueryStatus.CANCELLED
+            with pytest.raises(QueryCancelled):
+                h.result(timeout=1.0)
+            assert queue.pending() == 0
+            assert queue.stats.cancelled_pending == 1
+        finally:
+            queue.close()
+
+    def test_cancel_mid_flight_frees_the_group(self):
+        """rhat_target=0 never converges and the cap is effectively
+        unbounded, so only the mid-flight cancellation path can end the
+        run (result(timeout=...) would fail the test otherwise)."""
+        eng = _engine(rhat_target=0.0, max_rounds=10**6, sweeps_per_round=4)
+        queue = AdmissionQueue(eng, max_wait_ms=5.0)
+        try:
+            h = queue.submit(Query("sprinkler", {"wetgrass": 1}, ("rain",),
+                                   n_samples=10**9))
+            assert _wait_status(h, QueryStatus.RUNNING, timeout=120.0)
+            assert h.cancel() is True
+            with pytest.raises(QueryCancelled):
+                h.result(timeout=RESULT_TIMEOUT)
+            assert queue.stats.cancelled_in_flight == 1
+        finally:
+            queue.close()
+
+    def test_close_without_drain_cancels_in_flight(self):
+        """close(drain=False) must not block on a slow-converging group
+        running out its cap — in-flight queries get cancel_requested and
+        the dispatcher bails at the next round boundary."""
+        eng = _engine(rhat_target=0.0, max_rounds=10**6, sweeps_per_round=4)
+        queue = AdmissionQueue(eng, max_wait_ms=5.0)
+        h = queue.submit(Query("sprinkler", {"wetgrass": 1}, ("rain",),
+                               n_samples=10**9))
+        assert _wait_status(h, QueryStatus.RUNNING, timeout=120.0)
+        queue.close(drain=False, timeout=240.0)
+        with pytest.raises(QueryCancelled):
+            h.result(timeout=1.0)
+
+    def test_cancel_after_done_returns_false(self):
+        queue = AdmissionQueue(_engine(), max_wait_ms=5.0)
+        try:
+            h = queue.submit(Query("sprinkler", {"wetgrass": 1}, ("rain",),
+                                   n_samples=256))
+            r = h.result(timeout=RESULT_TIMEOUT)
+            assert h.cancel() is False
+            assert h.status is QueryStatus.DONE
+            assert r.marginal("rain").shape == (2,)
+        finally:
+            queue.close()
+
+
+class TestRetirementAndBackfill:
+    def test_queued_identical_to_answer_batch(self):
+        """Same traffic, same seeds: streamed dispatch must produce
+        bit-identical results to synchronous answer_batch — the queue
+        reroutes scheduling, not sampling."""
+        qs = [
+            Query("sprinkler", {"wetgrass": 1}, ("rain",), n_samples=2048),
+            Query("sprinkler", {"wetgrass": 0}, ("rain",), n_samples=2048),
+            Query("asia", {"smoke": 1}, ("lung",), n_samples=1024),
+            Query("sprinkler", {"wetgrass": 1}, ("sprinkler",),
+                  n_samples=2048),
+        ]
+        ref = PosteriorEngine(_registry(), chains_per_query=8, burn_in=16,
+                              seed=11).answer_batch(qs)
+        eng = PosteriorEngine(_registry(), chains_per_query=8, burn_in=16,
+                              seed=11)
+        queue = AdmissionQueue(eng, max_wait_ms=3_600_000.0)
+        try:
+            hs = [queue.submit(q) for q in qs]
+            queue.flush()
+            got = [h.result(timeout=RESULT_TIMEOUT) for h in hs]
+        finally:
+            queue.close()
+        for a, b in zip(ref, got):
+            assert a.n_samples == b.n_samples
+            assert a.rhat == b.rhat
+            assert set(a.marginals) == set(b.marginals)
+            for k in a.marginals:
+                assert np.array_equal(a.marginals[k], b.marginals[k])
+
+    def test_early_retirement_backfills_freed_lanes(self):
+        """With per-query retirement, a small-budget query frees its
+        lanes mid-flight and a waiting query of the same plan is
+        admitted into them — one dispatched group serves three
+        queries."""
+        eng = _engine(rhat_target=0.0, min_rounds=4, max_rounds=16)
+        queue = AdmissionQueue(eng, max_wait_ms=3_600_000.0,
+                               max_group_lanes=2 * eng.chains_per_query)
+        try:
+            ha = queue.submit(Query("sprinkler", {"wetgrass": 1}, ("rain",),
+                                    n_samples=1))        # cap: min_rounds=4
+            hb = queue.submit(Query("sprinkler", {"wetgrass": 1}, ("rain",),
+                                    n_samples=10**9))    # cap: max_rounds=16
+            # same (network, pattern) bucket; waits for a freed slot
+            hc = queue.submit(Query("sprinkler", {"wetgrass": 0}, ("rain",),
+                                    n_samples=1))
+            ra = ha.result(timeout=RESULT_TIMEOUT)
+            rb = hb.result(timeout=RESULT_TIMEOUT)
+            rc = hc.result(timeout=RESULT_TIMEOUT)
+        finally:
+            queue.close()
+        # per-query retirement: the small budget retired early
+        assert ra.n_sweeps < rb.n_sweeps
+        # the third query rode freed lanes: one group, one backfill
+        assert queue.stats.dispatched_groups == 1
+        assert queue.stats.backfilled == 1
+        # and its answer is a real posterior for ITS evidence
+        exact = networks.sprinkler().marginals_exact({"wetgrass": 0})[2]
+        assert abs(rc.marginal("rain").sum() - 1.0) < 1e-9
+        assert np.abs(rc.marginal("rain") - exact).max() < 0.15
+
+    def test_vacant_pow2_pad_slots_accept_backfill(self):
+        """pow2 shape bucketing leaves vacant slots in odd-sized groups;
+        a late query of the same plan backfills one instead of waiting
+        for a whole new dispatch."""
+        eng = _engine(rhat_target=0.0, min_rounds=4, max_rounds=12)
+        queue = AdmissionQueue(eng, max_wait_ms=3_600_000.0,
+                               max_group_lanes=3 * eng.chains_per_query)
+        try:
+            hs = [queue.submit(Query("sprinkler", {"wetgrass": 1}, ("rain",),
+                                     n_samples=10**9)) for _ in range(3)]
+            # dispatches now (size trigger: 3 queries), padded to 4 slots
+            assert _wait_status(hs[0], QueryStatus.RUNNING, timeout=120.0)
+            hl = queue.submit(Query("sprinkler", {"wetgrass": 1}, ("rain",),
+                                    n_samples=1))
+            rs = [h.result(timeout=RESULT_TIMEOUT) for h in hs + [hl]]
+        finally:
+            queue.close()
+        assert queue.stats.dispatched_groups == 1
+        assert queue.stats.backfilled == 1
+        assert all(abs(r.marginal("rain").sum() - 1.0) < 1e-9 for r in rs)

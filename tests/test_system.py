@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.configs import (ARCH_IDS, MCMC_CONFIGS, SHAPES, cell_runnable,
-                           get_config, input_specs, shape_by_name)
+                           get_config, input_specs)
 
 REPORTS = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "reports", "dryrun")

@@ -3,7 +3,6 @@ decomposition, TV distance to the true softmax, categorical agreement."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hyp import given, settings, st
 
 from repro.core import (
