@@ -3,15 +3,20 @@
 CPU-measured MSample/s at reduced size (full 500×333 runs via
 ``launch.run_mcmc --scale 1``); the per-site sample cost is
 size-independent so the rate extrapolates.  Accuracy vs synthetic ground
-truth doubles as the correctness gate."""
+truth doubles as the correctness gate.  ``run_masked`` adds the
+evidence-clamped variants: direct clamped Gibbs MSample/s, and
+masked-MRF queries/s through the posterior engine (interactive
+segmentation served via ``repro.serve``)."""
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, time_call
-from repro.pgm.gibbs import init_labels, mrf_gibbs
+from repro.pgm.gibbs import clamp_labels, init_labels, mrf_gibbs
 from repro.pgm.networks import art_task, penguin_task
 
 
@@ -31,11 +36,58 @@ def run(name, mrf, truth, chains=4, sweeps=10, report=print):
                f"MSample/s={n_samples/dt/1e6:.2f};bits={bits:.2f};acc={acc:.3f}"))
 
 
+def run_masked(name, mrf, truth, chains=4, sweeps=10, report=print):
+    """Clamped-checkerboard throughput: ~10% of sites pinned to truth
+    (a generous scribble), free-site MSample/s reported."""
+    h, w = mrf.shape
+    rng = np.random.default_rng(0)
+    mask = rng.random((h, w)) < 0.1
+    labels = clamp_labels(
+        init_labels(jax.random.PRNGKey(0), mrf, chains), mask,
+        np.where(mask, truth, 0))
+    unary, pairwise = jnp.asarray(mrf.unary), jnp.asarray(mrf.pairwise)
+    clamp = jnp.asarray(mask)
+    fn = jax.jit(lambda k, l: mrf_gibbs(k, l, unary, pairwise,
+                                        n_sweeps=sweeps, clamp=clamp))
+    dt = time_call(fn, jax.random.PRNGKey(1), labels, warmup=1, iters=3)
+    out, stats = fn(jax.random.PRNGKey(1), labels)
+    n_samples = chains * sweeps * int((~mask).sum())
+    acc = float((np.asarray(out[0]) == truth).mean())
+    bits = float(stats.bits_used) / n_samples
+    report(row(name, dt / n_samples * 1e6,
+               f"MSample/s={n_samples/dt/1e6:.2f};bits={bits:.2f};"
+               f"acc={acc:.3f};clamped={int(mask.sum())}"))
+
+
+def run_masked_serve(name, h=24, w=24, n_queries=8, budget=1024,
+                     report=print):
+    """Masked-MRF qps through the posterior engine (warm plan cache) —
+    the serving-facing number; the full cold/warm + identity treatment
+    lives in ``benchmarks.bench_serve.run_mrf``."""
+    from repro.serve.cli import synthetic_mrf_traffic
+    from repro.serve.engine import PosteriorEngine
+
+    mrf, _ = penguin_task(h=h, w=w)
+    traffic = synthetic_mrf_traffic(
+        mrf, "penguin", n_queries, 2, np.random.default_rng(0), budget)
+    engine = PosteriorEngine({"penguin": mrf}, chains_per_query=8,
+                             burn_in=32)
+    engine.answer_batch(traffic)  # warm: compiles per mask pattern
+    t0 = time.perf_counter()
+    results = engine.answer_batch(traffic)
+    dt = time.perf_counter() - t0
+    conv = sum(r.converged for r in results)
+    report(row(name, dt / n_queries * 1e6,
+               f"qps={n_queries/dt:.2f};converged={conv}/{n_queries}"))
+
+
 def main(report=print):
     mrf, truth = penguin_task(h=100, w=66)   # 1/5 scale Penguin
     run("mrf_penguin_100x66_L2", mrf, truth, report=report)
+    run_masked("mrf_penguin_masked_100x66_L2", mrf, truth, report=report)
     mrf, truth = art_task(h=72, w=96)        # 1/4 scale Art
     run("mrf_art_72x96_L16", mrf, truth, report=report)
+    run_masked_serve("mrf_masked_serve_24x24", report=report)
 
 
 if __name__ == "__main__":

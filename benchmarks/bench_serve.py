@@ -5,7 +5,10 @@ cold plan cache (compiler chain + XLA compile on the critical path) vs a
 warm one (pure sampling), plus bits/sample and the cache hit rate.
 Traffic cycles a small set of evidence patterns, as repeat sensor
 traffic does — the regime the (network, evidence-pattern) plan cache is
-designed for.
+designed for.  Both served families are covered: Bayesian networks
+(:func:`run`) and masked MRF grids — scribble pixel-mask evidence —
+(:func:`run_mrf`, which also checks queued-vs-``answer_batch``
+bit-identity for the MRF path).
 
 Invocation forms:
 
@@ -101,6 +104,66 @@ def _identical(a, b) -> bool:
                     for k in a.marginals))
 
 
+def run_mrf(name, *, h=16, w=16, n_queries=12, n_patterns=2, budget=1024,
+            chains=8, mesh=None, report=print):
+    """Masked-MRF serving benchmark: cold + warm qps for scribble-mask
+    traffic over a Potts grid, plus the queued-vs-``answer_batch``
+    identity bit — the pixel-evidence twin of :func:`run`."""
+    from repro.pgm.networks import penguin_task
+    from repro.serve.cli import synthetic_mrf_traffic
+    from repro.serve.engine import PosteriorEngine
+    from repro.serve.queue import AdmissionQueue
+
+    network = "mrf_penguin"
+    mrf, _ = penguin_task(h=h, w=w)
+    traffic = synthetic_mrf_traffic(
+        mrf, network, n_queries, n_patterns, np.random.default_rng(0), budget)
+    kw = dict(chains_per_query=chains, burn_in=32, mesh=mesh)
+    engine = PosteriorEngine({network: mrf}, **kw)
+    cold_dt, cold_samples, _ = _pass(engine, traffic)
+    warm_dt, warm_samples, results = _pass(engine, traffic)
+    conv = sum(r.converged for r in results)
+    bits = float(np.mean([r.bits_per_sample for r in results]))
+    s = engine.cache.stats
+
+    # identity: same traffic, same seeds -> queued == caller-batched
+    eng_a = PosteriorEngine({network: mrf}, **kw, seed=7)
+    ref = eng_a.answer_batch(traffic)
+    eng_b = PosteriorEngine({network: mrf}, **kw, seed=7)
+    queue_b = AdmissionQueue(eng_b, max_wait_ms=3_600_000.0,
+                             max_group_lanes=n_queries * chains)
+    try:
+        handles = [queue_b.submit(q) for q in traffic]
+        queue_b.flush()
+        streamed = [hd.result(timeout=600) for hd in handles]
+    finally:
+        queue_b.close()
+    identical = all(_identical(a, b) for a, b in zip(ref, streamed))
+
+    report(row(
+        f"serve_{name}_cold", cold_dt / n_queries * 1e6,
+        f"qps={n_queries/cold_dt:.2f};MSample/s={cold_samples/cold_dt/1e6:.3f}"))
+    report(row(
+        f"serve_{name}_warm", warm_dt / n_queries * 1e6,
+        f"qps={n_queries/warm_dt:.2f};MSample/s={warm_samples/warm_dt/1e6:.3f};"
+        f"speedup={cold_dt/warm_dt:.1f}x;hit_rate={s.hit_rate:.2f};"
+        f"converged={conv}/{n_queries};identical={identical}"))
+    return {
+        "name": name,
+        "network": network,
+        "grid": [h, w],
+        "n_queries": n_queries,
+        "cold": {"wall_s": cold_dt, "queries_per_s": n_queries / cold_dt,
+                 "msample_per_s": cold_samples / cold_dt / 1e6},
+        "warm": {"wall_s": warm_dt, "queries_per_s": n_queries / warm_dt,
+                 "msample_per_s": warm_samples / warm_dt / 1e6},
+        "bits_per_sample": bits,
+        "cache_hit_rate": s.hit_rate,
+        "converged": conv,
+        "identical": bool(identical),
+    }
+
+
 def run_stream(name, network, *, n_queries=32, n_patterns=2, budget=2048,
                chains=16, rate_qps=0.0, max_wait_ms=250.0, mesh=None,
                report=print):
@@ -167,10 +230,13 @@ def main(report=print, *, smoke=False, stream=False, mesh_shape=None):
     kw = dict(mesh=mesh, report=report)
     if smoke:
         runs = [run("asia_8n", "asia", n_queries=8, budget=512, chains=8,
-                    **kw)]
+                    **kw),
+                run_mrf("mrf_12x12", h=12, w=12, n_queries=8, budget=256,
+                        **kw)]
     else:
         runs = [run("asia_8n", "asia", **kw),
-                run("child_scale_20n", "child_scale", n_queries=16, **kw)]
+                run("child_scale_20n", "child_scale", n_queries=16, **kw),
+                run_mrf("mrf_24x24", h=24, w=24, n_queries=16, **kw)]
     rep = {"suite": "serve", "n_devices": n_devices,
            "mesh_shape": None if mesh_shape is None else list(mesh_shape),
            "runs": runs}

@@ -10,12 +10,22 @@ Checks, per run matched by name against the baseline:
 
 * warm queries/s must not drop more than ``--tolerance`` (relative) —
   warm throughput is pure sampling, the number the serving stack lives
-  on; cold numbers are compile-dominated and too noisy to gate.
+  on; cold numbers are compile-dominated and too noisy to gate.  Covers
+  both served families: Bayesian-network runs and masked-MRF runs.
+* any run carrying an ``identical`` flag (the masked-MRF queued-vs-
+  ``answer_batch`` check) must report True — a perf gate that lets the
+  queue drift numerically would be enforcing the wrong thing.
 * the streaming section (when both reports carry one): queued queries/s
   under the same tolerance, queued-vs-synchronous speedup at least
-  ``--min-stream-speedup``, and the queued-vs-``answer_batch`` identity
-  bit must be True — a perf gate that lets the queue drift numerically
-  would be enforcing the wrong thing.
+  ``--min-stream-speedup``, and the stream identity bit must be True.
+
+Failures print one readable line each —
+``FAIL metric=<name> baseline=<x> observed=<y> floor=<z> (tolerance N%)``
+— and the gate exits 1.  **Exit 2** is reserved for a broken comparison
+setup: a missing/unreadable baseline file, or metrics present in the
+current report with no baseline entry (so a freshly added benchmark can
+never silently pass — commit a refreshed baseline via ``--update``
+instead).
 
 The default tolerance is deliberately loose (30%) to absorb shared-CI
 runner noise; the gate exists to catch step-function regressions (an
@@ -35,56 +45,105 @@ import shutil
 import sys
 
 
-def _fail(failures: list[str]) -> None:
-    for f in failures:
-        print(f"FAIL: {f}")
-    sys.exit(1)
+class Failure:
+    """One gate violation, printed as a metric/baseline/observed diff."""
+
+    def __init__(self, metric: str, *, observed, baseline=None, floor=None,
+                 tolerance=None, note: str = ""):
+        self.metric = metric
+        self.observed, self.baseline = observed, baseline
+        self.floor, self.tolerance = floor, tolerance
+        self.note = note
+
+    def __str__(self) -> str:
+        parts = [f"FAIL metric={self.metric}"]
+        if self.baseline is not None:
+            parts.append(f"baseline={self.baseline:.3f}")
+        parts.append(f"observed={self.observed}")
+        if self.floor is not None:
+            parts.append(f"floor={self.floor:.3f}")
+        if self.tolerance is not None:
+            parts.append(f"(tolerance {self.tolerance:.0%})")
+        if self.note:
+            parts.append(f"— {self.note}")
+        return " ".join(str(p) for p in parts)
+
+
+def _qps_check(metric, cur, base, tolerance) -> Failure | None:
+    floor = base * (1.0 - tolerance)
+    print(f"{metric}: {cur:.2f} qps (baseline {base:.2f}, "
+          f"floor {floor:.2f})")
+    if cur < floor:
+        return Failure(metric, observed=round(cur, 3), baseline=base,
+                       floor=floor, tolerance=tolerance)
+    return None
 
 
 def check(current: dict, baseline: dict, *, tolerance: float,
-          min_stream_speedup: float) -> list[str]:
-    failures = []
-    floor = 1.0 - tolerance
+          min_stream_speedup: float) -> tuple[list[Failure], list[Failure]]:
+    """Returns ``(regressions, setup_errors)`` — setup errors (exit 2)
+    are metrics that *cannot* be compared: current runs with no baseline
+    entry."""
+    failures: list[Failure] = []
+    setup: list[Failure] = []
     base_runs = {r["name"]: r for r in baseline.get("runs", [])}
     for run in current.get("runs", []):
         base = base_runs.get(run["name"])
         if base is None:
+            setup.append(Failure(
+                f"{run['name']}.warm.queries_per_s",
+                observed=round(run["warm"]["queries_per_s"], 3),
+                note="no baseline entry — new metric? refresh the "
+                     "baseline with --update and commit it"))
             continue
-        cur_qps = run["warm"]["queries_per_s"]
-        base_qps = base["warm"]["queries_per_s"]
-        print(f"{run['name']}: warm {cur_qps:.2f} qps "
-              f"(baseline {base_qps:.2f}, floor {base_qps * floor:.2f})")
-        if cur_qps < base_qps * floor:
-            failures.append(
-                f"{run['name']}: warm queries/s regressed "
-                f"{cur_qps:.2f} < {base_qps:.2f} * {floor:.2f}")
+        f = _qps_check(f"{run['name']}.warm.queries_per_s",
+                       run["warm"]["queries_per_s"],
+                       base["warm"]["queries_per_s"], tolerance)
+        if f:
+            failures.append(f)
+        if "identical" in run and not run["identical"]:
+            failures.append(Failure(
+                f"{run['name']}.identical", observed=False,
+                note="queued results are not identical to answer_batch"))
     missing = set(base_runs) - {r["name"] for r in current.get("runs", [])}
-    if missing:
-        failures.append(f"runs missing from current report: {sorted(missing)}")
+    for name in sorted(missing):
+        failures.append(Failure(
+            f"{name}.warm.queries_per_s", observed="absent",
+            note="run missing from current report"))
 
     stream, base_stream = current.get("stream"), baseline.get("stream")
     if stream is not None:
         if not stream.get("identical", False):
-            failures.append(
-                "stream: queued results are not identical to answer_batch")
+            failures.append(Failure(
+                "stream.identical", observed=False,
+                note="queued results are not identical to answer_batch"))
         speedup = stream.get("speedup", 0.0)
         print(f"stream: {stream['queries_per_s']:.2f} qps, "
               f"speedup {speedup:.2f}x vs sync "
               f"(floor {min_stream_speedup:.2f}x)")
         if speedup < min_stream_speedup:
-            failures.append(
-                f"stream: queued/sync speedup {speedup:.2f}x "
-                f"< {min_stream_speedup:.2f}x")
+            failures.append(Failure(
+                "stream.speedup", observed=round(speedup, 3),
+                floor=min_stream_speedup,
+                note="queued/sync throughput ratio below floor"))
         if base_stream is not None:
-            cur, base = stream["queries_per_s"], base_stream["queries_per_s"]
-            if cur < base * floor:
-                failures.append(
-                    f"stream: queued queries/s regressed "
-                    f"{cur:.2f} < {base:.2f} * {floor:.2f}")
+            f = _qps_check("stream.queries_per_s",
+                           stream["queries_per_s"],
+                           base_stream["queries_per_s"], tolerance)
+            if f:
+                failures.append(f)
+        else:
+            setup.append(Failure(
+                "stream.queries_per_s",
+                observed=round(stream["queries_per_s"], 3),
+                note="no baseline stream section — refresh the baseline "
+                     "with --update and commit it"))
     elif base_stream is not None:
-        failures.append("baseline has a stream section but current doesn't "
-                        "(did the bench run without --stream?)")
-    return failures
+        failures.append(Failure(
+            "stream", observed="absent",
+            note="baseline has a stream section but current doesn't "
+                 "(did the bench run without --stream?)"))
+    return failures, setup
 
 
 def main(argv=None) -> None:
@@ -105,12 +164,21 @@ def main(argv=None) -> None:
         return
     with open(args.current) as f:
         current = json.load(f)
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    failures = check(current, baseline, tolerance=args.tolerance,
-                     min_stream_speedup=args.min_stream_speedup)
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except (OSError, ValueError) as exc:
+        print(f"FAIL metric=baseline observed=unreadable — {args.baseline}: "
+              f"{exc} (run with --update to create it, then commit)")
+        sys.exit(2)
+    failures, setup = check(current, baseline, tolerance=args.tolerance,
+                            min_stream_speedup=args.min_stream_speedup)
+    for f in failures + setup:
+        print(f)
+    if setup:
+        sys.exit(2)
     if failures:
-        _fail(failures)
+        sys.exit(1)
     print("perf gate: OK")
 
 

@@ -3,16 +3,22 @@ from repro.pgm.coloring import checkerboard, color_bayesnet, dsatur, verify_colo
 from repro.pgm.compile import (
     BNSweepStats, CompiledBN, compile_bayesnet, init_states, make_sweep,
     run_gibbs, sum_sweep_stats)
-from repro.pgm.gibbs import checkerboard_halfstep, init_labels, mrf_gibbs
+from repro.pgm.gibbs import (
+    checkerboard_halfstep, clamp_labels, init_labels, mrf_gibbs)
 from repro.pgm.graph import BayesNet, MRFGrid
-from repro.pgm.mesh_gibbs import make_mesh_gibbs_step, pad_mrf, shard_mrf
+from repro.pgm.mesh_gibbs import (
+    make_mesh_gibbs_step, pad_mrf, shard_clamp, shard_mrf)
+from repro.pgm.mrf_compile import (
+    CompiledMRF, compile_mrf, init_mrf_states, mask_of)
 from repro.pgm import networks
 
 __all__ = [
     "checkerboard", "color_bayesnet", "dsatur", "verify_coloring",
     "BNSweepStats", "CompiledBN", "compile_bayesnet", "init_states",
     "make_sweep", "run_gibbs", "sum_sweep_stats",
-    "checkerboard_halfstep", "init_labels", "mrf_gibbs",
-    "BayesNet", "MRFGrid", "make_mesh_gibbs_step", "pad_mrf", "shard_mrf",
+    "checkerboard_halfstep", "clamp_labels", "init_labels", "mrf_gibbs",
+    "CompiledMRF", "compile_mrf", "init_mrf_states", "mask_of",
+    "BayesNet", "MRFGrid", "make_mesh_gibbs_step", "pad_mrf",
+    "shard_clamp", "shard_mrf",
     "networks",
 ]

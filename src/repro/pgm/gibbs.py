@@ -81,20 +81,30 @@ def checkerboard_halfstep(
     pairwise: jax.Array,        # (L, L)
     parity: jax.Array,          # scalar int32 0/1
     *,
+    clamp: jax.Array | None = None,   # (H, W) or (B, H, W) bool, True = frozen
     k: int = DEFAULT_K,
     use_iu: bool = True,
 ) -> tuple[jax.Array, SweepStats]:
-    """Resample all sites of one checkerboard color, all chains at once."""
+    """Resample all sites of one checkerboard color, all chains at once.
+
+    ``clamp`` marks evidence (observed-pixel) sites: they are skipped by
+    the update and by the bit accounting, but their *fixed* labels still
+    sit in ``labels`` and therefore keep contributing pairwise energy to
+    their neighbours — exactly CPT conditioning, lattice edition.
+    """
     b, h, w = labels.shape
     l = unary.shape[-1]
     wts = site_weights(labels, unary, pairwise, k=k, use_iu=use_iu)
     res = ky_sample(key, wts.reshape((-1, l)))
     new = res.sample.reshape((b, h, w))
-    mask = ((jnp.arange(h)[:, None] + jnp.arange(w)[None, :]) % 2) == parity
-    labels = jnp.where(mask[None], new, labels)
+    mask = (((jnp.arange(h)[:, None] + jnp.arange(w)[None, :]) % 2) == parity)[None]
+    if clamp is not None:
+        mask = mask & ~(clamp if clamp.ndim == 3 else clamp[None])
+    labels = jnp.where(mask, new, labels)
+    zero = jnp.zeros((), jnp.int32)
     stats = SweepStats(
-        bits_used=jnp.sum(jnp.where(mask[None], res.bits_used.reshape(labels.shape), 0)),
-        attempts=jnp.sum(jnp.where(mask[None], res.attempts.reshape(labels.shape), 0)),
+        bits_used=jnp.sum(jnp.where(mask, res.bits_used.reshape(labels.shape), zero)),
+        attempts=jnp.sum(jnp.where(mask, res.attempts.reshape(labels.shape), zero)),
     )
     return labels, stats
 
@@ -107,18 +117,27 @@ def mrf_gibbs(
     pairwise: jax.Array,
     *,
     n_sweeps: int,
+    clamp: jax.Array | None = None,
     k: int = DEFAULT_K,
     use_iu: bool = True,
 ) -> tuple[jax.Array, SweepStats]:
-    """n_sweeps full checkerboard sweeps (2 half-steps each)."""
+    """n_sweeps full checkerboard sweeps (2 half-steps each).
+
+    ``clamp`` ((H, W) or (B, H, W) bool) freezes evidence sites for the
+    whole run — pin their labels in ``labels0`` first (see
+    :func:`clamp_labels`); clamped sites never resample but stay visible
+    to their neighbours' energies.
+    """
 
     def sweep(carry, i):
         labels, key = carry
         key, k0, k1 = jax.random.split(key, 3)
         labels, s0 = checkerboard_halfstep(
-            k0, labels, unary, pairwise, jnp.int32(0), k=k, use_iu=use_iu)
+            k0, labels, unary, pairwise, jnp.int32(0), clamp=clamp,
+            k=k, use_iu=use_iu)
         labels, s1 = checkerboard_halfstep(
-            k1, labels, unary, pairwise, jnp.int32(1), k=k, use_iu=use_iu)
+            k1, labels, unary, pairwise, jnp.int32(1), clamp=clamp,
+            k=k, use_iu=use_iu)
         return (labels, key), SweepStats(
             bits_used=s0.bits_used + s1.bits_used,
             attempts=s0.attempts + s1.attempts,
@@ -128,6 +147,19 @@ def mrf_gibbs(
         sweep, (labels0, key), jnp.arange(n_sweeps))
     return labels, SweepStats(
         bits_used=jnp.sum(stats.bits_used), attempts=jnp.sum(stats.attempts))
+
+
+def clamp_labels(labels: jax.Array, clamp: jax.Array,
+                 values: jax.Array) -> jax.Array:
+    """Pin clamped sites of a (B, H, W) label field to their observed
+    values ((H, W) or (B, H, W)); the companion of ``mrf_gibbs(clamp=)``."""
+    clamp = jnp.asarray(clamp, bool)
+    values = jnp.asarray(values, labels.dtype)
+    if clamp.ndim == 2:
+        clamp = clamp[None]
+    if values.ndim == 2:
+        values = values[None]
+    return jnp.where(clamp, values, labels)
 
 
 def init_labels(key: jax.Array, mrf: MRFGrid, n_chains: int) -> jax.Array:

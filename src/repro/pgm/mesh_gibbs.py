@@ -139,6 +139,7 @@ def make_mesh_gibbs_step(
     k: int = DEFAULT_K,
     use_iu: bool = True,
     comm: str = "halo",  # "halo" (C3) | "allgather" (global-buffer baseline)
+    clamped: bool = False,
 ):
     """Build the jitted distributed full-sweep fn.
 
@@ -151,10 +152,18 @@ def make_mesh_gibbs_step(
     *real* (non-pad) sites this sweep — sum it host-side in int64
     (``np.asarray(bits, np.int64).sum()``); the old cross-mesh int32
     ``psum`` silently wrapped on large grids / long accumulations.
+
+    With ``clamped=True`` the signature grows a trailing ``clamp``
+    operand — an (H', W') bool field (True = observed pixel, sharded
+    like the lattice; see :func:`shard_clamp`).  Clamped sites are
+    excluded from the checkerboard update and the bit accounting but,
+    unlike pad sites, stay *inside* the validity mask: their fixed
+    labels keep feeding pairwise energy to their neighbours, which is
+    what makes this evidence conditioning rather than lattice surgery.
     """
     nr, nc = mesh.shape[row_axis], mesh.shape[col_axis]
 
-    def body(key, labels, unary_tile, pairwise, pvalid):
+    def body(key, labels, unary_tile, pairwise, pvalid, *rest):
         r = jax.lax.axis_index(row_axis)
         c = jax.lax.axis_index(col_axis)
         key = jax.random.fold_in(key, r * nc + c)
@@ -165,6 +174,8 @@ def make_mesh_gibbs_step(
         # pairwise sums (see pad_mrf); its interior is the tile's own
         # update/stats mask.
         valid_tile = pvalid[1:-1, 1:-1]
+        if clamped:
+            valid_tile = valid_tile & ~rest[0]
 
         def gather(tile):
             """(B, ht, wt) tile -> halo-padded (B, ht+2, wt+2) labels."""
@@ -200,11 +211,14 @@ def make_mesh_gibbs_step(
         # caller's int64 sum of the (nr, nc) grid
         return labels, (bits0 + bits1).reshape(1, 1)
 
+    in_specs = (P(), P(None, row_axis, col_axis),
+                P(row_axis, col_axis, None), P(), P(row_axis, col_axis))
+    if clamped:
+        in_specs = in_specs + (P(row_axis, col_axis),)
     mapped = _shard_map(
         body,
         mesh=mesh,
-        in_specs=(P(), P(None, row_axis, col_axis),
-                  P(row_axis, col_axis, None), P(), P(row_axis, col_axis)),
+        in_specs=in_specs,
         out_specs=(P(None, row_axis, col_axis), P(row_axis, col_axis)),
         **_SHARD_MAP_KW,
     )
@@ -254,3 +268,30 @@ def shard_mrf(mesh: Mesh, mrf: MRFGrid, n_chains: int, key: jax.Array,
     v = jax.device_put(jnp.asarray(blocked_validity(valid, nr, nc)),
                        NamedSharding(mesh, P(row_axis, col_axis)))
     return lab, u, pw, v, (hp, wp)
+
+
+def shard_clamp(mesh: Mesh, clamp: np.ndarray, values: np.ndarray,
+                labels: jax.Array, row_axis: str = "row",
+                col_axis: str = "col") -> tuple[jax.Array, jax.Array]:
+    """Pad + place a pixel-evidence mask for the clamped mesh step.
+
+    ``clamp``/``values`` are (H, W) over the *true* lattice; the label
+    field ``labels`` is the padded (B, H', W') one from :func:`shard_mrf`.
+    Returns ``(labels, clamp_dev)``: labels with every clamped site
+    pinned to its observed value, and the (H', W') device mask to pass
+    as the trailing operand of ``make_mesh_gibbs_step(clamped=True)``.
+    Pad sites stay unclamped — the validity mask already freezes them.
+    """
+    b, hp, wp = labels.shape
+    h, w = np.asarray(clamp).shape
+    pc = np.zeros((hp, wp), bool)
+    pc[:h, :w] = np.asarray(clamp, bool)
+    pv = np.zeros((hp, wp), np.int32)
+    pv[:h, :w] = np.where(np.asarray(clamp, bool),
+                          np.asarray(values, np.int32), 0)
+    labels = jnp.where(jnp.asarray(pc)[None], jnp.asarray(pv)[None], labels)
+    labels = jax.device_put(
+        labels, NamedSharding(mesh, P(None, row_axis, col_axis)))
+    clamp_dev = jax.device_put(
+        jnp.asarray(pc), NamedSharding(mesh, P(row_axis, col_axis)))
+    return labels, clamp_dev

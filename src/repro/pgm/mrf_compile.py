@@ -1,0 +1,114 @@
+"""Compiled sweep programs for served MRF grids (pixel-mask evidence).
+
+The MRF analogue of :mod:`repro.pgm.compile`: where a Bayesian network's
+evidence *pattern* is the tuple of clamped node ids, an MRF's is the
+tuple of clamped **flat site indices** (``r * W + c``) — the sorted,
+hashable identity of a scribble/pixel mask.  One compiled program serves
+*any* observed labels over the same mask: values live in the label
+field, not the program, exactly as BN evidence values live in the state
+vector.  That is what makes plan caching (and lane packing of queries
+that share a mask) sound for grids too.
+
+There is no gather-plan stage here — the lattice's "plan" is the
+checkerboard itself (2 colors, fixed neighbourhood), so compiling is
+just freezing the (grid, mask, precision) triple.  The per-round runner
+lives in :mod:`repro.serve.families` next to its BN sibling.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fixedpoint import DEFAULT_K
+from repro.pgm.graph import MRFGrid
+
+
+@dataclass(frozen=True, eq=False)
+class CompiledMRF:
+    """A served MRF sweep program: grid + clamp pattern + precision.
+
+    ``observed`` lists evidence-clamped flat site indices (sorted).  A
+    clamped site is skipped by the checkerboard update but its fixed
+    label keeps contributing pairwise energy to its neighbours — see
+    ``repro.pgm.gibbs.checkerboard_halfstep(clamp=...)``.
+    """
+
+    mrf: MRFGrid
+    k: int
+    observed: tuple[int, ...] = ()
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return self.mrf.shape
+
+    @property
+    def n_labels(self) -> int:
+        return self.mrf.n_labels
+
+    @property
+    def n_sites(self) -> int:
+        h, w = self.mrf.shape
+        return h * w
+
+    @property
+    def n_free(self) -> int:
+        return self.n_sites - len(self.observed)
+
+
+def compile_mrf(mrf: MRFGrid, *, k: int = DEFAULT_K,
+                observed=()) -> CompiledMRF:
+    """Freeze a (grid, mask-pattern, precision) sweep program.
+
+    ``observed``: flat site indices (``r * W + c``) to clamp; values are
+    supplied at run time, so the program is reusable across queries
+    sharing the mask pattern.
+    """
+    n = mrf.shape[0] * mrf.shape[1]
+    observed = tuple(sorted({int(v) for v in observed}))
+    if observed and not (0 <= observed[0] and observed[-1] < n):
+        raise ValueError(
+            f"clamped site index outside the {mrf.shape} lattice")
+    if len(observed) == n:
+        raise ValueError("all sites clamped — nothing to infer")
+    return CompiledMRF(mrf=mrf, k=k, observed=observed)
+
+
+def mask_of(prog: CompiledMRF) -> np.ndarray:
+    """(H, W) bool clamp mask of a compiled program (True = observed)."""
+    m = np.zeros(prog.n_sites, bool)
+    if prog.observed:
+        m[list(prog.observed)] = True
+    return m.reshape(prog.shape)
+
+
+def init_mrf_states(
+    key: jax.Array,
+    prog: CompiledMRF,
+    n_lanes: int,
+    evidence_values: jax.Array | None = None,
+) -> jax.Array:
+    """Random (B, H, W) initial labels with evidence sites pinned.
+
+    ``evidence_values`` aligns with ``prog.observed``: either (O,)
+    shared across lanes or (B, O) per-lane — the serve engine packs
+    different queries' scribble labels into different lanes of one
+    jitted sweep, exactly like BN evidence columns.
+    """
+    h, w = prog.shape
+    labels = jax.random.randint(
+        key, (n_lanes, h, w), 0, prog.n_labels, jnp.int32)
+    if prog.observed:
+        if evidence_values is None:
+            raise ValueError(
+                f"program clamps {len(prog.observed)} sites but no "
+                f"evidence values given")
+        ev = jnp.asarray(evidence_values, jnp.int32)
+        if ev.ndim == 1:
+            ev = jnp.broadcast_to(ev[None], (n_lanes, len(prog.observed)))
+        flat = labels.reshape(n_lanes, h * w)
+        flat = flat.at[:, jnp.asarray(prog.observed, jnp.int32)].set(ev)
+        labels = flat.reshape(n_lanes, h, w)
+    return labels

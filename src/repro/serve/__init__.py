@@ -11,6 +11,11 @@ independent chains onto its cores (paper §III).  With a serve mesh the
 lane axis additionally shards across devices
 (:func:`repro.launch.mesh.make_serve_mesh`).
 
+Both of the paper's PGM families are served (:mod:`repro.serve.
+families`): :class:`Query` clamps Bayesian-network *nodes*,
+:class:`MrfQuery` clamps MRF grid *pixels* (scribble masks for
+interactive segmentation) — same engine, same plan cache, same queue.
+
 Streaming traffic goes through :class:`AdmissionQueue`
 (:mod:`repro.serve.queue`): per-plan buckets dispatch on a deadline or
 size trigger, each submission gets a cancellable :class:`QueryHandle`,
@@ -24,23 +29,27 @@ from repro.serve.plan_cache import (
     CacheStats, PlanCache, load_compiled, network_fingerprint,
     persisted_plan_path, plan_key, save_compiled)
 from repro.serve.query import (
-    Query, QueryCancelled, QueryHandle, QueryStatus, Result, parse_evidence)
+    MrfQuery, Query, QueryCancelled, QueryHandle, QueryStatus, Result,
+    parse_evidence)
 
 _LAZY = {
     "PosteriorEngine": "repro.serve.engine",
     "GroupRun": "repro.serve.engine",
     "split_rhat": "repro.serve.engine",
-    "make_round_runner": "repro.serve.engine",
+    "make_round_runner": "repro.serve.families",
+    "make_mrf_round_runner": "repro.serve.families",
+    "family_of": "repro.serve.families",
     "AdmissionQueue": "repro.serve.queue",
     "QueueStats": "repro.serve.queue",
 }
 
 __all__ = [
-    "AdmissionQueue", "CacheStats", "GroupRun", "PlanCache",
+    "AdmissionQueue", "CacheStats", "GroupRun", "MrfQuery", "PlanCache",
     "PosteriorEngine", "Query", "QueryCancelled", "QueryHandle",
-    "QueryStatus", "QueueStats", "Result", "load_compiled",
-    "make_round_runner", "network_fingerprint", "parse_evidence",
-    "persisted_plan_path", "plan_key", "save_compiled", "split_rhat",
+    "QueryStatus", "QueueStats", "Result", "family_of", "load_compiled",
+    "make_mrf_round_runner", "make_round_runner", "network_fingerprint",
+    "parse_evidence", "persisted_plan_path", "plan_key", "save_compiled",
+    "split_rhat",
 ]
 
 

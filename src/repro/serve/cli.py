@@ -7,6 +7,9 @@
   # streaming: replay timestamped traffic through the admission queue
   PYTHONPATH=src python -m repro.serve.cli --network asia --stream \
       --rate 50 --max-wait-ms 20
+  # masked-MRF serving: scribble-mask evidence over a Potts grid
+  PYTHONPATH=src python -m repro.serve.cli --network mrf_penguin \
+      --mrf-shape 24x24 --queries 16
   # persist compiled plans so warm process starts skip the compiler chain
   PYTHONPATH=src python -m repro.serve.cli --network asia \
       --plan-cache-dir /tmp/aia-plans
@@ -17,8 +20,12 @@
 Request-file format: a JSON list of objects
   {"network": "asia", "evidence": {"smoke": 1}, "query_vars": ["lung"],
    "n_samples": 8192, "t": 0.125}
-(``t`` — the arrival timestamp in seconds, optional — is only used by
-``--stream``, which replays the file open-loop at those offsets.)
+MRF requests use the sparse pixel-mask form instead of ``evidence``:
+  {"network": "mrf_penguin", "mask_sites": [[2, 3, 1], [4, 0, 0]],
+   "query_sites": [[0, 0], [5, 5]], "n_samples": 4096}
+(``mask_sites`` are (row, col, observed-label) triples; ``t`` — the
+arrival timestamp in seconds, optional — is only used by ``--stream``,
+which replays the file open-loop at those offsets.)
 
 Batch mode reports queries/s and MSample/s for a cold pass (empty plan
 cache, XLA compiles on the critical path) and a warm pass (same traffic
@@ -41,18 +48,27 @@ import time
 
 import numpy as np
 
-# NOTE: jax-touching imports (engine, queue, networks) happen lazily inside
-# the functions below — importing the sampling stack initializes the XLA
-# backend, which must not happen before --force-host-devices takes effect.
-from repro.serve.query import Query
+# NOTE: jax-touching imports (engine, queue) happen lazily inside the
+# functions below — importing the sampling stack initializes the XLA
+# backend, which must not happen before --force-host-devices takes
+# effect.  repro.pgm.graph / networks are jax-free and safe to import.
+from repro.serve.query import MrfQuery, Query
 
 NETWORKS = ("asia", "sprinkler", "child_scale", "alarm_scale",
             "hailfinder_scale")
+# Served MRF models (pixel-mask evidence); built at --mrf-shape size.
+MRF_NETWORKS = ("mrf_penguin",)
 
 
-def build_registry(names=NETWORKS):
+def build_registry(names=NETWORKS + MRF_NETWORKS, *, mrf_shape=(24, 24)):
     from repro.pgm import networks as _networks
-    return {name: getattr(_networks, name)() for name in names}
+    reg = {}
+    for name in names:
+        if name == "mrf_penguin":
+            reg[name] = _networks.penguin_task(*mrf_shape)[0]
+        else:
+            reg[name] = getattr(_networks, name)()
+    return reg
 
 
 def synthetic_traffic(
@@ -80,17 +96,65 @@ def synthetic_traffic(
     return out
 
 
+def scribble_mask(h: int, w: int, rng: np.random.Generator,
+                  n_strokes: int = 3) -> np.ndarray:
+    """A synthetic interactive-segmentation scribble: a few straight
+    strokes of clamped pixels on an (h, w) canvas."""
+    mask = np.zeros((h, w), bool)
+    for _ in range(n_strokes):
+        r, c = int(rng.integers(h)), int(rng.integers(w))
+        length = int(rng.integers(2, max(3, min(h, w) // 2) + 1))
+        if rng.integers(2):  # horizontal stroke
+            mask[r, c:min(c + length, w)] = True
+        else:
+            mask[r:min(r + length, h), c] = True
+    return mask
+
+
+def synthetic_mrf_traffic(
+    mrf, network: str, n_queries: int, n_patterns: int,
+    rng: np.random.Generator, n_samples: int,
+) -> list[MrfQuery]:
+    """Scribble-mask traffic: queries cycle a small set of mask
+    *patterns* (interactive segmentation re-sends the same strokes while
+    the user iterates) with fresh observed labels and query sites each
+    time — the MRF mirror of :func:`synthetic_traffic`."""
+    h, w = mrf.shape
+    masks = [scribble_mask(h, w, rng) for _ in range(n_patterns)]
+    out = []
+    for i in range(n_queries):
+        mask = masks[i % len(masks)]
+        values = rng.integers(0, mrf.n_labels, (h, w))
+        free_r, free_c = np.nonzero(~mask)
+        n_q = int(rng.integers(1, 4))
+        pick = rng.choice(len(free_r), size=min(n_q, len(free_r)),
+                         replace=False)
+        sites = tuple((int(free_r[p]), int(free_c[p])) for p in pick)
+        out.append(MrfQuery(network, mask, values, query_sites=sites,
+                            n_samples=n_samples))
+    return out
+
+
 def load_requests(path: str) -> tuple[list[Query], list[float] | None]:
     """Parse a JSON request file; arrival timestamps (``"t"``) come back
     as a second list when every request carries one, else None."""
     with open(path) as f:
         reqs = json.load(f)
-    queries = [
-        Query(r["network"], r.get("evidence", {}),
-              tuple(r.get("query_vars", ())),
-              n_samples=int(r.get("n_samples", 8192)))
-        for r in reqs
-    ]
+
+    def parse(r):
+        if "mask_sites" in r:  # MRF pixel-mask request (sparse form)
+            return MrfQuery(
+                r["network"],
+                mask_sites=tuple(tuple(int(x) for x in t)
+                                 for t in r["mask_sites"]),
+                query_sites=tuple(tuple(int(x) for x in t)
+                                  for t in r.get("query_sites", ())),
+                n_samples=int(r.get("n_samples", 8192)))
+        return Query(r["network"], r.get("evidence", {}),
+                     tuple(r.get("query_vars", ())),
+                     n_samples=int(r.get("n_samples", 8192)))
+
+    queries = [parse(r) for r in reqs]
     arrivals = None
     n_stamped = sum("t" in r for r in reqs)
     if reqs and n_stamped == len(reqs):
@@ -212,11 +276,18 @@ def _run_batch(args, engine, registry, traffic):
           f"(hit rate {s.hit_rate:.0%}, {len(engine.cache)} plans)")
 
     for r in results[:args.show]:
-        bn = registry[r.query.network]
-        ev = {bn.names[bn.index(k)]: v for k, v in r.query.evidence.items()}
+        if isinstance(r.query, Query):
+            bn = registry[r.query.network]
+            ev = {bn.names[bn.index(k)]: v
+                  for k, v in r.query.evidence.items()}
+        else:  # MRF: report the scribble size, not a node dict
+            n_px = len(r.query.mask_sites or ())
+            if r.query.mask is not None:
+                n_px += int(np.asarray(r.query.mask).sum())
+            ev = f"{n_px} clamped px" if n_px else "no mask"
         print(f"  {r.query.network} | evidence {ev}: "
               f"rhat={r.rhat:.3f} kept={r.n_samples}")
-        for var, m in r.marginals.items():
+        for var, m in list(r.marginals.items())[:6]:
             print(f"    P({var} | e) = {np.round(m, 3)}")
 
 
@@ -238,10 +309,14 @@ def _run_stream(args, engine, sync_engine, traffic, arrivals):
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--network", default="asia", choices=NETWORKS)
+    ap.add_argument("--network", default="asia",
+                    choices=NETWORKS + MRF_NETWORKS)
     ap.add_argument("--queries", type=int, default=64)
     ap.add_argument("--patterns", type=int, default=4,
-                    help="distinct evidence patterns in synthetic traffic")
+                    help="distinct evidence patterns in synthetic traffic "
+                         "(scribble-mask patterns for MRF networks)")
+    ap.add_argument("--mrf-shape", default="24x24",
+                    help="HxW lattice size of the served MRF models")
     ap.add_argument("--requests", default="",
                     help="JSON request file (overrides synthetic traffic)")
     ap.add_argument("--chains", type=int, default=32)
@@ -287,7 +362,13 @@ def main(argv=None) -> None:
         print(f"serve mesh {dict(mesh.shape)} over "
               f"{mesh.devices.size}/{len(jax.devices())} devices")
 
-    registry = build_registry()
+    try:
+        mrf_shape = tuple(int(s) for s in args.mrf_shape.lower().split("x"))
+    except ValueError:
+        mrf_shape = ()
+    if len(mrf_shape) != 2 or any(s < 2 for s in mrf_shape):
+        raise SystemExit(f"bad --mrf-shape {args.mrf_shape!r}: expected HxW")
+    registry = build_registry(mrf_shape=mrf_shape)
     engine_kw = dict(
         chains_per_query=args.chains, burn_in=args.burn_in,
         rhat_target=args.rhat, use_iu=not args.no_iu, mesh=mesh,
@@ -300,12 +381,25 @@ def main(argv=None) -> None:
         print(f"loaded {len(traffic)} requests from {args.requests}"
               + (" (timestamped)" if arrivals else ""))
     else:
+        from repro.pgm.graph import MRFGrid
+
         rng = np.random.default_rng(args.seed)
-        bn = registry[args.network]
-        traffic = synthetic_traffic(
-            bn, args.network, args.queries, args.patterns, rng, args.budget)
-        print(f"network={args.network}: {bn.n_nodes} nodes, "
-              f"{args.queries} queries over {args.patterns} evidence patterns")
+        model = registry[args.network]
+        if isinstance(model, MRFGrid):
+            traffic = synthetic_mrf_traffic(
+                model, args.network, args.queries, args.patterns, rng,
+                args.budget)
+            h, w = model.shape
+            print(f"network={args.network}: {h}x{w} grid "
+                  f"(L={model.n_labels}), {args.queries} queries over "
+                  f"{args.patterns} scribble-mask patterns")
+        else:
+            traffic = synthetic_traffic(
+                model, args.network, args.queries, args.patterns, rng,
+                args.budget)
+            print(f"network={args.network}: {model.n_nodes} nodes, "
+                  f"{args.queries} queries over {args.patterns} "
+                  f"evidence patterns")
 
     if args.stream:
         sync_engine = PosteriorEngine(registry, **engine_kw)

@@ -1,11 +1,17 @@
 """Micro-batching posterior engine: packs queries onto chain lanes.
 
 The serving analogue of AIA's core scheduler (paper §III): queries that
-share a network and an evidence *pattern* are compatible — they run the
+share a model and an evidence *pattern* are compatible — they run the
 same compiled sweep program — so the engine packs them side by side
 along the chain (batch) axis of one jitted sweep, each query owning
 ``chains_per_query`` lanes initialized with *its* evidence values.  One
 XLA dispatch then advances every query in the group.
+
+Both PGM families ride the same lifecycle: Bayesian networks clamp
+evidence *nodes* (pattern = observed node ids), MRF grids clamp
+evidence *pixels* (pattern = flat clamped-site indices from a scribble
+mask) — the per-family surface lives in :mod:`repro.serve.families`,
+and the engine only ever sees flat variable ids.
 
 Sampling proceeds in rounds of ``sweeps_per_round`` sweeps.  After the
 burn-in rounds, each round accumulates thinned one-hot counts per lane
@@ -46,15 +52,12 @@ from jax.sharding import NamedSharding
 
 from repro.core.fixedpoint import DEFAULT_K
 from repro.launch.mesh import mesh_fingerprint
-from repro.pgm.compile import (
-    BNSweepStats, CompiledBN, _color_update, compile_bayesnet, init_states,
-    sum_sweep_stats)
+from repro.pgm.compile import sum_sweep_stats
 from repro.pgm.graph import BayesNet
-from repro.serve.plan_cache import (
-    PlanCache, load_compiled, persisted_plan_path, plan_key, save_compiled)
-from repro.serve.query import Query, Result
-from repro.sharding.specs import (
-    serve_cpt_spec, serve_lane_multiple, serve_state_spec)
+from repro.serve.families import family_of
+from repro.serve.plan_cache import PlanCache, plan_key
+from repro.serve.query import MrfQuery, Query, Result
+from repro.sharding.specs import serve_lane_multiple
 
 
 def split_rhat(draws: np.ndarray) -> float:
@@ -80,83 +83,18 @@ def split_rhat(draws: np.ndarray) -> float:
     return float(np.sqrt(var_plus / w))
 
 
-def make_round_runner(prog: CompiledBN, *, sweeps_per_round: int, thin: int,
-                      use_iu: bool, mesh=None):
-    """Jitted ``(key, x, offset) -> (x, counts, xmean, stats)`` per round.
-
-    ``offset`` (traced int32, scalar or per-lane ``(B,)``) is the global
-    post-burn-in sweep index of the round's first sweep: draws are kept
-    where the *global* index is a multiple of ``thin``.  A round-relative
-    ``i % thin`` would restart the phase every round, so for
-    ``sweeps_per_round % thin != 0`` the kept-draw spacing (and every
-    downstream sample count) drifted.  The per-lane form lets one round
-    serve lanes at *different* points of their thinning schedule — slots
-    backfilled mid-flight by :meth:`GroupRun.admit` restart their own
-    phase at 0 while their group mates keep counting.
-
-    ``counts``: (B, n, L) thinned one-hot draw counts this round.
-    ``xmean``:  (B, n) mean state over the round — per-lane scalar
-    statistics for split-R̂ (for a binary node this is its running
-    posterior-probability estimate).
-    ``stats``:  per-sweep (sweeps_per_round,) int32 arrays — summed
-    host-side in int64 by the engine (int32 carries wrapped on long
-    runs; see :class:`repro.pgm.compile.BNSweepStats`).
-
-    With ``mesh`` the lane (batch) axis of ``x``/``counts`` is held to a
-    NamedSharding over the mesh's "batch" axis and the log-CPT bank is
-    placed per ``serve_cpt_spec`` — one compile per (plan, mesh).
-    """
-    log_cpt = jnp.asarray(prog.log_cpt)
-    state_sharding = None
-    if mesh is not None:
-        log_cpt = jax.device_put(
-            log_cpt, NamedSharding(mesh, serve_cpt_spec(mesh, log_cpt.size)))
-        state_sharding = NamedSharding(mesh, serve_state_spec(mesh))
-    n, L = prog.bn.n_nodes, prog.max_card
-
-    def round_fn(key: jax.Array, x: jax.Array, offset: jax.Array):
-        if state_sharding is not None:
-            x = jax.lax.with_sharding_constraint(x, state_sharding)
-
-        def body(carry, i):
-            key, x, counts, xsum = carry
-            key, sub = jax.random.split(key)
-            bits, att = jnp.int32(0), jnp.int32(0)
-            for plan in prog.plans:
-                sub, s2 = jax.random.split(sub)
-                x, st = _color_update(
-                    s2, x, plan, log_cpt, L, prog.k, use_iu)
-                bits, att = bits + st.bits_used, att + st.attempts
-            onehot = (x[..., None] == jnp.arange(L)).astype(jnp.int32)
-            kept = ((offset + i) % thin) == 0
-            if kept.ndim:  # per-lane offsets: broadcast over (node, label)
-                kept = kept[:, None, None]
-            counts = counts + jnp.where(kept, onehot, 0)
-            xsum = xsum + x.astype(jnp.float32)
-            return (key, x, counts, xsum), BNSweepStats(bits, att)
-
-        counts0 = jnp.zeros(x.shape + (L,), jnp.int32)
-        xsum0 = jnp.zeros(x.shape, jnp.float32)
-        (key, x, counts, xsum), per_sweep = jax.lax.scan(
-            body, (key, x, counts0, xsum0), jnp.arange(sweeps_per_round))
-        if state_sharding is not None:
-            x = jax.lax.with_sharding_constraint(x, state_sharding)
-        return x, counts, xsum / sweeps_per_round, per_sweep
-
-    return jax.jit(round_fn)
-
-
 @dataclass
 class GroupEntry:
     """One normalized query inside a (network, pattern) group.
 
-    ``handle`` is the admission queue's :class:`repro.serve.query.
-    QueryHandle` when the entry arrived via streaming submission, None
-    for the synchronous ``answer_batch`` path.  ``result`` is filled in
-    at retirement.
+    ``ev`` maps flat variable ids (BN nodes / MRF sites) to observed
+    values; ``qvars`` are flat variable ids to report.  ``handle`` is
+    the admission queue's :class:`repro.serve.query.QueryHandle` when
+    the entry arrived via streaming submission, None for the synchronous
+    ``answer_batch`` path.  ``result`` is filled in at retirement.
     """
 
-    query: Query
+    query: "Query | MrfQuery"
     ev: dict[int, int]
     qvars: tuple[int, ...]
     handle: object | None = None
@@ -211,11 +149,13 @@ class GroupRun:
         self.engine = engine
         self.name, self.pattern = name, pattern
         self.prog, self.runner, self.cache_hit = engine._plan(name, pattern)
-        self.bn = engine._network(name)
+        self.model = engine._network(name)
+        self.family = family_of(self.model)
         self.c = engine.chains_per_query
         self.spr = engine.sweeps_per_round
         self.burn_rounds = math.ceil(engine.burn_in / self.spr)
-        self.n_free = len(self.prog.free_nodes)
+        self.n_free = self.family.n_free(self.prog)
+        self.n_vars = self.family.n_vars(self.prog)
         nq = len(entries)
         # shape bucketing: pad the slot count up to a power of two so
         # streaming traffic only ever compiles O(log max_group) distinct
@@ -234,11 +174,11 @@ class GroupRun:
             ev_vals[j * self.c:(j + 1) * self.c] = [e.ev[v] for v in pattern]
         ev_vals[nq * self.c:] = ev_vals[:1]
         engine._key, init_key, self._run_key = jax.random.split(engine._key, 3)
-        x = init_states(init_key, self.prog, self.bt,
-                        jnp.asarray(ev_vals) if pattern else None)
+        x = self.family.init_states(init_key, self.prog, self.bt,
+                                    jnp.asarray(ev_vals) if pattern else None)
         if engine.mesh is not None:
             x = jax.device_put(x, NamedSharding(
-                engine.mesh, serve_state_spec(engine.mesh)))
+                engine.mesh, self.family.state_spec(engine.mesh)))
         self.x = x
         self.slots = [self._fresh_slot(e, j, t0) for j, e in enumerate(entries)]
         self.slots += [
@@ -250,10 +190,11 @@ class GroupRun:
 
     def _fresh_slot(self, entry: GroupEntry, j: int, t0: float) -> _Slot:
         cap = self._cap(entry.query)
+        L = self.family.max_card(self.prog)
         return _Slot(
             entry=entry, j=j, cap=cap, burn_left=self.burn_rounds, t0=t0,
-            counts=np.zeros((self.bn.n_nodes, self.prog.max_card), np.int64),
-            means=np.empty((self.c, self.bn.n_nodes, cap), np.float32))
+            counts=np.zeros((self.n_vars, L), np.int64),
+            means=np.empty((self.c, self.n_vars, cap), np.float32))
 
     def _cap(self, q: Query) -> int:
         """Smallest round count whose kept-draw total (global multiples
@@ -338,18 +279,18 @@ class GroupRun:
                 np.array([entry.ev[v] for v in self.pattern], np.int32),
                 (c, 1)))
         self.engine._key, init_key = jax.random.split(self.engine._key)
-        x0 = init_states(init_key, self.prog, c, ev)
+        x0 = self.family.init_states(init_key, self.prog, c, ev)
         self.x = self.x.at[slot.j * c:(slot.j + 1) * c].set(x0)
         self.slots[slot.j] = self._fresh_slot(
             entry, slot.j, time.perf_counter())
 
     def _retire(self, s: _Slot) -> None:
         s.done = True
-        eng, bn = self.engine, self.bn
+        eng, fam = self.engine, self.family
         marginals = {}
         for v in s.entry.qvars:
-            m = s.counts[v, :bn.card[v]].astype(np.float64)
-            marginals[bn.names[v]] = m / max(m.sum(), 1.0)
+            m = s.counts[v, :fam.var_card(self.prog, v)].astype(np.float64)
+            marginals[fam.var_name(self.model, v)] = m / max(m.sum(), 1.0)
         # kept draws per lane: global sweep indices in [0, rounds*spr)
         # that are multiples of ``thin``
         kept_total = (s.rounds * self.spr + eng.thin - 1) // eng.thin
@@ -388,7 +329,7 @@ class PosteriorEngine:
 
     def __init__(
         self,
-        networks: Mapping[str, BayesNet] | None = None,
+        networks: "Mapping[str, BayesNet | object] | None" = None,
         *,
         chains_per_query: int = 32,
         sweeps_per_round: int = 16,
@@ -406,7 +347,9 @@ class PosteriorEngine:
         pow2_group_shapes: bool = True,
         seed: int = 0,
     ):
-        self.networks: dict[str, BayesNet] = dict(networks or {})
+        # "networks" kept for API continuity; values may be any model a
+        # family adapter exists for (BayesNet, MRFGrid)
+        self.networks: dict[str, object] = dict(networks or {})
         self.chains_per_query = int(chains_per_query)
         self.sweeps_per_round = int(sweeps_per_round)
         self.burn_in = int(burn_in)
@@ -424,14 +367,15 @@ class PosteriorEngine:
         self._key = jax.random.PRNGKey(seed)
 
     # -- registry ----------------------------------------------------------
-    def register(self, name: str, bn: BayesNet) -> None:
-        """Register (or replace) a network.  Replacing drops the name's
-        cached plans — they were compiled from the old network's CPTs."""
-        if self.networks.get(name) is not bn:
+    def register(self, name: str, model) -> None:
+        """Register (or replace) a model (BayesNet or MRFGrid).
+        Replacing drops the name's cached plans — they were compiled
+        from the old model's parameters."""
+        if self.networks.get(name) is not model:
             self.cache.invalidate(lambda key: key[0] == name)
-        self.networks[name] = bn
+        self.networks[name] = model
 
-    def _network(self, name: str) -> BayesNet:
+    def _network(self, name: str):
         try:
             return self.networks[name]
         except KeyError:
@@ -448,24 +392,28 @@ class PosteriorEngine:
             mesh_fingerprint=mesh_fingerprint(self.mesh))
 
     def _plan(self, name: str, pattern: tuple[int, ...]):
-        """(CompiledBN, round_runner, was_cache_hit) for one pattern."""
+        """(compiled program, round_runner, was_cache_hit) for one
+        (model, pattern); the program/runner builders come from the
+        model's family adapter."""
 
         def build():
-            bn = self._network(name)
+            model = self._network(name)
+            fam = family_of(model)
             prog = None
             path = None
             if self.plan_cache_dir is not None:
-                path = persisted_plan_path(
-                    self.plan_cache_dir, name, pattern, bn, k=self.k,
+                path = fam.persisted_path(
+                    self.plan_cache_dir, name, pattern, model, k=self.k,
                     quantize_cpt_bits=self.quantize_cpt_bits)
-                prog = load_compiled(path, bn)
+            if path is not None:
+                prog = fam.load_persisted(path, model)
             if prog is None:
-                prog = compile_bayesnet(
-                    bn, k=self.k,
-                    quantize_cpt_bits=self.quantize_cpt_bits, observed=pattern)
+                prog = fam.compile(
+                    model, pattern, k=self.k,
+                    quantize_cpt_bits=self.quantize_cpt_bits)
                 if path is not None:
-                    save_compiled(path, prog)
-            runner = make_round_runner(
+                    fam.save_persisted(path, prog)
+            runner = fam.make_runner(
                 prog, sweeps_per_round=self.sweeps_per_round,
                 thin=self.thin, use_iu=self.use_iu, mesh=self.mesh)
             return prog, runner
@@ -475,24 +423,20 @@ class PosteriorEngine:
         return prog, runner, hit
 
     # -- serving -----------------------------------------------------------
-    def normalize(self, query: Query):
-        """Resolve a query against its network: ``(bn, evidence-by-id,
-        query-var ids, evidence pattern)``.  Raises on unknown networks,
-        bad evidence, or query vars that are observed — the admission
-        queue calls this at submit time so bad requests fail fast."""
-        bn = self._network(query.network)
-        ev = bn.normalize_evidence(query.evidence)
-        qvars = tuple(bn.index(v) for v in query.query_vars) or tuple(
-            v for v in range(bn.n_nodes) if v not in ev)
-        clash = [bn.names[v] for v in qvars if v in ev]
-        if clash:
-            raise ValueError(f"query vars {clash} are observed")
-        return bn, ev, qvars, tuple(sorted(ev))
+    def normalize(self, query: "Query | MrfQuery"):
+        """Resolve a query against its model: ``(model, evidence-by-flat-
+        id, query-var ids, evidence pattern)``.  Raises on unknown
+        models, bad evidence, or query vars that are observed — the
+        admission queue calls this at submit time so bad requests fail
+        fast."""
+        model = self._network(query.network)
+        ev, qvars, pattern = family_of(model).normalize(model, query)
+        return model, ev, qvars, pattern
 
-    def answer(self, query: Query) -> Result:
+    def answer(self, query: "Query | MrfQuery") -> Result:
         return self.answer_batch([query])[0]
 
-    def answer_batch(self, queries: list[Query]) -> list[Result]:
+    def answer_batch(self, queries: "list[Query | MrfQuery]") -> list[Result]:
         """Answer a batch; compatible queries share one jitted sweep."""
         groups: dict[tuple, list[GroupEntry]] = {}
         entries = []

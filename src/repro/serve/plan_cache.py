@@ -29,6 +29,23 @@ from typing import Any, Callable, Hashable
 import numpy as np
 
 
+# Patterns longer than this are folded into a sha1 digest inside the
+# cache key: an MRF scribble mask can clamp thousands of pixels, and a
+# kilo-int tuple makes a poor dict key (hash cost on every bucket/cache
+# lookup) while the digest is exact enough — collisions are sha1-rare.
+_PATTERN_HASH_LEN = 32
+
+
+def pattern_key(pattern: tuple[int, ...]):
+    """Hashable, bounded-size identity of an evidence pattern (BN node
+    ids or MRF flat pixel indices) — the "mask-pattern hash"."""
+    if len(pattern) <= _PATTERN_HASH_LEN:
+        return pattern
+    digest = hashlib.sha1(
+        np.asarray(pattern, np.int64).tobytes()).hexdigest()
+    return ("sha1", len(pattern), digest)
+
+
 def plan_key(
     network: str,
     pattern: tuple[int, ...],
@@ -47,9 +64,10 @@ def plan_key(
     None for the single-device path): a runner jitted with sharding
     constraints for one mesh layout — or placed on one set of devices —
     must never be served to an engine on another; see
-    ``repro.launch.mesh.mesh_fingerprint``.
+    ``repro.launch.mesh.mesh_fingerprint``.  Long patterns (pixel
+    masks) are folded to their :func:`pattern_key` digest.
     """
-    return (network, pattern, k, use_iu, quantize_cpt_bits,
+    return (network, pattern_key(pattern), k, use_iu, quantize_cpt_bits,
             sweeps_per_round, thin, mesh_fingerprint)
 
 

@@ -64,10 +64,38 @@ class Query:
 
 
 @dataclass
-class Result:
-    """Answer to one :class:`Query`."""
+class MrfQuery:
+    """One posterior-marginal request over a registered MRF grid.
 
-    query: Query
+    Evidence is a *pixel mask*: ``mask`` ((H, W) bool-like, True =
+    observed) with the observed labels read out of ``values`` ((H, W)
+    int-like) wherever the mask is set — the interactive-segmentation
+    scribble contract.  ``mask_sites`` is the sparse alternative (and
+    the JSON request-file form): ``(row, col, label)`` triples, merged
+    with the dense mask when both are given.  Queries sharing the same
+    mask *pattern* share one compiled sweep program and can pack into
+    one micro-batched group, whatever their observed labels.
+
+    ``query_sites``: ``(row, col)`` pairs to report marginals for
+    (empty = every unclamped site — fine for small grids, prefer an
+    explicit subset on big ones: split-R̂ is judged over the query
+    sites, so fewer sites also means cheaper convergence checks).
+    ``n_samples`` has :class:`Query` semantics.
+    """
+
+    network: str
+    mask: object = None
+    values: object = None
+    query_sites: Sequence[tuple[int, int]] = ()
+    n_samples: int = 8192
+    mask_sites: Sequence[tuple[int, int, int]] = ()
+
+
+@dataclass
+class Result:
+    """Answer to one :class:`Query` (or :class:`MrfQuery`)."""
+
+    query: "Query | MrfQuery"
     marginals: dict[str, np.ndarray]   # node name -> posterior P(v | e)
     n_samples: int                     # kept draws actually accumulated
     n_sweeps: int                      # total sweeps incl. burn-in

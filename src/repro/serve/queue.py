@@ -29,13 +29,14 @@ served FIFO by their oldest arrival, so no evidence pattern starves.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
 
 from repro.serve.engine import GroupEntry, GroupRun, PosteriorEngine
-from repro.serve.query import Query, QueryHandle, QueryStatus
+from repro.serve.query import MrfQuery, Query, QueryHandle, QueryStatus  # noqa: F401
 from repro.sharding.specs import serve_lane_multiple
 
 # Default size trigger, in queries, per dispatch group (scaled by the
@@ -99,7 +100,7 @@ class AdmissionQueue:
         self._thread.start()
 
     # -- client side -------------------------------------------------------
-    def submit(self, query: Query) -> QueryHandle:
+    def submit(self, query: "Query | MrfQuery") -> QueryHandle:
         """Admit one query; returns its future.  Raises immediately on
         malformed queries (unknown network, bad evidence, observed
         query vars) — validation must not wait for the dispatcher."""
@@ -119,22 +120,23 @@ class AdmissionQueue:
         with self._cv:
             return sum(len(d) for d in self._buckets.values())
 
-    def warm(self, traffic: list[Query]) -> None:
+    def warm(self, traffic: list) -> None:
         """Pre-compile, off the serving clock, every (plan, lane-shape)
         combination streamed dispatch of ``traffic`` can produce: one
         query per distinct (network, evidence-pattern), answered at each
         pow2 group size up to this queue's size trigger.  Call before
         the first ``submit`` — it drives the engine from the caller's
         thread, which is only safe while the dispatcher is idle."""
-        seen: dict[tuple, Query] = {}
+        seen: dict[tuple, object] = {}
         for q in traffic:
             _, _, _, pattern = self.engine.normalize(q)
             seen.setdefault((q.network, pattern), q)
         for q in seen.values():
             # minimal-budget probe: compiling the (plan, shape) is the
             # point — n_samples=1 clamps each rung to min_rounds instead
-            # of sampling the caller's full budget per shape
-            probe = Query(q.network, q.evidence, q.query_vars, n_samples=1)
+            # of sampling the caller's full budget per shape.  replace()
+            # keeps this family-agnostic (Query and MrfQuery alike).
+            probe = dataclasses.replace(q, n_samples=1)
             n = 1
             while True:
                 # a full pop of max_group_queries pads to the pow2 above

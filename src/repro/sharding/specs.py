@@ -214,6 +214,17 @@ def serve_state_spec(mesh: Mesh) -> P:
     return P(serve_batch_axis(mesh), None)
 
 
+def serve_mrf_state_spec(mesh: Mesh) -> P:
+    """PartitionSpec of the (lanes, H, W) MRF label field.
+
+    Served MRF groups shard the chain-lane axis exactly like BN groups
+    — every lane holds a full grid, so the checkerboard update stays
+    device-local (the 2D halo-exchange decomposition in
+    ``repro.pgm.mesh_gibbs`` is the single-big-grid training tool, not
+    the many-small-queries serving layout)."""
+    return P(serve_batch_axis(mesh), None, None)
+
+
 def serve_cpt_spec(mesh: Mesh, n_elems: int) -> P:
     """PartitionSpec of the flat log-CPT bank (1D, sentinel included)."""
     m = _axis(mesh, "model")

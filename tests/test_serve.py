@@ -279,12 +279,12 @@ class TestPlanPersistence:
         r1 = e1.answer(q)
         assert any(f.endswith(".npz") for f in os.listdir(tmp_path))
 
-        import repro.serve.engine as engine_mod
+        import repro.serve.families as families_mod
 
         def boom(*a, **k):
             raise AssertionError("compiler chain ran despite persisted plan")
 
-        monkeypatch.setattr(engine_mod, "compile_bayesnet", boom)
+        monkeypatch.setattr(families_mod, "compile_bayesnet", boom)
         e2 = PosteriorEngine(_registry(), plan_cache_dir=str(tmp_path), **kw)
         r2 = e2.answer(q)
         # same seed, same plan -> bit-identical marginals
