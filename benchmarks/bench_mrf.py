@@ -77,8 +77,10 @@ def run_masked_serve(name, h=24, w=24, n_queries=8, budget=1024,
     results = engine.answer_batch(traffic)
     dt = time.perf_counter() - t0
     conv = sum(r.converged for r in results)
+    ess = sum(r.diagnostics.min_ess for r in results)
     report(row(name, dt / n_queries * 1e6,
-               f"qps={n_queries/dt:.2f};converged={conv}/{n_queries}"))
+               f"qps={n_queries/dt:.2f};ESS/s={ess/dt:.1f};"
+               f"converged={conv}/{n_queries}"))
 
 
 def main(report=print):

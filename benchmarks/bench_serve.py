@@ -28,11 +28,21 @@ synchronous baseline — with a bitwise identity check of queued vs
 ``answer_batch`` results for the same traffic.
 
 ``--json`` emits a machine-readable report (queries/s, MSample/s,
-bits/sample, cold/warm, stream metrics, and — with ``--scaling`` —
-per-device-count throughput from forced-host subprocesses) so CI can
-track the perf trajectory; ``benchmarks/check_serve_regression.py``
-gates CI on it against ``benchmarks/baselines/BENCH_serve.json``.
-``-`` writes it to stdout.
+**ESS/s** — effective samples per second, the honest analogue of the
+paper's MSample/s — bits/sample, cold/warm, stream metrics, and — with
+``--scaling`` — per-device-count throughput from forced-host
+subprocesses) so CI can track the perf trajectory;
+``benchmarks/check_serve_regression.py`` gates CI on it against
+``benchmarks/baselines/BENCH_serve.json``.  The report carries the
+engine's ``retirement`` mode so the gate can refuse to compare a
+rank-mode run against a legacy-mode baseline.  ``-`` writes it to
+stdout.
+
+``--diagnostics-json`` additionally runs the same traffic under both
+retirement rules (``legacy`` plain split-R̂ vs ``rank`` rank-R̂ + ESS)
+and writes a ``BENCH_diagnostics.json`` artifact with per-mode
+sweeps-to-retirement and ESS/s — the latency/statistical-quality
+trade-off the diagnostics subsystem exists to expose.
 """
 from __future__ import annotations
 
@@ -58,6 +68,12 @@ def _pass(engine, traffic):
     return dt, samples, results
 
 
+def _ess(results) -> float:
+    """Total worst-case ESS over a pass (see repro.serve.cli.ess_total)."""
+    from repro.serve.cli import ess_total
+    return ess_total(results)
+
+
 def run(name, network, *, n_queries=32, n_patterns=3, budget=2048,
         chains=16, mesh=None, report=print):
     """Cold + warm pass over one network's traffic; returns metrics."""
@@ -70,7 +86,7 @@ def run(name, network, *, n_queries=32, n_patterns=3, budget=2048,
         bn, network, n_queries, n_patterns, np.random.default_rng(0), budget)
     engine = PosteriorEngine({network: bn}, chains_per_query=chains,
                              burn_in=32, mesh=mesh)
-    cold_dt, cold_samples, _ = _pass(engine, traffic)
+    cold_dt, cold_samples, cold_results = _pass(engine, traffic)
     warm_dt, warm_samples, results = _pass(engine, traffic)
     conv = sum(r.converged for r in results)
     bits = float(np.mean([r.bits_per_sample for r in results]))
@@ -81,16 +97,20 @@ def run(name, network, *, n_queries=32, n_patterns=3, budget=2048,
     report(row(
         f"serve_{name}_warm", warm_dt / n_queries * 1e6,
         f"qps={n_queries/warm_dt:.2f};MSample/s={warm_samples/warm_dt/1e6:.3f};"
+        f"ESS/s={_ess(results)/warm_dt:.1f};"
         f"speedup={cold_dt/warm_dt:.1f}x;hit_rate={s.hit_rate:.2f};"
         f"converged={conv}/{n_queries}"))
     return {
         "name": name,
         "network": network,
         "n_queries": n_queries,
+        "retirement": engine.retirement,
         "cold": {"wall_s": cold_dt, "queries_per_s": n_queries / cold_dt,
-                 "msample_per_s": cold_samples / cold_dt / 1e6},
+                 "msample_per_s": cold_samples / cold_dt / 1e6,
+                 "ess_per_s": _ess(cold_results) / cold_dt},
         "warm": {"wall_s": warm_dt, "queries_per_s": n_queries / warm_dt,
-                 "msample_per_s": warm_samples / warm_dt / 1e6},
+                 "msample_per_s": warm_samples / warm_dt / 1e6,
+                 "ess_per_s": _ess(results) / warm_dt},
         "bits_per_sample": bits,
         "cache_hit_rate": s.hit_rate,
         "converged": conv,
@@ -120,7 +140,7 @@ def run_mrf(name, *, h=16, w=16, n_queries=12, n_patterns=2, budget=1024,
         mrf, network, n_queries, n_patterns, np.random.default_rng(0), budget)
     kw = dict(chains_per_query=chains, burn_in=32, mesh=mesh)
     engine = PosteriorEngine({network: mrf}, **kw)
-    cold_dt, cold_samples, _ = _pass(engine, traffic)
+    cold_dt, cold_samples, cold_results = _pass(engine, traffic)
     warm_dt, warm_samples, results = _pass(engine, traffic)
     conv = sum(r.converged for r in results)
     bits = float(np.mean([r.bits_per_sample for r in results]))
@@ -146,6 +166,7 @@ def run_mrf(name, *, h=16, w=16, n_queries=12, n_patterns=2, budget=1024,
     report(row(
         f"serve_{name}_warm", warm_dt / n_queries * 1e6,
         f"qps={n_queries/warm_dt:.2f};MSample/s={warm_samples/warm_dt/1e6:.3f};"
+        f"ESS/s={_ess(results)/warm_dt:.1f};"
         f"speedup={cold_dt/warm_dt:.1f}x;hit_rate={s.hit_rate:.2f};"
         f"converged={conv}/{n_queries};identical={identical}"))
     return {
@@ -153,10 +174,13 @@ def run_mrf(name, *, h=16, w=16, n_queries=12, n_patterns=2, budget=1024,
         "network": network,
         "grid": [h, w],
         "n_queries": n_queries,
+        "retirement": engine.retirement,
         "cold": {"wall_s": cold_dt, "queries_per_s": n_queries / cold_dt,
-                 "msample_per_s": cold_samples / cold_dt / 1e6},
+                 "msample_per_s": cold_samples / cold_dt / 1e6,
+                 "ess_per_s": _ess(cold_results) / cold_dt},
         "warm": {"wall_s": warm_dt, "queries_per_s": n_queries / warm_dt,
-                 "msample_per_s": warm_samples / warm_dt / 1e6},
+                 "msample_per_s": warm_samples / warm_dt / 1e6,
+                 "ess_per_s": _ess(results) / warm_dt},
         "bits_per_sample": bits,
         "cache_hit_rate": s.hit_rate,
         "converged": conv,
@@ -184,8 +208,9 @@ def run_stream(name, network, *, n_queries=32, n_patterns=2, budget=2048,
     # open-loop queued replay.  The 8x multiplier keeps the admission
     # window full — far above what one-at-a-time serving sustains, which
     # is the regime the queue exists for (machine-relative, CI-stable).
+    stream_engine = PosteriorEngine({network: bn}, **kw)
     metrics, _ = measure_stream(
-        PosteriorEngine({network: bn}, **kw),
+        stream_engine,
         PosteriorEngine({network: bn}, **kw),
         traffic, rate_qps=rate_qps, rate_multiplier=8.0,
         max_wait_ms=max_wait_ms)
@@ -210,12 +235,57 @@ def run_stream(name, network, *, n_queries=32, n_patterns=2, budget=2048,
         f"qps={metrics['queries_per_s']:.2f};"
         f"sync_qps={metrics['sync_queries_per_s']:.2f};"
         f"speedup={metrics['speedup']:.2f}x;"
+        f"ESS/s={metrics['ess_per_s']:.1f};"
         f"p50_ms={metrics['p50_ms']:.1f};p99_ms={metrics['p99_ms']:.1f};"
         f"groups={metrics['dispatched_groups']};"
         f"backfilled={metrics['backfilled']};identical={identical}"))
     return {"name": name, "network": network,
+            "retirement": stream_engine.retirement,
             **{k: v for k, v in metrics.items() if k != "submitted"},
             "identical": bool(identical)}
+
+
+def run_diagnostics_compare(network="asia", *, n_queries=16, n_patterns=2,
+                            budget=2048, chains=16, rhat_target=1.05,
+                            ess_target=100.0, report=print):
+    """Legacy vs rank retirement over identical traffic: per-mode mean
+    sweeps-to-retirement, converged counts and ESS/s — the artifact
+    (``BENCH_diagnostics.json``) CI uploads so the latency/statistical-
+    quality trade-off of the retirement rule is tracked per commit."""
+    from repro.pgm import networks
+    from repro.serve.cli import synthetic_traffic
+    from repro.serve.engine import PosteriorEngine
+
+    bn = getattr(networks, network)()
+    traffic = synthetic_traffic(
+        bn, network, n_queries, n_patterns, np.random.default_rng(0), budget)
+    out = {"suite": "serve_diagnostics", "network": network,
+           "n_queries": n_queries, "rhat_target": rhat_target,
+           "ess_target": ess_target, "modes": {}}
+    for mode in ("legacy", "rank"):
+        engine = PosteriorEngine(
+            {network: bn}, chains_per_query=chains, burn_in=32,
+            retirement=mode, rhat_target=rhat_target, ess_target=ess_target)
+        _pass(engine, traffic)                       # warm the plan cache
+        dt, _, results = _pass(engine, traffic)
+        sweeps = [r.n_sweeps for r in results]
+        ess = _ess(results)
+        out["modes"][mode] = {
+            "wall_s": dt,
+            "queries_per_s": n_queries / dt,
+            "mean_sweeps_to_retirement": float(np.mean(sweeps)),
+            "max_sweeps_to_retirement": int(max(sweeps)),
+            "converged": int(sum(r.converged for r in results)),
+            "ess_per_s": ess / dt,
+            "mean_min_ess": ess / n_queries,
+        }
+        m = out["modes"][mode]
+        report(row(
+            f"serve_diag_{mode}", dt / n_queries * 1e6,
+            f"sweeps={m['mean_sweeps_to_retirement']:.0f};"
+            f"ESS/s={m['ess_per_s']:.1f};"
+            f"converged={m['converged']}/{n_queries}"))
+    return out
 
 
 def main(report=print, *, smoke=False, stream=False, mesh_shape=None):
@@ -237,7 +307,15 @@ def main(report=print, *, smoke=False, stream=False, mesh_shape=None):
         runs = [run("asia_8n", "asia", **kw),
                 run("child_scale_20n", "child_scale", n_queries=16, **kw),
                 run_mrf("mrf_24x24", h=24, w=24, n_queries=16, **kw)]
+    # the retirement mode the runs actually used (each run records its
+    # engine's) — the regression gate refuses to diff reports across
+    # different modes, so a half-converted report must fail loudly here
+    # rather than mislabel itself
+    modes = {r.pop("retirement") for r in runs}
+    if len(modes) != 1:
+        raise RuntimeError(f"runs used mixed retirement modes: {modes}")
     rep = {"suite": "serve", "n_devices": n_devices,
+           "retirement": modes.pop(),
            "mesh_shape": None if mesh_shape is None else list(mesh_shape),
            "runs": runs}
     if stream:
@@ -247,6 +325,8 @@ def main(report=print, *, smoke=False, stream=False, mesh_shape=None):
                 chains=8, **kw)
         else:
             rep["stream"] = run_stream("asia_8n", "asia", **kw)
+        if rep["stream"].pop("retirement") != rep["retirement"]:
+            raise RuntimeError("stream run used a different retirement mode")
     return rep
 
 
@@ -293,6 +373,10 @@ def _cli(argv=None):
                          "queue vs one-query-at-a-time synchronous serving)")
     ap.add_argument("--json", default="",
                     help="write a machine-readable report here ('-' = stdout)")
+    ap.add_argument("--diagnostics-json", default="",
+                    help="run legacy-vs-rank retirement over identical "
+                         "traffic and write the comparison here "
+                         "(sweeps-to-retirement, ESS/s per mode)")
     ap.add_argument("--mesh-shape", default="",
                     help="serve mesh, e.g. 4 or 2x2")
     ap.add_argument("--scaling", default="",
@@ -311,6 +395,13 @@ def _cli(argv=None):
         mesh_shape = parse_mesh_shape(args.mesh_shape)
 
     rep = main(smoke=args.smoke, stream=args.stream, mesh_shape=mesh_shape)
+    if args.diagnostics_json:
+        diag_kw = (dict(n_queries=8, budget=512, chains=8)
+                   if args.smoke else {})
+        diag = run_diagnostics_compare(**diag_kw)
+        with open(args.diagnostics_json, "w") as f:
+            json.dump(diag, f, indent=2)
+        print(f"# wrote {args.diagnostics_json}")
     if args.scaling:
         counts = [int(s) for s in args.scaling.split(",") if s]
         # scaling points are always smoke-sized: one datapoint per device

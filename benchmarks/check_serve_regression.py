@@ -12,6 +12,9 @@ Checks, per run matched by name against the baseline:
   warm throughput is pure sampling, the number the serving stack lives
   on; cold numbers are compile-dominated and too noisy to gate.  Covers
   both served families: Bayesian-network runs and masked-MRF runs.
+* warm **ESS/s** (effective samples per second — the statistical-
+  quality throughput the rank retirement rule optimizes for) under the
+  same tolerance, shown in the same diff table.
 * any run carrying an ``identical`` flag (the masked-MRF queued-vs-
   ``answer_batch`` check) must report True — a perf gate that lets the
   queue drift numerically would be enforcing the wrong thing.
@@ -22,10 +25,13 @@ Checks, per run matched by name against the baseline:
 Failures print one readable line each —
 ``FAIL metric=<name> baseline=<x> observed=<y> floor=<z> (tolerance N%)``
 — and the gate exits 1.  **Exit 2** is reserved for a broken comparison
-setup: a missing/unreadable baseline file, or metrics present in the
+setup: a missing/unreadable baseline file, metrics present in the
 current report with no baseline entry (so a freshly added benchmark can
 never silently pass — commit a refreshed baseline via ``--update``
-instead).
+instead), or a **retirement-mode mismatch**: comparing a
+``retirement="rank"`` report against a ``"legacy"`` baseline (or vice
+versa) would diff incomparable sweeps-to-retirement regimes, so it is a
+setup error, never a silent pass.
 
 The default tolerance is deliberately loose (30%) to absorb shared-CI
 runner noise; the gate exists to catch step-function regressions (an
@@ -69,9 +75,9 @@ class Failure:
         return " ".join(str(p) for p in parts)
 
 
-def _qps_check(metric, cur, base, tolerance) -> Failure | None:
+def _qps_check(metric, cur, base, tolerance, unit="qps") -> Failure | None:
     floor = base * (1.0 - tolerance)
-    print(f"{metric}: {cur:.2f} qps (baseline {base:.2f}, "
+    print(f"{metric}: {cur:.2f} {unit} (baseline {base:.2f}, "
           f"floor {floor:.2f})")
     if cur < floor:
         return Failure(metric, observed=round(cur, 3), baseline=base,
@@ -79,13 +85,41 @@ def _qps_check(metric, cur, base, tolerance) -> Failure | None:
     return None
 
 
+def _ess_check(metric, cur_section, base_section, tolerance,
+               failures, setup) -> None:
+    """Shared ESS/s comparison (warm runs and the stream section):
+    regression under the same tolerance as qps, missing baseline entry
+    = setup error — a freshly added ESS metric can never silently pass."""
+    if "ess_per_s" not in cur_section:
+        return
+    if "ess_per_s" not in base_section:
+        setup.append(Failure(
+            metric, observed=round(cur_section["ess_per_s"], 3),
+            note="no baseline ESS/s entry — refresh the baseline with "
+                 "--update and commit it"))
+        return
+    f = _qps_check(metric, cur_section["ess_per_s"],
+                   base_section["ess_per_s"], tolerance, unit="ESS/s")
+    if f:
+        failures.append(f)
+
+
 def check(current: dict, baseline: dict, *, tolerance: float,
           min_stream_speedup: float) -> tuple[list[Failure], list[Failure]]:
     """Returns ``(regressions, setup_errors)`` — setup errors (exit 2)
-    are metrics that *cannot* be compared: current runs with no baseline
-    entry."""
+    are comparisons that *cannot* be made: current runs with no baseline
+    entry, or reports produced under different retirement modes."""
     failures: list[Failure] = []
     setup: list[Failure] = []
+    cur_mode = current.get("retirement")
+    base_mode = baseline.get("retirement")
+    if cur_mode != base_mode:
+        setup.append(Failure(
+            "retirement", observed=cur_mode,
+            note=f"baseline was produced under retirement="
+                 f"{base_mode!r} — sweeps-to-retirement regimes are "
+                 f"incomparable; refresh the baseline with --update "
+                 f"and commit it"))
     base_runs = {r["name"]: r for r in baseline.get("runs", [])}
     for run in current.get("runs", []):
         base = base_runs.get(run["name"])
@@ -101,6 +135,11 @@ def check(current: dict, baseline: dict, *, tolerance: float,
                        base["warm"]["queries_per_s"], tolerance)
         if f:
             failures.append(f)
+        # ESS/s: same diff table, same tolerance — statistical-quality
+        # throughput regressions (a retirement rule gone lax shows up
+        # here before it shows up in qps)
+        _ess_check(f"{run['name']}.warm.ess_per_s", run.get("warm", {}),
+                   base.get("warm", {}), tolerance, failures, setup)
         if "identical" in run and not run["identical"]:
             failures.append(Failure(
                 f"{run['name']}.identical", observed=False,
@@ -132,6 +171,8 @@ def check(current: dict, baseline: dict, *, tolerance: float,
                            base_stream["queries_per_s"], tolerance)
             if f:
                 failures.append(f)
+            _ess_check("stream.ess_per_s", stream, base_stream,
+                       tolerance, failures, setup)
         else:
             setup.append(Failure(
                 "stream.queries_per_s",

@@ -11,7 +11,9 @@
 Bayesian-network configs with ``--evidence`` route through the posterior
 query engine (:mod:`repro.serve`): evidence nodes are clamped at compile
 time, the sweep program comes from the plan cache, and sampling
-early-stops on split-R̂ convergence.
+early-stops on the rank-normalized R̂ + ESS retirement rule
+(``docs/diagnostics.md``; the report prints both the legacy split-R̂
+and the rank diagnostics).
 """
 from __future__ import annotations
 
@@ -76,8 +78,13 @@ def main() -> None:
         print(f"{res.n_node_samples} RV samples in {res.wall_s:.2f}s -> "
               f"{res.n_node_samples/res.wall_s/1e6:.2f} MSample/s (CPU), "
               f"{res.bits_per_sample:.2f} bits/sample")
-        print(f"split-Rhat={res.rhat:.3f} converged={res.converged} "
-              f"kept={res.n_samples} plan_cache_hit={res.cache_hit}")
+        d = res.diagnostics
+        print(f"split-Rhat={res.rhat:.3f} rank-Rhat={d.rank_rhat:.3f} "
+              f"folded-Rhat={d.folded_rhat:.3f} "
+              f"ESS bulk/tail={d.ess_bulk:.0f}/{d.ess_tail:.0f} "
+              f"({d.min_ess/res.wall_s:.0f} ESS/s)")
+        print(f"converged={res.converged} kept={res.n_samples} "
+              f"sweeps={d.sweeps_used} plan_cache_hit={res.cache_hit}")
         for var, m in res.marginals.items():
             print(f"  P({var} | e) = {np.round(m, 3)}")
         return

@@ -6,7 +6,9 @@
 ``--stream`` switches to the *posterior* streaming service instead:
 timestamped query traffic is replayed open-loop through the admission
 queue (every other argument is forwarded to ``repro.serve.cli``, which
-owns the streaming flags):
+owns the streaming flags — including the retirement-rule knobs
+``--retirement {rank,legacy}`` / ``--ess-target``, see
+``docs/diagnostics.md``):
 
   PYTHONPATH=src python -m repro.launch.serve --stream --network asia \
       --rate 50 --max-wait-ms 20

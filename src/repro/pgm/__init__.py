@@ -3,6 +3,9 @@ from repro.pgm.coloring import checkerboard, color_bayesnet, dsatur, verify_colo
 from repro.pgm.compile import (
     BNSweepStats, CompiledBN, compile_bayesnet, init_states, make_sweep,
     run_gibbs, sum_sweep_stats)
+from repro.pgm.diagnostics import (
+    Diagnostics, RunningDiagnostics, compute_diagnostics, ess_bulk,
+    ess_tail, folded_rank_rhat, rank_normalize, rank_rhat, split_rhat)
 from repro.pgm.gibbs import (
     checkerboard_halfstep, clamp_labels, init_labels, mrf_gibbs)
 from repro.pgm.graph import BayesNet, MRFGrid
@@ -16,6 +19,9 @@ __all__ = [
     "checkerboard", "color_bayesnet", "dsatur", "verify_coloring",
     "BNSweepStats", "CompiledBN", "compile_bayesnet", "init_states",
     "make_sweep", "run_gibbs", "sum_sweep_stats",
+    "Diagnostics", "RunningDiagnostics", "compute_diagnostics",
+    "ess_bulk", "ess_tail", "folded_rank_rhat", "rank_normalize",
+    "rank_rhat", "split_rhat",
     "checkerboard_halfstep", "clamp_labels", "init_labels", "mrf_gibbs",
     "CompiledMRF", "compile_mrf", "init_mrf_states", "mask_of",
     "BayesNet", "MRFGrid", "make_mesh_gibbs_step", "pad_mrf",

@@ -19,8 +19,11 @@ interactive segmentation) — same engine, same plan cache, same queue.
 Streaming traffic goes through :class:`AdmissionQueue`
 (:mod:`repro.serve.queue`): per-plan buckets dispatch on a deadline or
 size trigger, each submission gets a cancellable :class:`QueryHandle`,
-and queries retire individually on split-R̂ convergence so freed chain
-lanes backfill mid-flight.
+and queries retire individually on convergence so freed chain lanes
+backfill mid-flight.  Retirement is judged by the rank-normalized
+split-R̂ + ESS diagnostics of :mod:`repro.pgm.diagnostics` by default
+(``retirement="legacy"`` selects the plain split-R̂ rule); every
+:class:`Result` carries the full :class:`Diagnostics` payload.
 
 The engine (and with it jax) is imported lazily: the CLI must be able to
 apply ``--force-host-devices`` before the XLA backend initializes.
@@ -32,9 +35,16 @@ from repro.serve.query import (
     MrfQuery, Query, QueryCancelled, QueryHandle, QueryStatus, Result,
     parse_evidence)
 
+# Diagnostics types route through the lazy table too: repro.pgm's
+# package __init__ imports jax, which must not initialize before the
+# CLI's --force-host-devices handling runs
 _LAZY = {
     "PosteriorEngine": "repro.serve.engine",
     "GroupRun": "repro.serve.engine",
+    "RETIREMENT_MODES": "repro.serve.engine",
+    "Diagnostics": "repro.pgm.diagnostics",
+    "RunningDiagnostics": "repro.pgm.diagnostics",
+    "compute_diagnostics": "repro.pgm.diagnostics",
     "split_rhat": "repro.serve.engine",
     "make_round_runner": "repro.serve.families",
     "make_mrf_round_runner": "repro.serve.families",
@@ -44,12 +54,13 @@ _LAZY = {
 }
 
 __all__ = [
-    "AdmissionQueue", "CacheStats", "GroupRun", "MrfQuery", "PlanCache",
-    "PosteriorEngine", "Query", "QueryCancelled", "QueryHandle",
-    "QueryStatus", "QueueStats", "Result", "family_of", "load_compiled",
-    "make_mrf_round_runner", "make_round_runner", "network_fingerprint",
-    "parse_evidence", "persisted_plan_path", "plan_key", "save_compiled",
-    "split_rhat",
+    "AdmissionQueue", "CacheStats", "Diagnostics", "GroupRun", "MrfQuery",
+    "PlanCache", "PosteriorEngine", "Query", "QueryCancelled", "QueryHandle",
+    "QueryStatus", "QueueStats", "RETIREMENT_MODES", "Result",
+    "RunningDiagnostics", "compute_diagnostics", "family_of",
+    "load_compiled", "make_mrf_round_runner", "make_round_runner",
+    "network_fingerprint", "parse_evidence", "persisted_plan_path",
+    "plan_key", "save_compiled", "split_rhat",
 ]
 
 

@@ -25,7 +25,9 @@ MRF requests use the sparse pixel-mask form instead of ``evidence``:
    "query_sites": [[0, 0], [5, 5]], "n_samples": 4096}
 (``mask_sites`` are (row, col, observed-label) triples; ``t`` — the
 arrival timestamp in seconds, optional — is only used by ``--stream``,
-which replays the file open-loop at those offsets.)
+which replays the file open-loop at those offsets.)  Either form may
+carry per-query retirement overrides ``"rhat_target"`` /
+``"ess_target"`` — see docs/serving.md for the full schema.
 
 Batch mode reports queries/s and MSample/s for a cold pass (empty plan
 cache, XLA compiles on the critical path) and a warm pass (same traffic
@@ -142,6 +144,12 @@ def load_requests(path: str) -> tuple[list[Query], list[float] | None]:
         reqs = json.load(f)
 
     def parse(r):
+        # per-query retirement overrides (None = engine defaults)
+        targets = dict(
+            rhat_target=(None if r.get("rhat_target") is None
+                         else float(r["rhat_target"])),
+            ess_target=(None if r.get("ess_target") is None
+                        else float(r["ess_target"])))
         if "mask_sites" in r:  # MRF pixel-mask request (sparse form)
             return MrfQuery(
                 r["network"],
@@ -149,10 +157,10 @@ def load_requests(path: str) -> tuple[list[Query], list[float] | None]:
                                  for t in r["mask_sites"]),
                 query_sites=tuple(tuple(int(x) for x in t)
                                   for t in r.get("query_sites", ())),
-                n_samples=int(r.get("n_samples", 8192)))
+                n_samples=int(r.get("n_samples", 8192)), **targets)
         return Query(r["network"], r.get("evidence", {}),
                      tuple(r.get("query_vars", ())),
-                     n_samples=int(r.get("n_samples", 8192)))
+                     n_samples=int(r.get("n_samples", 8192)), **targets)
 
     queries = [parse(r) for r in reqs]
     arrivals = None
@@ -222,6 +230,7 @@ def measure_stream(engine, sync_engine, traffic: list[Query],
         "p50_ms": float(p50),
         "p99_ms": float(p99),
         "converged": int(sum(r.converged for r in results)),
+        "ess_per_s": ess_total(results) / wall,
         "dispatched_groups": st.dispatched_groups,
         "backfilled": st.backfilled,
         "submitted": st.submitted,
@@ -253,6 +262,15 @@ def replay_stream(queue, traffic: list[Query], arrivals: list[float],
     return results, lat, wall
 
 
+def ess_total(results) -> float:
+    """Sum of per-query worst-case ESS (min of bulk and tail over the
+    query variables) — divided by wall time this is ESS/s, the honest
+    throughput analogue of the paper's MSample/s: raw-sample rates
+    reward slow mixing, effective-sample rates don't."""
+    return float(sum(
+        r.diagnostics.min_ess for r in results if r.diagnostics is not None))
+
+
 def _pass(engine, traffic: list[Query], label: str):
     t0 = time.perf_counter()
     results = engine.answer_batch(traffic)
@@ -263,6 +281,7 @@ def _pass(engine, traffic: list[Query], label: str):
     print(f"{label}: {len(traffic)} queries in {dt:.2f}s -> "
           f"{len(traffic)/dt:.1f} queries/s, "
           f"{samples/dt/1e6:.2f} MSample/s, "
+          f"{ess_total(results)/dt:.0f} ESS/s, "
           f"{bits:.2f} bits/sample, converged {conv}/{len(traffic)}")
     return dt, results
 
@@ -285,8 +304,11 @@ def _run_batch(args, engine, registry, traffic):
             if r.query.mask is not None:
                 n_px += int(np.asarray(r.query.mask).sum())
             ev = f"{n_px} clamped px" if n_px else "no mask"
+        d = r.diagnostics
         print(f"  {r.query.network} | evidence {ev}: "
-              f"rhat={r.rhat:.3f} kept={r.n_samples}")
+              f"rhat={r.rhat:.3f} rank_rhat={d.worst_rank_rhat:.3f} "
+              f"ess={d.min_ess:.0f} sweeps={d.sweeps_used} "
+              f"kept={r.n_samples}")
         for var, m in list(r.marginals.items())[:6]:
             print(f"    P({var} | e) = {np.round(m, 3)}")
 
@@ -297,6 +319,7 @@ def _run_stream(args, engine, sync_engine, traffic, arrivals):
         rate_qps=args.rate, max_wait_ms=args.max_wait_ms)
     print(f"stream: {m['n_queries']} queries arriving at "
           f"{m['rate_qps']:.1f}/s -> {m['queries_per_s']:.1f} queries/s, "
+          f"{m['ess_per_s']:.0f} ESS/s, "
           f"p50 {m['p50_ms']:.0f} ms, p99 {m['p99_ms']:.0f} ms, "
           f"converged {m['converged']}/{m['n_queries']}")
     print(f"  sync one-at-a-time baseline: "
@@ -324,6 +347,13 @@ def main(argv=None) -> None:
                     help="sample budget per query")
     ap.add_argument("--burn-in", type=int, default=64)
     ap.add_argument("--rhat", type=float, default=1.05)
+    ap.add_argument("--ess-target", type=float, default=100.0,
+                    help="min effective sample size (bulk and tail) a "
+                         "query needs before rank-mode retirement")
+    ap.add_argument("--retirement", default="rank",
+                    choices=("rank", "legacy"),
+                    help="retirement rule: rank-normalized R-hat + ESS "
+                         "(default) or the legacy plain split-R-hat")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-iu", action="store_true")
     ap.add_argument("--stream", action="store_true",
@@ -371,7 +401,8 @@ def main(argv=None) -> None:
     registry = build_registry(mrf_shape=mrf_shape)
     engine_kw = dict(
         chains_per_query=args.chains, burn_in=args.burn_in,
-        rhat_target=args.rhat, use_iu=not args.no_iu, mesh=mesh,
+        rhat_target=args.rhat, ess_target=args.ess_target,
+        retirement=args.retirement, use_iu=not args.no_iu, mesh=mesh,
         plan_cache_dir=args.plan_cache_dir or None, seed=args.seed)
     engine = PosteriorEngine(registry, **engine_kw)
 

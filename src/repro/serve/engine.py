@@ -15,16 +15,21 @@ and the engine only ever sees flat variable ids.
 
 Sampling proceeds in rounds of ``sweeps_per_round`` sweeps.  After the
 burn-in rounds, each round accumulates thinned one-hot counts per lane
-(the online marginal estimate) and a per-lane mean state (the scalar
-statistic for convergence).  Convergence is judged *per query*: after
-every round each query's own chains get a split-R̂, and a query retires
-— its Result finalized — the moment its chains converge, independent of
-its group mates.  Budget left over is simply not spent, which is where
-the paper's "approximate inference" throughput comes from; a retired
-query's lane block is also free real estate that :class:`GroupRun.admit`
-can hand to a waiting query of the same plan mid-flight (how the
-admission queue in :mod:`repro.serve.queue` backfills under streaming
-traffic).
+(the online marginal estimate) and per-lane first/second moment
+statistics (the inputs to the convergence diagnostics).  Convergence is
+judged *per query* from :mod:`repro.pgm.diagnostics`: under the default
+``retirement="rank"`` rule a query retires the moment its rank-
+normalized split-R̂ (including the folded tail variant) drops below
+``rhat_target`` **and** its min-ESS (bulk and tail effective sample
+size) exceeds ``ess_target`` — both overridable per query.
+``retirement="legacy"`` keeps the PR-3 plain split-R̂-only rule for
+baseline comparability.  Either way retirement is independent of the
+query's group mates: budget left over is simply not spent, which is
+where the paper's "approximate inference" throughput comes from, and a
+retired query's lane block is free real estate that
+:class:`GroupRun.admit` can hand to a waiting query of the same plan
+mid-flight (how the admission queue in :mod:`repro.serve.queue`
+backfills under streaming traffic).
 
 Multi-device serving: give the engine a mesh from
 ``repro.launch.mesh.make_serve_mesh`` and each group's lane axis
@@ -53,34 +58,21 @@ from jax.sharding import NamedSharding
 from repro.core.fixedpoint import DEFAULT_K
 from repro.launch.mesh import mesh_fingerprint
 from repro.pgm.compile import sum_sweep_stats
+from repro.pgm.diagnostics import (
+    Diagnostics, RunningDiagnostics, split_rhat)
 from repro.pgm.graph import BayesNet
 from repro.serve.families import family_of
 from repro.serve.plan_cache import PlanCache, plan_key
 from repro.serve.query import MrfQuery, Query, Result
 from repro.sharding.specs import serve_lane_multiple
 
+# retirement rules: "rank" = rank-normalized split-R̂ + min-ESS gate
+# (repro.pgm.diagnostics, the default), "legacy" = PR-3 plain split-R̂
+# over round means (kept selectable so perf baselines stay comparable)
+RETIREMENT_MODES = ("rank", "legacy")
 
-def split_rhat(draws: np.ndarray) -> float:
-    """Split-R̂ of per-chain draw sequences (chains, rounds).
-
-    Each chain's sequence is split in half (dropping the odd round, if
-    any) and the halves treated as separate chains — the standard
-    Gelman–Rubin split variant.  Returns 1.0 for degenerate (constant)
-    statistics, inf when between-chain variance dominates a vanishing
-    within-chain variance.
-    """
-    draws = np.asarray(draws, np.float64)
-    c, r = draws.shape
-    half = r // 2
-    if c < 2 or half < 2:
-        return float("inf")  # not enough draws to judge — keep sampling
-    seqs = np.concatenate([draws[:, :half], draws[:, half:2 * half]], axis=0)
-    w = float(seqs.var(axis=1, ddof=1).mean())
-    b = float(half * seqs.mean(axis=1).var(ddof=1))
-    if w < 1e-12:
-        return 1.0 if b < 1e-12 else float("inf")
-    var_plus = (half - 1) / half * w + b / half
-    return float(np.sqrt(var_plus / w))
+__all__ = ["GroupEntry", "GroupRun", "PosteriorEngine", "RETIREMENT_MODES",
+           "split_rhat"]
 
 
 @dataclass
@@ -109,6 +101,11 @@ class _Slot:
     because the group's slot count was padded up to a shape bucket.  A
     vacant slot is born ``done`` — it samples throwaway replicas of
     query 0 until :meth:`GroupRun.admit` backfills it.
+
+    ``diags`` holds one incremental :class:`repro.pgm.diagnostics.
+    RunningDiagnostics` per query variable, fed the slot's per-round
+    moment statistics; ``rhat_target``/``ess_target`` are the slot's
+    resolved retirement thresholds (query override or engine default).
     """
 
     entry: GroupEntry | None
@@ -118,8 +115,11 @@ class _Slot:
     t0: float                   # admission wall-clock (perf_counter)
     rounds: int = 0             # post-burn-in rounds accumulated
     counts: np.ndarray | None = None       # (n, L) int64, lane-summed
-    means: np.ndarray | None = None        # (c, n, cap) R̂ statistics
-    rhat: float = float("inf")
+    diags: dict[int, RunningDiagnostics] | None = None  # per query var
+    rhat_target: float = 0.0
+    ess_target: float = 0.0
+    rhat: float = float("inf")             # worst legacy split-R̂ so far
+    converged: bool = False                # active rule satisfied
     done: bool = False
     cancelled: bool = False
 
@@ -191,10 +191,18 @@ class GroupRun:
     def _fresh_slot(self, entry: GroupEntry, j: int, t0: float) -> _Slot:
         cap = self._cap(entry.query)
         L = self.family.max_card(self.prog)
+        q = entry.query
+        eng = self.engine
+        rhat_target = getattr(q, "rhat_target", None)
+        ess_target = getattr(q, "ess_target", None)
         return _Slot(
             entry=entry, j=j, cap=cap, burn_left=self.burn_rounds, t0=t0,
             counts=np.zeros((self.n_vars, L), np.int64),
-            means=np.empty((self.c, self.n_vars, cap), np.float32))
+            diags={v: RunningDiagnostics(self.spr) for v in entry.qvars},
+            rhat_target=(eng.rhat_target if rhat_target is None
+                         else float(rhat_target)),
+            ess_target=(eng.ess_target if ess_target is None
+                        else float(ess_target)))
 
     def _cap(self, q: Query) -> int:
         """Smallest round count whose kept-draw total (global multiples
@@ -223,11 +231,12 @@ class GroupRun:
             if not s.done and not s.burn_left:
                 offsets[s.j * self.c:(s.j + 1) * self.c] = s.rounds * self.spr
         self._run_key, sub = jax.random.split(self._run_key)
-        self.x, rc, xmean, st = self.runner(sub, self.x, jnp.asarray(offsets))
+        self.x, rc, xmean, xsq, st = self.runner(
+            sub, self.x, jnp.asarray(offsets))
         self.bits += int(sum_sweep_stats(st).bits_used)
         self.sweeps_done += self.spr
 
-        rc_np = xmean_np = None  # host transfer only if a slot counts
+        rc_np = xmean_np = xsq_np = None  # host transfer only if needed
         retired: list[GroupEntry] = []
         for s in self.slots:
             if s.done:
@@ -238,16 +247,29 @@ class GroupRun:
             if rc_np is None:
                 rc_np = np.asarray(rc, np.int64)
                 xmean_np = np.asarray(xmean)
+                xsq_np = np.asarray(xsq)
             sl = slice(s.j * self.c, (s.j + 1) * self.c)
             s.counts += rc_np[sl].sum(axis=0)
-            s.means[..., s.rounds] = xmean_np[sl]
+            for v, d in s.diags.items():
+                d.update(xmean_np[sl, v], xsq_np[sl, v])
             s.rounds += 1
             if s.rounds >= eng.min_rounds:
-                s.rhat = max(
-                    split_rhat(s.means[:, v, :s.rounds])
-                    for v in s.entry.qvars)
-            if ((s.rounds >= eng.min_rounds and s.rhat < eng.rhat_target)
-                    or s.rounds >= s.cap):
+                if eng.retirement == "rank":
+                    # staged check: the cheap R̂ gate first, the
+                    # O(rounds²) ESS estimators only once every
+                    # variable's R̂ passes — slow-mixing rounds never
+                    # pay for ESS they can't use (both all()s
+                    # short-circuit on the first failing variable)
+                    s.converged = all(
+                        d.rank_gate() < s.rhat_target
+                        for d in s.diags.values()) and all(
+                        d.compute().min_ess >= s.ess_target
+                        for d in s.diags.values())
+                else:  # legacy: plain split-R̂ over round means only
+                    s.rhat = max(
+                        d.legacy_rhat() for d in s.diags.values())
+                    s.converged = s.rhat < s.rhat_target
+            if s.converged or s.rounds >= s.cap:
                 self._retire(s)
                 retired.append(s.entry)
         return retired
@@ -296,6 +318,21 @@ class GroupRun:
         kept_total = (s.rounds * self.spr + eng.thin - 1) // eng.thin
         total_sweeps = (self.burn_rounds + s.rounds) * self.spr
         group_node_samples = self.bt * self.n_free * self.sweeps_done
+        # diagnostics payload: worst-case R̂s / smallest ESS over the
+        # query variables, computed once at retirement (cached per
+        # round, so this is free when the retirement rule already
+        # evaluated them).  Result.rhat is the worst legacy split-R̂ in
+        # both modes — rank-mode rounds skip it on the hot path, so it
+        # is finalized here from the same cached computes.
+        ds = [d.compute() for d in s.diags.values()]
+        s.rhat = max(d.rhat for d in ds)
+        diag = Diagnostics(
+            rhat=float(s.rhat),
+            rank_rhat=max(d.rank_rhat for d in ds),
+            folded_rhat=max(d.folded_rhat for d in ds),
+            ess_bulk=min(d.ess_bulk for d in ds),
+            ess_tail=min(d.ess_tail for d in ds),
+            sweeps_used=total_sweeps)
         s.entry.result = Result(
             query=s.entry.query,
             marginals=marginals,
@@ -303,11 +340,12 @@ class GroupRun:
             n_sweeps=total_sweeps,
             n_node_samples=int(self.c * self.n_free * total_sweeps),
             rhat=float(s.rhat),
-            converged=bool(s.rhat < eng.rhat_target),
+            converged=bool(s.converged),
             cache_hit=self.cache_hit,
             wall_s=time.perf_counter() - s.t0,
             bits_per_sample=(
                 self.bits / group_node_samples if group_node_samples else 0.0),
+            diagnostics=diag,
         )
 
 
@@ -316,7 +354,15 @@ class PosteriorEngine:
 
     Parameters mirror a serving config: ``chains_per_query`` lanes per
     query, ``sweeps_per_round`` sweeps per scheduling quantum, burn-in
-    and thinning in sweeps, and a split-R̂ target for early stopping.
+    and thinning in sweeps, and the retirement (early-stopping) rule.
+    ``retirement="rank"`` (default) retires a query once its worst
+    rank-normalized split-R̂ — ``max(rank_rhat, folded_rhat)`` over the
+    query variables — is below ``rhat_target`` *and* its smallest
+    bulk/tail ESS exceeds ``ess_target``; ``"legacy"`` keeps the plain
+    split-R̂-only rule (comparable to pre-diagnostics perf baselines).
+    Both thresholds are engine defaults that individual queries may
+    override (``Query.rhat_target`` / ``Query.ess_target``).
+
     ``mesh`` (from :func:`repro.launch.mesh.make_serve_mesh`) shards each
     group's chain-lane axis over the mesh's "batch" axis; ``None`` keeps
     the single-device path.  ``plan_cache_dir`` persists compiled plans
@@ -325,6 +371,16 @@ class PosteriorEngine:
     each group's slot count to a power of two — streaming traffic then
     compiles O(log max-group) distinct lane shapes instead of one per
     observed group size, and the pad blocks double as backfill targets.
+
+    Example::
+
+        from repro.pgm import networks
+        from repro.serve import PosteriorEngine, Query
+
+        engine = PosteriorEngine({"sprinkler": networks.sprinkler()})
+        res = engine.answer(Query("sprinkler", {"wetgrass": 1}, ("rain",)))
+        res.marginal("rain")          # posterior P(rain | wetgrass=1)
+        res.diagnostics.ess_bulk      # effective sample size behind it
     """
 
     def __init__(
@@ -336,6 +392,8 @@ class PosteriorEngine:
         burn_in: int = 64,
         thin: int = 1,
         rhat_target: float = 1.05,
+        ess_target: float = 100.0,
+        retirement: str = "rank",
         min_rounds: int = 4,
         max_rounds: int = 64,
         k: int = DEFAULT_K,
@@ -355,6 +413,11 @@ class PosteriorEngine:
         self.burn_in = int(burn_in)
         self.thin = int(thin)
         self.rhat_target = float(rhat_target)
+        self.ess_target = float(ess_target)
+        if retirement not in RETIREMENT_MODES:
+            raise ValueError(
+                f"retirement {retirement!r} not in {RETIREMENT_MODES}")
+        self.retirement = retirement
         self.min_rounds = max(int(min_rounds), 4)  # split-R̂ needs >= 4
         self.max_rounds = int(max_rounds)
         self.k = k

@@ -40,8 +40,8 @@ from repro.sharding.specs import (
 # -- round runners ---------------------------------------------------------
 def make_round_runner(prog, *, sweeps_per_round: int, thin: int,
                       use_iu: bool, mesh=None):
-    """Jitted ``(key, x, offset) -> (x, counts, xmean, stats)`` per round
-    (Bayesian-network family).
+    """Jitted ``(key, x, offset) -> (x, counts, xmean, xsq, stats)`` per
+    round (Bayesian-network family).
 
     ``offset`` (traced int32, scalar or per-lane ``(B,)``) is the global
     post-burn-in sweep index of the round's first sweep: draws are kept
@@ -55,8 +55,12 @@ def make_round_runner(prog, *, sweeps_per_round: int, thin: int,
 
     ``counts``: (B, n, L) thinned one-hot draw counts this round.
     ``xmean``:  (B, n) mean state over the round — per-lane scalar
-    statistics for split-R̂ (for a binary node this is its running
-    posterior-probability estimate).
+    statistics for the convergence diagnostics (for a binary node this
+    is its running posterior-probability estimate).
+    ``xsq``:    (B, n) mean of x² over the round — the extra per-round
+    moment :mod:`repro.pgm.diagnostics` needs to rescale round-unit ESS
+    to sweep units (both moments accumulate inside the same fused scan,
+    so diagnostics cost zero extra dispatches).
     ``stats``:  per-sweep (sweeps_per_round,) int32 arrays — summed
     host-side in int64 by the engine (int32 carries wrapped on long
     runs; see :class:`repro.pgm.compile.BNSweepStats`).
@@ -78,7 +82,7 @@ def make_round_runner(prog, *, sweeps_per_round: int, thin: int,
             x = jax.lax.with_sharding_constraint(x, state_sharding)
 
         def body(carry, i):
-            key, x, counts, xsum = carry
+            key, x, counts, xsum, xsqsum = carry
             key, sub = jax.random.split(key)
             bits, att = jnp.int32(0), jnp.int32(0)
             for plan in prog.plans:
@@ -91,25 +95,29 @@ def make_round_runner(prog, *, sweeps_per_round: int, thin: int,
             if kept.ndim:  # per-lane offsets: broadcast over (node, label)
                 kept = kept[:, None, None]
             counts = counts + jnp.where(kept, onehot, 0)
-            xsum = xsum + x.astype(jnp.float32)
-            return (key, x, counts, xsum), BNSweepStats(bits, att)
+            xf = x.astype(jnp.float32)
+            xsum = xsum + xf
+            xsqsum = xsqsum + xf * xf
+            return (key, x, counts, xsum, xsqsum), BNSweepStats(bits, att)
 
         counts0 = jnp.zeros(x.shape + (L,), jnp.int32)
         xsum0 = jnp.zeros(x.shape, jnp.float32)
-        (key, x, counts, xsum), per_sweep = jax.lax.scan(
-            body, (key, x, counts0, xsum0), jnp.arange(sweeps_per_round))
+        (key, x, counts, xsum, xsqsum), per_sweep = jax.lax.scan(
+            body, (key, x, counts0, xsum0, xsum0),
+            jnp.arange(sweeps_per_round))
         if state_sharding is not None:
             x = jax.lax.with_sharding_constraint(x, state_sharding)
-        return x, counts, xsum / sweeps_per_round, per_sweep
+        return (x, counts, xsum / sweeps_per_round,
+                xsqsum / sweeps_per_round, per_sweep)
 
     return jax.jit(round_fn)
 
 
 def make_mrf_round_runner(prog: CompiledMRF, *, sweeps_per_round: int,
                           thin: int, use_iu: bool, mesh=None):
-    """Jitted ``(key, x, offset) -> (x, counts, xmean, stats)`` per round
-    (MRF family) — same contract as :func:`make_round_runner`, over the
-    flat site space.
+    """Jitted ``(key, x, offset) -> (x, counts, xmean, xsq, stats)`` per
+    round (MRF family) — same contract as :func:`make_round_runner`,
+    over the flat site space.
 
     ``x`` is the (B, H, W) label field; the clamp mask compiled into
     ``prog`` is baked as a constant (the mask IS the plan — one XLA
@@ -141,7 +149,7 @@ def make_mrf_round_runner(prog: CompiledMRF, *, sweeps_per_round: int,
         b = x.shape[0]
 
         def body(carry, i):
-            key, x, counts, xsum = carry
+            key, x, counts, xsum, xsqsum = carry
             key, k0, k1 = jax.random.split(key, 3)
             x, s0 = checkerboard_halfstep(
                 k0, x, unary, pairwise, jnp.int32(0), clamp=clamp,
@@ -155,17 +163,21 @@ def make_mrf_round_runner(prog: CompiledMRF, *, sweeps_per_round: int,
             if kept.ndim:  # per-lane offsets: broadcast over (site, label)
                 kept = kept[:, None, None]
             counts = counts + jnp.where(kept, onehot, 0)
-            xsum = xsum + flat.astype(jnp.float32)
-            return (key, x, counts, xsum), SweepStats(
+            ff = flat.astype(jnp.float32)
+            xsum = xsum + ff
+            xsqsum = xsqsum + ff * ff
+            return (key, x, counts, xsum, xsqsum), SweepStats(
                 s0.bits_used + s1.bits_used, s0.attempts + s1.attempts)
 
         counts0 = jnp.zeros((b, h * w, L), jnp.int32)
         xsum0 = jnp.zeros((b, h * w), jnp.float32)
-        (key, x, counts, xsum), per_sweep = jax.lax.scan(
-            body, (key, x, counts0, xsum0), jnp.arange(sweeps_per_round))
+        (key, x, counts, xsum, xsqsum), per_sweep = jax.lax.scan(
+            body, (key, x, counts0, xsum0, xsum0),
+            jnp.arange(sweeps_per_round))
         if state_sharding is not None:
             x = jax.lax.with_sharding_constraint(x, state_sharding)
-        return x, counts, xsum / sweeps_per_round, per_sweep
+        return (x, counts, xsum / sweeps_per_round,
+                xsqsum / sweeps_per_round, per_sweep)
 
     return jax.jit(round_fn)
 
@@ -343,7 +355,13 @@ MRF_FAMILY = MrfFamily()
 
 
 def family_of(model):
-    """The adapter serving a registered model (dispatch on type)."""
+    """The adapter serving a registered model (dispatch on type).
+
+    Example::
+
+        family_of(networks.asia()).kind          # 'bayesnet'
+        family_of(networks.penguin_task(8, 8)[0]).kind   # 'mrf'
+    """
     if isinstance(model, BayesNet):
         return BAYESNET_FAMILY
     if isinstance(model, MRFGrid):

@@ -18,9 +18,14 @@ import enum
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Mapping, Sequence
+from typing import TYPE_CHECKING, Mapping, Sequence
 
 import numpy as np
+
+if TYPE_CHECKING:  # jax-free import discipline: importing this module
+    # must not trigger repro.pgm's package __init__ (and with it the
+    # XLA backend) before the CLI's --force-host-devices handling runs
+    from repro.pgm.diagnostics import Diagnostics
 
 
 def parse_evidence(spec: str) -> dict[str, int]:
@@ -50,17 +55,28 @@ class Query:
 
     ``n_samples`` is the *target* sample budget: roughly how many kept
     (post burn-in, thinned) draws to accumulate for this query across all
-    of its chains.  The engine may stop earlier on split-R̂ convergence,
-    and may overshoot — rounds are quantized, a micro-batched group runs
-    to its largest member's budget, and the engine's ``max_rounds`` caps
-    the total.  ``Result.n_samples`` reports what was actually kept.
+    of its chains.  The engine may stop earlier on convergence, and may
+    overshoot — rounds are quantized, a micro-batched group runs to its
+    largest member's budget, and the engine's ``max_rounds`` caps the
+    total.  ``Result.n_samples`` reports what was actually kept.
     ``query_vars`` empty means "all unobserved variables".
+    ``rhat_target`` / ``ess_target`` override the engine's retirement
+    thresholds for this query alone (None = engine default): a latency-
+    critical caller can loosen them, an accuracy-critical one can demand
+    more effective samples — see ``docs/diagnostics.md``.
+
+    Example::
+
+        Query("asia", {"smoke": 1, "dysp": 1}, ("lung", "bronc"),
+              n_samples=8192, ess_target=400)
     """
 
     network: str
     evidence: Mapping[str | int, int] = field(default_factory=dict)
     query_vars: Sequence[str | int] = ()
     n_samples: int = 8192
+    rhat_target: float | None = None
+    ess_target: float | None = None
 
 
 @dataclass
@@ -78,9 +94,16 @@ class MrfQuery:
 
     ``query_sites``: ``(row, col)`` pairs to report marginals for
     (empty = every unclamped site — fine for small grids, prefer an
-    explicit subset on big ones: split-R̂ is judged over the query
-    sites, so fewer sites also means cheaper convergence checks).
-    ``n_samples`` has :class:`Query` semantics.
+    explicit subset on big ones: convergence is judged over the query
+    sites, so fewer sites also means cheaper retirement checks).
+    ``n_samples`` has :class:`Query` semantics, and ``rhat_target`` /
+    ``ess_target`` override the engine's retirement thresholds for this
+    query alone, exactly as on :class:`Query`.
+
+    Example::
+
+        mask = np.zeros((24, 24), bool); mask[12, 4:20] = True
+        MrfQuery("penguin", mask, values, query_sites=((10, 10),))
     """
 
     network: str
@@ -89,11 +112,29 @@ class MrfQuery:
     query_sites: Sequence[tuple[int, int]] = ()
     n_samples: int = 8192
     mask_sites: Sequence[tuple[int, int, int]] = ()
+    rhat_target: float | None = None
+    ess_target: float | None = None
 
 
 @dataclass
 class Result:
-    """Answer to one :class:`Query` (or :class:`MrfQuery`)."""
+    """Answer to one :class:`Query` (or :class:`MrfQuery`).
+
+    ``rhat`` is the worst plain split-R̂ over the query variables (kept
+    in both retirement modes so results stay comparable across modes);
+    ``converged`` reflects whichever retirement rule the engine ran.
+    ``diagnostics`` is the full convergence payload
+    (:class:`repro.pgm.diagnostics.Diagnostics`: rank/folded R̂,
+    bulk/tail ESS in sweep units, sweeps used) — ``diagnostics.ess_bulk
+    / wall_s`` is the honest per-query throughput number (effective
+    samples per second, vs the raw MSample/s the paper quotes).
+
+    Example::
+
+        res = engine.answer(Query("sprinkler", {"wetgrass": 1}, ("rain",)))
+        res.marginal("rain")              # np.ndarray, sums to 1
+        res.diagnostics.min_ess           # worst-case effective draws
+    """
 
     query: "Query | MrfQuery"
     marginals: dict[str, np.ndarray]   # node name -> posterior P(v | e)
@@ -105,6 +146,7 @@ class Result:
     cache_hit: bool                    # plan served from the cache
     wall_s: float                      # wall time of the micro-batch group
     bits_per_sample: float = 0.0       # random bits per free-node draw
+    diagnostics: "Diagnostics | None" = None  # rank-R̂/ESS payload
 
     def marginal(self, var: str) -> np.ndarray:
         try:

@@ -17,11 +17,12 @@ one packed :class:`repro.serve.engine.GroupRun` when either
 Each ``submit`` returns a :class:`repro.serve.query.QueryHandle`
 supporting blocking ``result()`` and per-query ``cancel()`` — honoured
 immediately pre-dispatch, and at the next round boundary mid-flight.
-Because the engine retires queries individually on split-R̂
-convergence, a converged (or cancelled) query frees its chain lanes
-mid-flight and the queue *backfills* them with waiting queries of the
-same plan — lanes stay hot instead of idling until the slowest group
-member converges.
+Because the engine retires queries individually on convergence (the
+rank-normalized R̂ + ESS rule by default — see
+:mod:`repro.pgm.diagnostics`), a converged (or cancelled) query frees
+its chain lanes mid-flight and the queue *backfills* them with waiting
+queries of the same plan — lanes stay hot instead of idling until the
+slowest group member converges.
 
 Single dispatcher thread; the queue owns the engine while open (do not
 call ``answer_batch`` on the same engine concurrently).  Buckets are
@@ -77,6 +78,13 @@ class AdmissionQueue:
     backfill:
         Re-use the lanes of retired (converged/cancelled) queries for
         waiting queries of the same plan mid-flight.
+
+    Example::
+
+        queue = AdmissionQueue(engine, max_wait_ms=20.0)
+        handle = queue.submit(Query("sprinkler", {"wetgrass": 1}, ("rain",)))
+        handle.result(timeout=60).marginal("rain")
+        queue.close()
     """
 
     def __init__(self, engine: PosteriorEngine, *, max_wait_ms: float = 10.0,

@@ -132,13 +132,13 @@ class TestThinning:
         runner = make_round_runner(
             prog, sweeps_per_round=16, thin=3, use_iu=True)
         x = init_states(jax.random.PRNGKey(0), prog, 4)
-        _, c_scalar, _, _ = runner(jax.random.PRNGKey(1), x, jnp.int32(16))
-        _, c_vec, _, _ = runner(
+        _, c_scalar, _, _, _ = runner(jax.random.PRNGKey(1), x, jnp.int32(16))
+        _, c_vec, _, _, _ = runner(
             jax.random.PRNGKey(1), x, jnp.full((4,), 16, jnp.int32))
         assert np.array_equal(np.asarray(c_scalar), np.asarray(c_vec))
         # mixed offsets: lanes 2,3 run a fresh phase (6 kept in [0,16))
         # while lanes 0,1 continue an old one (5 kept in [16,32))
-        _, c_mix, _, _ = runner(
+        _, c_mix, _, _, _ = runner(
             jax.random.PRNGKey(1), x, jnp.asarray([16, 16, 0, 0], jnp.int32))
         kept = np.asarray(c_mix).sum(-1)[:, 0]
         assert kept.tolist() == [5, 5, 6, 6]
@@ -151,10 +151,10 @@ class TestThinning:
         runner = make_round_runner(
             prog, sweeps_per_round=16, thin=3, use_iu=True)
         x = init_states(jax.random.PRNGKey(0), prog, 4)
-        x, counts, _, _ = runner(jax.random.PRNGKey(1), x, jnp.int32(0))
+        x, counts, _, _, _ = runner(jax.random.PRNGKey(1), x, jnp.int32(0))
         # kept global sweeps in [0, 16): 0, 3, 6, 9, 12, 15
         assert int(np.asarray(counts).sum(-1)[0, 0]) == 6
-        x, counts, _, _ = runner(jax.random.PRNGKey(2), x, jnp.int32(16))
+        x, counts, _, _, _ = runner(jax.random.PRNGKey(2), x, jnp.int32(16))
         # kept global sweeps in [16, 32): 18, 21, 24, 27, 30 — the
         # round-relative restart kept 6 with the wrong spacing
         assert int(np.asarray(counts).sum(-1)[0, 0]) == 5
