@@ -43,6 +43,16 @@ retirement rules (``legacy`` plain split-R̂ vs ``rank`` rank-R̂ + ESS)
 and writes a ``BENCH_diagnostics.json`` artifact with per-mode
 sweeps-to-retirement and ESS/s — the latency/statistical-quality
 trade-off the diagnostics subsystem exists to expose.
+
+Telemetry (``repro.serve.telemetry``, see ``docs/observability.md``):
+the ``--stream`` run records with a live recorder, so its report
+section carries a ``latency_breakdown`` (wait/plan/service from the
+lifecycle spans) and a metrics-registry snapshot; ``--trace-out`` /
+``--metrics-json`` write the Perfetto trace and ``engine.stats()``
+snapshot as CI artifacts.  Every report also carries a
+``telemetry_overhead`` section (null vs live recorder ESS/s on
+identical traffic, self-relative) which
+``benchmarks/check_serve_regression.py`` gates at ≤ 5%.
 """
 from __future__ import annotations
 
@@ -190,14 +200,23 @@ def run_mrf(name, *, h=16, w=16, n_queries=12, n_patterns=2, budget=1024,
 
 def run_stream(name, network, *, n_queries=32, n_patterns=2, budget=2048,
                chains=16, rate_qps=0.0, max_wait_ms=250.0, mesh=None,
-               report=print):
+               trace_out="", metrics_out="", report=print):
     """Open-loop streaming benchmark: queued admission vs one-query-at-a-
     time synchronous serving over the same traffic, plus a bitwise
-    identity check of queued vs ``answer_batch`` results."""
+    identity check of queued vs ``answer_batch`` results.
+
+    The queued engine runs with a live telemetry recorder, so the
+    returned metrics carry a ``latency_breakdown`` (wait / plan /
+    service from the lifecycle spans) and a ``metrics`` registry
+    snapshot; ``trace_out`` / ``metrics_out`` additionally write the
+    Perfetto trace and the ``engine.stats()`` snapshot as artifacts.
+    The synchronous baseline engine stays on the no-op recorder so the
+    speedup denominator is a telemetry-free number."""
     from repro.pgm import networks
     from repro.serve.cli import measure_stream, synthetic_traffic
     from repro.serve.engine import PosteriorEngine
     from repro.serve.queue import AdmissionQueue
+    from repro.serve.telemetry import Telemetry
 
     bn = getattr(networks, network)()
     traffic = synthetic_traffic(
@@ -208,7 +227,8 @@ def run_stream(name, network, *, n_queries=32, n_patterns=2, budget=2048,
     # open-loop queued replay.  The 8x multiplier keeps the admission
     # window full — far above what one-at-a-time serving sustains, which
     # is the regime the queue exists for (machine-relative, CI-stable).
-    stream_engine = PosteriorEngine({network: bn}, **kw)
+    stream_engine = PosteriorEngine({network: bn}, **kw,
+                                    telemetry=Telemetry())
     metrics, _ = measure_stream(
         stream_engine,
         PosteriorEngine({network: bn}, **kw),
@@ -229,6 +249,7 @@ def run_stream(name, network, *, n_queries=32, n_patterns=2, budget=2048,
         queue_b.close()
     identical = all(_identical(a, b) for a, b in zip(ref, streamed))
 
+    bd = metrics.get("latency_breakdown", {})
     report(row(
         f"serve_{name}_stream",
         1e6 / max(metrics["queries_per_s"], 1e-9),
@@ -237,12 +258,99 @@ def run_stream(name, network, *, n_queries=32, n_patterns=2, budget=2048,
         f"speedup={metrics['speedup']:.2f}x;"
         f"ESS/s={metrics['ess_per_s']:.1f};"
         f"p50_ms={metrics['p50_ms']:.1f};p99_ms={metrics['p99_ms']:.1f};"
-        f"groups={metrics['dispatched_groups']};"
+        + "".join(f"{p}_p50_ms={bd[p]['p50_ms']:.1f};"
+                  for p in ("wait", "plan", "service") if p in bd)
+        + f"groups={metrics['dispatched_groups']};"
         f"backfilled={metrics['backfilled']};identical={identical}"))
+    if trace_out:
+        stream_engine.telemetry.write_trace(trace_out)
+        report(f"# wrote {trace_out}")
+    if metrics_out:
+        with open(metrics_out, "w") as f:
+            json.dump(stream_engine.stats(), f, indent=2)
+        report(f"# wrote {metrics_out}")
     return {"name": name, "network": network,
             "retirement": stream_engine.retirement,
             **{k: v for k, v in metrics.items() if k != "submitted"},
+            "metrics": stream_engine.telemetry.metrics_snapshot(),
             "identical": bool(identical)}
+
+
+def run_telemetry_overhead(network="asia", *, n_queries=16, n_patterns=2,
+                           budget=2048, chains=16, repeats=8, report=print):
+    """Null-recorder vs live-recorder warm throughput on identical
+    traffic — the number the CI overhead gate holds at ≤ 5%.
+
+    Protocol: warm both engines off the clock (plan-cache fill + XLA
+    compile), then run ``repeats`` *interleaved* timed warm
+    ``answer_batch`` passes per recorder, GC disabled.  Both engines
+    share one seed, so pass *k* does bitwise-identical sampling on both
+    sides — the ESS cancels exactly and the honest comparison is a pure
+    time ratio on identical work.  ``ratio`` (what the gate holds
+    ≥ 1 − tolerance) is the max of two robust estimators of that time
+    ratio — the timeit-style min-time ratio, a trimmed-sum ratio, and
+    the median of adjacent-pair ratios — because individual warm passes
+    jitter ±10% on shared CI runners while the estimators stay centred;
+    interleaving makes slow machine
+    drift hit both sides equally, and the comparison is *self-relative*
+    (both sides measured in this process, this run) so the gate is
+    immune to runner speed-class drift.  ``ess_per_s_*`` report each
+    side's throughput at its fastest pass."""
+    import gc
+
+    from repro.pgm import networks
+    from repro.serve.cli import synthetic_traffic
+    from repro.serve.engine import PosteriorEngine
+    from repro.serve.telemetry import Telemetry
+
+    bn = getattr(networks, network)()
+    traffic = synthetic_traffic(
+        bn, network, n_queries, n_patterns, np.random.default_rng(0), budget)
+    engines = {}
+    for label, tel in (("null", None), ("enabled", Telemetry())):
+        engines[label] = PosteriorEngine(
+            {network: bn}, chains_per_query=chains, burn_in=32,
+            telemetry=tel)
+        _pass(engines[label], traffic)       # warm the plan cache
+    dts: dict[str, list[float]] = {"null": [], "enabled": []}
+    ess: dict[str, list[float]] = {"null": [], "enabled": []}
+    gc.collect()
+    gc.disable()       # GC pauses are the dominant asymmetric jitter
+    try:
+        for _ in range(repeats):
+            for label, engine in engines.items():
+                dt, _, results = _pass(engine, traffic)
+                dts[label].append(dt)
+                ess[label].append(_ess(results))
+    finally:
+        gc.enable()
+    ess_per_s = {}
+    for label in ("null", "enabled"):
+        k = min(range(repeats), key=dts[label].__getitem__)
+        ess_per_s[label] = ess[label][k] / dts[label][k]
+
+    # Three robust estimators of the same (work-identical) time ratio;
+    # all are central, so their max keeps full sensitivity to a real
+    # overhead regression (a true 10% cost drags every estimator to
+    # ~0.90) while cutting the false-failure rate from runner timing
+    # bursts that hit only one side's passes.
+    def _trimmed(xs: list[float]) -> float:
+        return sum(sorted(xs)[:-1]) if len(xs) > 1 else xs[0]
+
+    pair_ratios = sorted(n / e for n, e in zip(dts["null"], dts["enabled"]))
+    ratio = max(
+        min(dts["null"]) / max(min(dts["enabled"]), 1e-12),
+        _trimmed(dts["null"]) / max(_trimmed(dts["enabled"]), 1e-12),
+        pair_ratios[len(pair_ratios) // 2])
+    report(row("serve_telemetry_overhead",
+               1e6 / max(ess_per_s["enabled"], 1e-9),
+               f"ESS/s_null={ess_per_s['null']:.1f};"
+               f"ESS/s_enabled={ess_per_s['enabled']:.1f};"
+               f"ratio={ratio:.3f}"))
+    return {"network": network, "n_queries": n_queries, "repeats": repeats,
+            "ess_per_s_null": ess_per_s["null"],
+            "ess_per_s_enabled": ess_per_s["enabled"],
+            "ratio": ratio}
 
 
 def run_diagnostics_compare(network="asia", *, n_queries=16, n_patterns=2,
@@ -288,7 +396,8 @@ def run_diagnostics_compare(network="asia", *, n_queries=16, n_patterns=2,
     return out
 
 
-def main(report=print, *, smoke=False, stream=False, mesh_shape=None):
+def main(report=print, *, smoke=False, stream=False, mesh_shape=None,
+         trace_out="", metrics_out=""):
     """Benchmark-harness entry point; returns the JSON-able report."""
     mesh = None
     n_devices = 1
@@ -319,14 +428,18 @@ def main(report=print, *, smoke=False, stream=False, mesh_shape=None):
            "mesh_shape": None if mesh_shape is None else list(mesh_shape),
            "runs": runs}
     if stream:
+        stream_kw = dict(kw, trace_out=trace_out, metrics_out=metrics_out)
         if smoke:
             rep["stream"] = run_stream(
                 "asia_8n", "asia", n_queries=32, n_patterns=2, budget=512,
-                chains=8, **kw)
+                chains=8, **stream_kw)
         else:
-            rep["stream"] = run_stream("asia_8n", "asia", **kw)
+            rep["stream"] = run_stream("asia_8n", "asia", **stream_kw)
         if rep["stream"].pop("retirement") != rep["retirement"]:
             raise RuntimeError("stream run used a different retirement mode")
+    # telemetry overhead: null vs live recorder on identical traffic —
+    # self-relative, so the CI gate needs no baseline entry for it
+    rep["telemetry_overhead"] = run_telemetry_overhead(report=report)
     return rep
 
 
@@ -383,6 +496,12 @@ def _cli(argv=None):
                     help="comma-separated forced-host device counts, "
                          "e.g. 1,2,4,8 — runs one subprocess per count")
     ap.add_argument("--force-host-devices", type=int, default=0)
+    ap.add_argument("--trace-out", default="",
+                    help="with --stream: write the queued engine's "
+                         "Chrome/Perfetto trace here (CI artifact)")
+    ap.add_argument("--metrics-json", default="",
+                    help="with --stream: write the queued engine's "
+                         "stats()/metrics snapshot here (CI artifact)")
     args = ap.parse_args(argv)
 
     if args.force_host_devices:
@@ -394,7 +513,8 @@ def _cli(argv=None):
         from repro.launch.mesh import parse_mesh_shape
         mesh_shape = parse_mesh_shape(args.mesh_shape)
 
-    rep = main(smoke=args.smoke, stream=args.stream, mesh_shape=mesh_shape)
+    rep = main(smoke=args.smoke, stream=args.stream, mesh_shape=mesh_shape,
+               trace_out=args.trace_out, metrics_out=args.metrics_json)
     if args.diagnostics_json:
         diag_kw = (dict(n_queries=8, budget=512, chains=8)
                    if args.smoke else {})

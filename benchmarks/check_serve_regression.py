@@ -21,6 +21,14 @@ Checks, per run matched by name against the baseline:
 * the streaming section (when both reports carry one): queued queries/s
   under the same tolerance, queued-vs-synchronous speedup at least
   ``--min-stream-speedup``, and the stream identity bit must be True.
+* the ``telemetry_overhead`` section (when the current report carries
+  one): enabled-recorder ESS/s must be within
+  ``--telemetry-overhead-tolerance`` (default 5%) of the null-recorder
+  ESS/s.  This check is **self-relative** — both sides were measured in
+  the same bench process on identical traffic — so it needs no baseline
+  entry and is immune to runner speed-class drift; it exists to catch a
+  hot-path instrumentation regression (an args dict built without the
+  ``enabled`` guard, an accidental diagnostics recompute).
 
 Failures print one readable line each —
 ``FAIL metric=<name> baseline=<x> observed=<y> floor=<z> (tolerance N%)``
@@ -105,7 +113,9 @@ def _ess_check(metric, cur_section, base_section, tolerance,
 
 
 def check(current: dict, baseline: dict, *, tolerance: float,
-          min_stream_speedup: float) -> tuple[list[Failure], list[Failure]]:
+          min_stream_speedup: float,
+          telemetry_overhead_tolerance: float = 0.05,
+          ) -> tuple[list[Failure], list[Failure]]:
     """Returns ``(regressions, setup_errors)`` — setup errors (exit 2)
     are comparisons that *cannot* be made: current runs with no baseline
     entry, or reports produced under different retirement modes."""
@@ -184,6 +194,31 @@ def check(current: dict, baseline: dict, *, tolerance: float,
             "stream", observed="absent",
             note="baseline has a stream section but current doesn't "
                  "(did the bench run without --stream?)"))
+
+    # telemetry overhead: self-relative (null vs enabled recorder were
+    # measured in the same process on identical traffic), so no baseline
+    # entry is consulted — the floor is the current report's own null
+    # run.  The gated number is the report's ``ratio``: the min-time
+    # ratio over interleaved passes doing bitwise-identical work, i.e.
+    # the ESS/s ratio with the (identical) ESS cancelled exactly.
+    overhead = current.get("telemetry_overhead")
+    if overhead is not None:
+        ratio = overhead.get("ratio")
+        if ratio is None:
+            ratio = (overhead["ess_per_s_enabled"]
+                     / max(overhead["ess_per_s_null"], 1e-12))
+        floor = 1.0 - telemetry_overhead_tolerance
+        print(f"telemetry_overhead: enabled/null throughput ratio "
+              f"{ratio:.3f} (floor {floor:.3f}; "
+              f"{overhead['ess_per_s_enabled']:.1f} vs "
+              f"{overhead['ess_per_s_null']:.1f} ESS/s)")
+        if ratio < floor:
+            failures.append(Failure(
+                "telemetry_overhead.ratio",
+                observed=round(ratio, 3), floor=floor,
+                tolerance=telemetry_overhead_tolerance,
+                note="live recorder costs more than the overhead budget "
+                     "— check the telemetry.enabled guards on hot paths"))
     return failures, setup
 
 
@@ -195,6 +230,11 @@ def main(argv=None) -> None:
                     help="allowed relative throughput drop (default 0.30)")
     ap.add_argument("--min-stream-speedup", type=float, default=1.5,
                     help="required queued/sync queries/s ratio")
+    ap.add_argument("--telemetry-overhead-tolerance", type=float,
+                    default=0.05,
+                    help="allowed relative ESS/s cost of the live "
+                         "telemetry recorder vs the null recorder "
+                         "(self-relative; default 0.05)")
     ap.add_argument("--update", action="store_true",
                     help="overwrite the baseline with the current report")
     args = ap.parse_args(argv)
@@ -212,8 +252,10 @@ def main(argv=None) -> None:
         print(f"FAIL metric=baseline observed=unreadable — {args.baseline}: "
               f"{exc} (run with --update to create it, then commit)")
         sys.exit(2)
-    failures, setup = check(current, baseline, tolerance=args.tolerance,
-                            min_stream_speedup=args.min_stream_speedup)
+    failures, setup = check(
+        current, baseline, tolerance=args.tolerance,
+        min_stream_speedup=args.min_stream_speedup,
+        telemetry_overhead_tolerance=args.telemetry_overhead_tolerance)
     for f in failures + setup:
         print(f)
     if setup:

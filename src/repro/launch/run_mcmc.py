@@ -19,7 +19,8 @@ from __future__ import annotations
 
 import argparse
 import os
-import time
+
+from repro.serve.telemetry import monotonic
 
 
 def main() -> None:
@@ -40,6 +41,12 @@ def main() -> None:
     ap.add_argument("--query", default="",
                     help="BN only: comma-separated query variables "
                          "(default: all unobserved)")
+    ap.add_argument("--trace-out", default="",
+                    help="with --evidence: write a Chrome/Perfetto trace "
+                         "of the query lifecycle here")
+    ap.add_argument("--metrics-json", default="",
+                    help="with --evidence: write the engine.stats() "
+                         "snapshot here as JSON")
     args = ap.parse_args()
 
     if args.devices:
@@ -62,14 +69,17 @@ def main() -> None:
     use_iu = not args.no_iu
 
     if cfg.kind == "bayesnet" and args.evidence:
-        from repro.serve import PosteriorEngine, Query, parse_evidence
+        from repro.serve import PosteriorEngine, Query, Telemetry, \
+            parse_evidence
 
         bn = getattr(networks, cfg.network)()
         evidence = parse_evidence(args.evidence)
         qvars = tuple(v.strip() for v in args.query.split(",") if v.strip())
+        tel = (Telemetry() if (args.trace_out or args.metrics_json)
+               else None)
         engine = PosteriorEngine(
             {cfg.network: bn}, chains_per_query=chains, k=cfg.k,
-            use_iu=use_iu, burn_in=cfg.burn_in)
+            use_iu=use_iu, burn_in=cfg.burn_in, telemetry=tel)
         budget = chains * max(sweeps - cfg.burn_in, 1)
         res = engine.answer(Query(cfg.network, evidence, qvars,
                                   n_samples=budget))
@@ -87,6 +97,14 @@ def main() -> None:
               f"sweeps={d.sweeps_used} plan_cache_hit={res.cache_hit}")
         for var, m in res.marginals.items():
             print(f"  P({var} | e) = {np.round(m, 3)}")
+        if args.trace_out:
+            engine.telemetry.write_trace(args.trace_out)
+            print(f"trace written to {args.trace_out}")
+        if args.metrics_json:
+            import json
+            with open(args.metrics_json, "w") as f:
+                json.dump(engine.stats(), f, indent=2)
+            print(f"metrics snapshot written to {args.metrics_json}")
         return
 
     if cfg.kind == "bayesnet":
@@ -94,12 +112,12 @@ def main() -> None:
         prog = compile_bayesnet(bn, k=cfg.k)
         print(f"{cfg.network}: {bn.n_nodes} nodes, "
               f"{prog.n_colors} colors (DSatur)")
-        t0 = time.time()
+        t0 = monotonic()
         x, counts, stats = run_gibbs(
             jax.random.PRNGKey(0), prog, n_chains=chains, n_sweeps=sweeps,
             burn_in=cfg.burn_in, use_iu=use_iu)
         jax.block_until_ready(counts)
-        dt = time.time() - t0
+        dt = monotonic() - t0
         n_samples = chains * sweeps * bn.n_nodes
         print(f"{n_samples} RV samples in {dt:.2f}s -> "
               f"{n_samples/dt/1e6:.2f} MSample/s (CPU)")
@@ -128,25 +146,25 @@ def main() -> None:
         key = jax.random.PRNGKey(0)
         lab, u, pw, valid, _ = shard_mrf(mesh, mrf, n_chains=chains, key=key)
         step = make_mesh_gibbs_step(mesh, k=cfg.k, use_iu=use_iu)
-        t0 = time.time()
+        t0 = monotonic()
         bits = 0
         for i in range(sweeps):
             key, sub = jax.random.split(key)
             lab, bgrid = step(sub, lab, u, pw, valid)
             bits += int(np.asarray(bgrid, np.int64).sum())
         jax.block_until_ready(lab)
-        dt = time.time() - t0
+        dt = monotonic() - t0
         final = np.asarray(lab)[0][:h, :w]
     else:
         key = jax.random.PRNGKey(0)
         lab = init_labels(key, mrf, chains)
-        t0 = time.time()
+        t0 = monotonic()
         lab, stats = mrf_gibbs(
             jax.random.PRNGKey(1), lab, jnp.asarray(mrf.unary),
             jnp.asarray(mrf.pairwise), n_sweeps=sweeps, k=cfg.k,
             use_iu=use_iu)
         jax.block_until_ready(lab)
-        dt = time.time() - t0
+        dt = monotonic() - t0
         bits = int(stats.bits_used)
         final = np.asarray(lab)[0]
 

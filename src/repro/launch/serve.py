@@ -7,17 +7,19 @@
 timestamped query traffic is replayed open-loop through the admission
 queue (every other argument is forwarded to ``repro.serve.cli``, which
 owns the streaming flags — including the retirement-rule knobs
-``--retirement {rank,legacy}`` / ``--ess-target``, see
-``docs/diagnostics.md``):
+``--retirement {rank,legacy}`` / ``--ess-target`` (see
+``docs/diagnostics.md``) and the telemetry exports ``--trace-out`` /
+``--metrics-json`` (see ``docs/observability.md``)):
 
   PYTHONPATH=src python -m repro.launch.serve --stream --network asia \
-      --rate 50 --max-wait-ms 20
+      --rate 50 --max-wait-ms 20 --trace-out trace.json
 """
 from __future__ import annotations
 
 import argparse
 import sys
-import time
+
+from repro.serve.telemetry import monotonic
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -61,14 +63,14 @@ def main(argv: list[str] | None = None) -> None:
         extras["frontend"] = jnp.zeros(
             (args.batch, cfg.frontend_tokens, cfg.d_model), jnp.float32)
 
-    t0 = time.time()
+    t0 = monotonic()
     tokens, bits = generate(
         params, cfg, prompt, jax.random.PRNGKey(2),
         max_new=args.max_new, sampler=args.sampler,
         temperature=args.temperature,
         q_block=min(args.prompt_len, 512), **extras)
     tokens.block_until_ready()
-    dt = time.time() - t0
+    dt = monotonic() - t0
     n = args.batch * args.max_new
     print(f"sampler={args.sampler}: {n} tokens in {dt:.2f}s "
           f"({n/dt:.1f} tok/s incl. compile)")

@@ -441,6 +441,15 @@ class RunningDiagnostics:
         self._gate_cache = (self.rounds, g)
         return g
 
+    def cached(self) -> Diagnostics | None:
+        """The current round's full payload if (and only if) something
+        already paid for it — the free read the telemetry recorder uses
+        to put the ESS trajectory on round spans without ever adding an
+        O(rounds²) estimator call to the hot path."""
+        if self._cache is not None and self._cache[0] == self.rounds:
+            return self._cache[1]
+        return None
+
     def compute(self) -> Diagnostics:
         """Diagnostics over everything fed so far (cached per round)."""
         if self._cache is not None and self._cache[0] == self.rounds:

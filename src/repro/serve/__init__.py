@@ -25,6 +25,13 @@ split-R̂ + ESS diagnostics of :mod:`repro.pgm.diagnostics` by default
 (``retirement="legacy"`` selects the plain split-R̂ rule); every
 :class:`Result` carries the full :class:`Diagnostics` payload.
 
+Observability (:mod:`repro.serve.telemetry`): pass ``telemetry=
+Telemetry()`` to the engine to record the full query lifecycle as
+Chrome/Perfetto trace spans plus a Prometheus-exportable metrics
+registry — a no-op :class:`NullTelemetry` by default, and
+:meth:`PosteriorEngine.stats` snapshots the plan-cache/queue counters
+either way.  See ``docs/observability.md``.
+
 The engine (and with it jax) is imported lazily: the CLI must be able to
 apply ``--force-host-devices`` before the XLA backend initializes.
 """
@@ -34,6 +41,8 @@ from repro.serve.plan_cache import (
 from repro.serve.query import (
     MrfQuery, Query, QueryCancelled, QueryHandle, QueryStatus, Result,
     parse_evidence)
+from repro.serve.telemetry import (
+    MetricsRegistry, NullTelemetry, Telemetry, lifecycle_breakdown)
 
 # Diagnostics types route through the lazy table too: repro.pgm's
 # package __init__ imports jax, which must not initialize before the
@@ -54,13 +63,14 @@ _LAZY = {
 }
 
 __all__ = [
-    "AdmissionQueue", "CacheStats", "Diagnostics", "GroupRun", "MrfQuery",
-    "PlanCache", "PosteriorEngine", "Query", "QueryCancelled", "QueryHandle",
+    "AdmissionQueue", "CacheStats", "Diagnostics", "GroupRun",
+    "MetricsRegistry", "MrfQuery", "NullTelemetry", "PlanCache",
+    "PosteriorEngine", "Query", "QueryCancelled", "QueryHandle",
     "QueryStatus", "QueueStats", "RETIREMENT_MODES", "Result",
-    "RunningDiagnostics", "compute_diagnostics", "family_of",
-    "load_compiled", "make_mrf_round_runner", "make_round_runner",
-    "network_fingerprint", "parse_evidence", "persisted_plan_path",
-    "plan_key", "save_compiled", "split_rhat",
+    "RunningDiagnostics", "Telemetry", "compute_diagnostics", "family_of",
+    "lifecycle_breakdown", "load_compiled", "make_mrf_round_runner",
+    "make_round_runner", "network_fingerprint", "parse_evidence",
+    "persisted_plan_path", "plan_key", "save_compiled", "split_rhat",
 ]
 
 

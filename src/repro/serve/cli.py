@@ -50,6 +50,8 @@ import time
 
 import numpy as np
 
+from repro.serve.telemetry import Telemetry, lifecycle_breakdown, monotonic
+
 # NOTE: jax-touching imports (engine, queue) happen lazily inside the
 # functions below — importing the sampling stack initializes the XLA
 # backend, which must not happen before --force-host-devices takes
@@ -203,16 +205,19 @@ def measure_stream(engine, sync_engine, traffic: list[Query],
     sync_engine.answer_batch(list(seen.values()))
     queue.warm(traffic)
 
-    t0 = time.perf_counter()
+    t0 = monotonic()
     for q in traffic:
         sync_engine.answer(q)
-    sync_qps = len(traffic) / (time.perf_counter() - t0)
+    sync_qps = len(traffic) / (monotonic() - t0)
 
     if arrivals is None:
         rate = rate_qps if rate_qps > 0 else rate_multiplier * sync_qps
         arrivals = [i / rate for i in range(len(traffic))]
     else:
         rate = len(traffic) / max(arrivals[-1], 1e-9)
+    # events recorded so far belong to the off-the-clock warm-up; the
+    # latency breakdown must only see the measured replay's spans
+    ev0 = len(engine.telemetry.events()) if engine.telemetry.enabled else 0
     try:
         results, lat, wall = replay_stream(
             queue, traffic, arrivals, timeout=timeout)
@@ -235,6 +240,11 @@ def measure_stream(engine, sync_engine, traffic: list[Query],
         "backfilled": st.backfilled,
         "submitted": st.submitted,
     }
+    # with a live recorder the end-to-end latency decomposes into its
+    # lifecycle phases (wait / plan / service) straight from the spans
+    if engine.telemetry.enabled:
+        metrics["latency_breakdown"] = lifecycle_breakdown(
+            engine.telemetry.events()[ev0:])
     return metrics, results
 
 
@@ -249,10 +259,10 @@ def replay_stream(queue, traffic: list[Query], arrivals: list[float],
     submission order, per-query latency (completion − *scheduled*
     arrival), and the wall clock from start to last completion.
     """
-    t0 = time.perf_counter()
+    t0 = monotonic()
     handles = []
     for q, t_arr in zip(traffic, arrivals):
-        lag = t_arr - (time.perf_counter() - t0)
+        lag = t_arr - (monotonic() - t0)
         if lag > 0:
             time.sleep(lag)
         handles.append(queue.submit(q))
@@ -272,9 +282,9 @@ def ess_total(results) -> float:
 
 
 def _pass(engine, traffic: list[Query], label: str):
-    t0 = time.perf_counter()
+    t0 = monotonic()
     results = engine.answer_batch(traffic)
-    dt = time.perf_counter() - t0
+    dt = monotonic() - t0
     samples = sum(r.n_node_samples for r in results)
     bits = np.mean([r.bits_per_sample for r in results]) if results else 0.0
     conv = sum(r.converged for r in results)
@@ -328,6 +338,13 @@ def _run_stream(args, engine, sync_engine, traffic, arrivals):
     print(f"  {m['dispatched_groups']} groups "
           f"(avg {m['submitted']/max(m['dispatched_groups'],1):.1f} "
           f"queries), {m['backfilled']} backfilled into freed lanes")
+    bd = m.get("latency_breakdown")
+    if bd:
+        parts = " + ".join(
+            f"{bd[k]['p50_ms']:.0f} {k}" for k in ("wait", "plan", "service")
+            if k in bd)
+        print(f"  latency breakdown (p50 ms): {parts} "
+              f"vs {bd['e2e_p50_ms']:.0f} e2e")
 
 
 def main(argv=None) -> None:
@@ -376,6 +393,13 @@ def main(argv=None) -> None:
                          "(XLA_FLAGS recipe, applied before first jax use)")
     ap.add_argument("--show", type=int, default=3,
                     help="print marginals of the first N queries")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome/Perfetto trace-event JSON of the "
+                         "run here (enables the telemetry recorder)")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the engine.stats() snapshot (plan cache, "
+                         "queue, metrics registry) here as JSON; also "
+                         "enables the telemetry recorder")
     args = ap.parse_args(argv)
 
     if args.force_host_devices:
@@ -404,7 +428,11 @@ def main(argv=None) -> None:
         rhat_target=args.rhat, ess_target=args.ess_target,
         retirement=args.retirement, use_iu=not args.no_iu, mesh=mesh,
         plan_cache_dir=args.plan_cache_dir or None, seed=args.seed)
-    engine = PosteriorEngine(registry, **engine_kw)
+    # The recorder goes on the engine under measurement (the queued one
+    # in stream mode); the sync baseline engine stays on the shared
+    # no-op recorder so its rate is an honest telemetry-free number.
+    tel = Telemetry() if (args.trace_out or args.metrics_json) else None
+    engine = PosteriorEngine(registry, telemetry=tel, **engine_kw)
 
     arrivals = None
     if args.requests:
@@ -437,6 +465,16 @@ def main(argv=None) -> None:
         _run_stream(args, engine, sync_engine, traffic, arrivals)
     else:
         _run_batch(args, engine, registry, traffic)
+
+    if args.trace_out:
+        engine.telemetry.write_trace(args.trace_out)
+        print(f"trace written to {args.trace_out} "
+              f"({len(engine.telemetry.events())} events; load at "
+              f"https://ui.perfetto.dev)")
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(engine.stats(), f, indent=2)
+        print(f"metrics snapshot written to {args.metrics_json}")
 
 
 if __name__ == "__main__":

@@ -45,8 +45,8 @@ multi-device programs never collide.
 """
 from __future__ import annotations
 
+import itertools
 import math
-import time
 from dataclasses import dataclass
 from typing import Mapping
 
@@ -64,6 +64,8 @@ from repro.pgm.graph import BayesNet
 from repro.serve.families import family_of
 from repro.serve.plan_cache import PlanCache, plan_key
 from repro.serve.query import MrfQuery, Query, Result
+from repro.serve.telemetry import (
+    DEFAULT_COUNT_BINS, NULL, Telemetry, monotonic)
 from repro.sharding.specs import serve_lane_multiple
 
 # retirement rules: "rank" = rank-normalized split-R̂ + min-ESS gate
@@ -91,6 +93,7 @@ class GroupEntry:
     qvars: tuple[int, ...]
     handle: object | None = None
     result: Result | None = None
+    tel_tid: int = 0                  # telemetry track id (0 = untracked)
 
 
 @dataclass
@@ -112,7 +115,9 @@ class _Slot:
     j: int                      # slot index (lane block)
     cap: int                    # retirement round cap (budget/max_rounds)
     burn_left: int              # burn-in rounds still owed by this slot
-    t0: float                   # admission wall-clock (perf_counter)
+    t0: float                   # admission time (monotonic clock)
+    t_service0: float = 0.0     # sampling start (after plan/state init)
+    backfilled: bool = False    # admitted mid-flight into a freed slot
     rounds: int = 0             # post-burn-in rounds accumulated
     counts: np.ndarray | None = None       # (n, L) int64, lane-summed
     diags: dict[int, RunningDiagnostics] | None = None  # per query var
@@ -145,10 +150,36 @@ class GroupRun:
                  pattern: tuple[int, ...], entries: list[GroupEntry]):
         if not entries:
             raise ValueError("empty group")
-        t0 = time.perf_counter()
+        t0 = monotonic()
         self.engine = engine
         self.name, self.pattern = name, pattern
+        tel = self.tel = engine.telemetry
+        if tel.enabled:
+            self.tel_tid = tel.track(
+                f"group#{next(engine._group_seq)} {name}")
+            for e in entries:
+                if not e.tel_tid:
+                    e.tel_tid = tel.track(
+                        f"query#{next(engine._query_seq)} {name}")
+            tel.count("serve_groups_total",
+                      help="micro-batched groups started")
+        else:
+            self.tel_tid = 0
+        t_plan0 = monotonic()
         self.prog, self.runner, self.cache_hit = engine._plan(name, pattern)
+        t_plan1 = monotonic()
+        self._plan_span = (t_plan0, t_plan1)
+        if tel.enabled:
+            tel.complete("plan", self.tel_tid, t_plan0, t_plan1,
+                         cache_hit=self.cache_hit, network=name)
+            if self.cache_hit:
+                tel.count("serve_plan_cache_hits_total",
+                          help="plan-cache lookups served from memory")
+            else:
+                tel.count("serve_plan_cache_misses_total",
+                          help="plan-cache lookups that ran the compiler")
+                tel.observe("serve_compile_seconds", t_plan1 - t_plan0,
+                            help="compiler-chain seconds per plan miss")
         self.model = engine._network(name)
         self.family = family_of(self.model)
         self.c = engine.chains_per_query
@@ -185,6 +216,14 @@ class GroupRun:
             _Slot(entry=None, j=j, cap=0, burn_left=0, t0=t0, done=True)
             for j in range(nq, self.bt // self.c)
         ]
+        # service starts at plan-end: the per-query wait/plan/service
+        # spans share boundary timestamps, so they tile [submit, retire]
+        # exactly (state init is the head of the service phase)
+        for s in self.slots[:nq]:
+            s.t_service0 = t_plan1
+        if tel.enabled:
+            tel.complete("init", self.tel_tid, t_plan1, monotonic(),
+                         n_queries=nq, lanes=self.bt)
         self.bits = 0         # cumulative random bits, incl. burn-in (int64)
         self.sweeps_done = 0  # group sweeps so far, incl. burn-in
 
@@ -226,6 +265,9 @@ class GroupRun:
         retired this round (their ``result`` is filled in, or left None
         if cancelled)."""
         eng = self.engine
+        tel = self.tel
+        t_round0 = monotonic()
+        busy = sum(not s.done for s in self.slots)
         offsets = np.zeros(self.bt, np.int32)
         for s in self.slots:
             if not s.done and not s.burn_left:
@@ -270,8 +312,39 @@ class GroupRun:
                         d.legacy_rhat() for d in s.diags.values())
                     s.converged = s.rhat < s.rhat_target
             if s.converged or s.rounds >= s.cap:
-                self._retire(s)
+                reason = ("max-sweeps" if not s.converged
+                          else "rhat+ess" if eng.retirement == "rank"
+                          else "rhat")
+                self._retire(s, reason)
                 retired.append(s.entry)
+        if tel.enabled:
+            t_round1 = monotonic()
+            # ESS trajectory, read for free: only slots whose retirement
+            # check already paid for the full O(rounds²) payload this
+            # round have a cached Diagnostics — never computed here
+            ess = {}
+            for s in self.slots:
+                if s.entry is None or s.diags is None or s.burn_left:
+                    continue
+                ds = [d.cached() for d in s.diags.values()]
+                if ds and all(d is not None for d in ds):
+                    ess[f"slot{s.j}"] = round(
+                        min(d.min_ess for d in ds), 1)
+            now_busy = sum(not s.done for s in self.slots)
+            tel.complete(
+                "round", self.tel_tid, t_round0, t_round1,
+                sweeps=self.spr, lanes_busy=busy * self.c,
+                lanes_vacant=(len(self.slots) - busy) * self.c,
+                retired=len(retired), **({"ess": ess} if ess else {}))
+            tel.sample("lanes_busy", now_busy * self.c)
+            tel.count("serve_rounds_total", help="scheduling rounds run")
+            tel.count("serve_sweeps_total", self.spr,
+                      help="Gibbs sweeps run (all groups, incl. burn-in)")
+            tel.gauge_set("serve_lanes_busy", now_busy * self.c,
+                          help="chain lanes owned by live queries")
+            tel.gauge_set(
+                "serve_lanes_vacant", (len(self.slots) - now_busy) * self.c,
+                help="padded/retired lanes available for backfill")
         return retired
 
     def run_to_completion(self) -> None:
@@ -284,6 +357,8 @@ class GroupRun:
         for s in self.slots:
             if s.entry is entry and not s.done:
                 s.done = s.cancelled = True
+                if self.tel.enabled:
+                    self._record_query_spans(s, "cancel")
                 return True
         return False
 
@@ -303,10 +378,52 @@ class GroupRun:
         self.engine._key, init_key = jax.random.split(self.engine._key)
         x0 = self.family.init_states(init_key, self.prog, c, ev)
         self.x = self.x.at[slot.j * c:(slot.j + 1) * c].set(x0)
-        self.slots[slot.j] = self._fresh_slot(
-            entry, slot.j, time.perf_counter())
+        t_admit = monotonic()
+        fresh = self._fresh_slot(entry, slot.j, t_admit)
+        fresh.t_service0, fresh.backfilled = t_admit, True
+        self.slots[slot.j] = fresh
+        tel = self.tel
+        if tel.enabled:
+            if not entry.tel_tid:
+                entry.tel_tid = tel.track(
+                    f"query#{next(self.engine._query_seq)} {self.name}")
+            tel.instant("backfill", self.tel_tid, slot=slot.j)
+            tel.count("serve_backfilled_total",
+                      help="queries admitted into freed lanes mid-flight")
 
-    def _retire(self, s: _Slot) -> None:
+    def _record_query_spans(self, s: _Slot, reason: str) -> None:
+        """Per-query lifecycle spans, emitted once at retirement (or
+        cancellation) on the query's own trace track.  ``wait`` /
+        ``plan`` / ``service`` tile [submit, retire] by construction —
+        shared boundary timestamps — so the trace's per-query phase sum
+        always matches the end-to-end latency (the acceptance check)."""
+        tel, entry = self.tel, s.entry
+        now = monotonic()
+        tid = entry.tel_tid
+        t_submit = getattr(entry.handle, "t_submit", None)
+        if t_submit is None:
+            t_submit = s.t0
+        t_wait1 = s.t0 if s.backfilled else self._plan_span[0]
+        tel.complete("query", tid, t_submit, now,
+                     network=self.name, reason=reason)
+        tel.complete("wait", tid, t_submit, t_wait1)
+        if not s.backfilled:
+            tel.complete("plan", tid, *self._plan_span,
+                         cache_hit=self.cache_hit)
+        tel.complete("service", tid, s.t_service0, now,
+                     rounds=s.rounds, sweeps=self.sweeps_done)
+        tel.instant("retired", tid, reason=reason, rounds=s.rounds)
+        tel.count("serve_retired_total", help="queries retired, by reason",
+                  reason=reason)
+        tel.observe("serve_wait_seconds", max(t_wait1 - t_submit, 0.0),
+                    help="submit-to-admission wait per query")
+        tel.observe("serve_service_seconds", now - s.t_service0,
+                    help="sampling (rounds) seconds per query")
+        tel.observe("serve_rounds_per_query", max(s.rounds, 1),
+                    help="post-burn-in rounds a query consumed",
+                    bins=DEFAULT_COUNT_BINS)
+
+    def _retire(self, s: _Slot, reason: str = "max-sweeps") -> None:
         s.done = True
         eng, fam = self.engine, self.family
         marginals = {}
@@ -342,11 +459,13 @@ class GroupRun:
             rhat=float(s.rhat),
             converged=bool(s.converged),
             cache_hit=self.cache_hit,
-            wall_s=time.perf_counter() - s.t0,
+            wall_s=monotonic() - s.t0,
             bits_per_sample=(
                 self.bits / group_node_samples if group_node_samples else 0.0),
             diagnostics=diag,
         )
+        if self.tel.enabled:
+            self._record_query_spans(s, reason)
 
 
 class PosteriorEngine:
@@ -403,6 +522,7 @@ class PosteriorEngine:
         mesh=None,
         plan_cache_dir: str | None = None,
         pow2_group_shapes: bool = True,
+        telemetry: Telemetry | None = None,
         seed: int = 0,
     ):
         # "networks" kept for API continuity; values may be any model a
@@ -427,6 +547,12 @@ class PosteriorEngine:
         self.mesh = mesh
         self.plan_cache_dir = plan_cache_dir
         self.pow2_group_shapes = bool(pow2_group_shapes)
+        # telemetry is a no-op by default (the shared NULL recorder);
+        # pass Telemetry() to record traces/metrics — repro.serve.telemetry
+        self.telemetry = telemetry if telemetry is not None else NULL
+        self._group_seq = itertools.count()
+        self._query_seq = itertools.count()
+        self._attached_queue = None  # set by AdmissionQueue for stats()
         self._key = jax.random.PRNGKey(seed)
 
     # -- registry ----------------------------------------------------------
@@ -484,6 +610,29 @@ class PosteriorEngine:
         (prog, runner), hit = self.cache.get(
             self._plan_key(name, pattern), build)
         return prog, runner, hit
+
+    # -- observability -----------------------------------------------------
+    def stats(self) -> dict:
+        """One JSON-able snapshot of everything the engine already
+        counts: the plan cache's :class:`repro.serve.plan_cache.
+        CacheStats`, the attached admission queue's :class:`repro.serve.
+        queue.QueueStats` (``None`` when no queue owns this engine), and
+        — when a live recorder is installed — the telemetry metrics
+        snapshot.  Safe to call at any time, including before any
+        traffic (hit rate reads 0.0, not a division error)."""
+        s = self.cache.stats
+        out: dict = {
+            "plan_cache": {
+                "hits": s.hits, "misses": s.misses,
+                "evictions": s.evictions, "hit_rate": s.hit_rate,
+                "size": len(self.cache), "capacity": self.cache.capacity,
+            },
+            "queue": (None if self._attached_queue is None
+                      else self._attached_queue.stats.snapshot()),
+        }
+        if self.telemetry.enabled:
+            out["metrics"] = self.telemetry.metrics_snapshot()
+        return out
 
     # -- serving -----------------------------------------------------------
     def normalize(self, query: "Query | MrfQuery"):

@@ -16,11 +16,12 @@ from __future__ import annotations
 
 import enum
 import threading
-import time
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Mapping, Sequence
 
 import numpy as np
+
+from repro.serve.telemetry import monotonic
 
 if TYPE_CHECKING:  # jax-free import discipline: importing this module
     # must not trigger repro.pgm's package __init__ (and with it the
@@ -182,7 +183,9 @@ class QueryHandle:
 
     def __init__(self, query: Query, *, on_cancel=None):
         self.query = query
-        self.t_submit = time.perf_counter()
+        # monotonic, not wall-clock: deadline/wait math must never see a
+        # stepped clock (repro.serve.telemetry owns the clock choice)
+        self.t_submit = monotonic()
         self.t_done: float | None = None
         self._status = QueryStatus.QUEUED
         self._result: Result | None = None
@@ -243,6 +246,6 @@ class QueryHandle:
                 status, result = QueryStatus.CANCELLED, None
             self._status = status
             self._result, self._error = result, error
-            self.t_done = time.perf_counter()
+            self.t_done = monotonic()
             self._event.set()
             return status

@@ -32,12 +32,12 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 from collections import deque
 from dataclasses import dataclass, field
 
 from repro.serve.engine import GroupEntry, GroupRun, PosteriorEngine
 from repro.serve.query import MrfQuery, Query, QueryHandle, QueryStatus  # noqa: F401
+from repro.serve.telemetry import monotonic
 from repro.sharding.specs import serve_lane_multiple
 
 # Default size trigger, in queries, per dispatch group (scaled by the
@@ -61,6 +61,21 @@ class QueueStats:
     # (network, pattern, n_queries) of recent dispatched groups, in order
     dispatch_log: deque = field(
         default_factory=lambda: deque(maxlen=DISPATCH_LOG_MAXLEN))
+
+    def snapshot(self) -> dict:
+        """JSON-able dump (the dispatch ring becomes a plain list of
+        ``[network, n_queries]`` pairs — patterns can be kilo-int pixel
+        masks, too bulky for a stats snapshot)."""
+        return {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "failed": self.failed,
+            "cancelled_pending": self.cancelled_pending,
+            "cancelled_in_flight": self.cancelled_in_flight,
+            "dispatched_groups": self.dispatched_groups,
+            "backfilled": self.backfilled,
+            "dispatch_log": [[name, n] for name, _, n in self.dispatch_log],
+        }
 
 
 class AdmissionQueue:
@@ -98,6 +113,8 @@ class AdmissionQueue:
         self.max_group_queries = max(1, int(max_group_lanes) // c)
         self.backfill = bool(backfill)
         self.stats = QueueStats()
+        self.tel = engine.telemetry
+        engine._attached_queue = self  # PosteriorEngine.stats() snapshot
         self._buckets: dict[tuple, deque[GroupEntry]] = {}
         self._cv = threading.Condition()
         self._closed = False
@@ -115,13 +132,25 @@ class AdmissionQueue:
         _, ev, qvars, pattern = self.engine.normalize(query)
         handle = QueryHandle(query, on_cancel=self._cancel_pending)
         entry = GroupEntry(query, ev, qvars, handle=handle)
+        tel = self.tel
+        if tel.enabled:
+            entry.tel_tid = tel.track(
+                f"query#{next(self.engine._query_seq)} {query.network}")
         with self._cv:
             if self._closed:
                 raise RuntimeError("queue is closed")
             self._buckets.setdefault(
                 (query.network, pattern), deque()).append(entry)
             self.stats.submitted += 1
+            depth = sum(len(d) for d in self._buckets.values())
             self._cv.notify_all()
+        if tel.enabled:
+            tel.instant("submit", entry.tel_tid, network=query.network)
+            tel.count("serve_queries_submitted_total",
+                      help="queries admitted to the queue")
+            tel.gauge_set("serve_queue_depth", depth,
+                          help="queries waiting in dispatch buckets")
+            tel.sample("queue_depth", depth)
         return handle
 
     def pending(self) -> int:
@@ -160,7 +189,7 @@ class AdmissionQueue:
         """Make everything currently pending dispatchable now, ignoring
         deadlines (queries submitted *after* the flush keep theirs)."""
         with self._cv:
-            self._flush_before = time.perf_counter()
+            self._flush_before = monotonic()
             self._cv.notify_all()
 
     def close(self, *, drain: bool = True, timeout: float | None = None):
@@ -176,6 +205,7 @@ class AdmissionQueue:
                     for e in dq:
                         e.handle._finish(QueryStatus.CANCELLED)
                         self.stats.cancelled_pending += 1
+                        self._tel_done(e, "cancelled")
                 self._buckets.clear()
                 for e in self._inflight:
                     e.handle.cancel_requested = True
@@ -187,6 +217,21 @@ class AdmissionQueue:
 
     def __exit__(self, *exc) -> None:
         self.close(drain=exc == (None, None, None))
+
+    def _tel_done(self, e: GroupEntry, status: str) -> None:
+        """Delivery-side telemetry for one resolved entry: the finished
+        counter (by status), the end-to-end latency histogram, and a
+        ``deliver`` instant on the query's trace track."""
+        tel = self.tel
+        if not tel.enabled:
+            return
+        tel.count("serve_queries_finished_total",
+                  help="queries resolved, by final status", status=status)
+        h = e.handle
+        if h.t_done is not None:
+            tel.observe("serve_e2e_seconds", h.t_done - h.t_submit,
+                        help="submit-to-delivery seconds per query")
+        tel.instant("deliver", e.tel_tid, status=status)
 
     # -- cancellation ------------------------------------------------------
     def _cancel_pending(self, handle: QueryHandle) -> None:
@@ -203,6 +248,7 @@ class AdmissionQueue:
                             del self._buckets[key]
                         handle._finish(QueryStatus.CANCELLED)
                         self.stats.cancelled_pending += 1
+                        self._tel_done(e, "cancelled")
                         return
 
     # -- dispatcher --------------------------------------------------------
@@ -215,7 +261,7 @@ class AdmissionQueue:
     def _pop_ready_locked(self):
         """Oldest-arrival ripe bucket (FIFO across evidence patterns),
         popped up to the size trigger; None if nothing is ripe."""
-        now = time.perf_counter()
+        now = monotonic()
         ready = [(dq[0].handle.t_submit, key)
                  for key, dq in self._buckets.items() if self._ripe(dq, now)]
         if not ready:
@@ -232,13 +278,13 @@ class AdmissionQueue:
         if not self._buckets:
             return None
         oldest = min(dq[0].handle.t_submit for dq in self._buckets.values())
-        return max(0.0, oldest + self.max_wait_s - time.perf_counter())
+        return max(0.0, oldest + self.max_wait_s - monotonic())
 
     def _other_bucket_ripe(self, key: tuple) -> bool:
         """True if some *other* plan's bucket is already dispatchable —
         backfill yields to it so one hot pattern cannot starve the rest
         (FIFO fairness across evidence patterns)."""
-        now = time.perf_counter()
+        now = monotonic()
         with self._cv:
             return any(k != key and self._ripe(dq, now)
                        for k, dq in self._buckets.items())
@@ -253,6 +299,7 @@ class AdmissionQueue:
                 if e.handle.cancel_requested:
                     e.handle._finish(QueryStatus.CANCELLED)
                     self.stats.cancelled_pending += 1
+                    self._tel_done(e, "cancelled")
                     continue
                 out.append(e)
             if dq is not None and not dq:
@@ -292,6 +339,7 @@ class AdmissionQueue:
             for e in batch:
                 e.handle._finish(QueryStatus.FAILED, error=exc)
                 self.stats.failed += 1
+                self._tel_done(e, "failed")
             return
         self.stats.dispatched_groups += 1
         self.stats.dispatch_log.append((name, pattern, len(batch)))
@@ -303,6 +351,7 @@ class AdmissionQueue:
                             and run.cancel(s.entry)):
                         s.entry.handle._finish(QueryStatus.CANCELLED)
                         self.stats.cancelled_in_flight += 1
+                        self._tel_done(s.entry, "cancelled")
                 if not run.active:
                     break
                 for e in run.step():
@@ -311,8 +360,10 @@ class AdmissionQueue:
                     final = e.handle._finish(QueryStatus.DONE, result=e.result)
                     if final is QueryStatus.CANCELLED:
                         self.stats.cancelled_in_flight += 1
+                        self._tel_done(e, "cancelled")
                     elif final is not None:
                         self.stats.completed += 1
+                        self._tel_done(e, "completed")
                 if (self.backfill and run.active and run.free_slots()
                         and not self._other_bucket_ripe(key)):
                     for e in self._take_pending(key, run.free_slots()):
@@ -326,3 +377,4 @@ class AdmissionQueue:
                 if s.entry is not None and not s.entry.handle.done():
                     s.entry.handle._finish(QueryStatus.FAILED, error=exc)
                     self.stats.failed += 1
+                    self._tel_done(s.entry, "failed")
