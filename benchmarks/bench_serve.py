@@ -198,6 +198,121 @@ def run_mrf(name, *, h=16, w=16, n_queries=12, n_patterns=2, budget=1024,
     }
 
 
+def run_ising(name, *, side=16, beta=0.35, n_queries=12, n_patterns=2,
+              budget=1024, chains=8, mesh=None, report=print):
+    """Sparse-Ising serving benchmark: cold + warm qps for spin-clamp
+    traffic over a 2D-torus ferromagnet, plus the queued-vs-
+    ``answer_batch`` identity bit — the sparse-graph twin of
+    :func:`run_mrf`."""
+    from repro.pgm.networks import ising_torus
+    from repro.serve.cli import synthetic_ising_traffic
+    from repro.serve.engine import PosteriorEngine
+    from repro.serve.queue import AdmissionQueue
+
+    network = "ising_torus"
+    model = ising_torus(side, beta=beta)
+    traffic = synthetic_ising_traffic(
+        model, network, n_queries, n_patterns, np.random.default_rng(0),
+        budget)
+    kw = dict(chains_per_query=chains, burn_in=32, mesh=mesh)
+    engine = PosteriorEngine({network: model}, **kw)
+    cold_dt, cold_samples, cold_results = _pass(engine, traffic)
+    warm_dt, warm_samples, results = _pass(engine, traffic)
+    conv = sum(r.converged for r in results)
+    bits = float(np.mean([r.bits_per_sample for r in results]))
+    s = engine.cache.stats
+
+    # identity: same traffic, same seeds -> queued == caller-batched
+    eng_a = PosteriorEngine({network: model}, **kw, seed=7)
+    ref = eng_a.answer_batch(traffic)
+    eng_b = PosteriorEngine({network: model}, **kw, seed=7)
+    queue_b = AdmissionQueue(eng_b, max_wait_ms=3_600_000.0,
+                             max_group_lanes=n_queries * chains)
+    try:
+        handles = [queue_b.submit(q) for q in traffic]
+        queue_b.flush()
+        streamed = [hd.result(timeout=600) for hd in handles]
+    finally:
+        queue_b.close()
+    identical = all(_identical(a, b) for a, b in zip(ref, streamed))
+
+    report(row(
+        f"serve_{name}_cold", cold_dt / n_queries * 1e6,
+        f"qps={n_queries/cold_dt:.2f};MSample/s={cold_samples/cold_dt/1e6:.3f}"))
+    report(row(
+        f"serve_{name}_warm", warm_dt / n_queries * 1e6,
+        f"qps={n_queries/warm_dt:.2f};MSample/s={warm_samples/warm_dt/1e6:.3f};"
+        f"ESS/s={_ess(results)/warm_dt:.1f};"
+        f"speedup={cold_dt/warm_dt:.1f}x;hit_rate={s.hit_rate:.2f};"
+        f"converged={conv}/{n_queries};identical={identical}"))
+    return {
+        "name": name,
+        "network": network,
+        "side": side,
+        "n_queries": n_queries,
+        "retirement": engine.retirement,
+        "cold": {"wall_s": cold_dt, "queries_per_s": n_queries / cold_dt,
+                 "msample_per_s": cold_samples / cold_dt / 1e6,
+                 "ess_per_s": _ess(cold_results) / cold_dt},
+        "warm": {"wall_s": warm_dt, "queries_per_s": n_queries / warm_dt,
+                 "msample_per_s": warm_samples / warm_dt / 1e6,
+                 "ess_per_s": _ess(results) / warm_dt},
+        "bits_per_sample": bits,
+        "cache_hit_rate": s.hit_rate,
+        "converged": conv,
+        "identical": bool(identical),
+    }
+
+
+def run_million_spin(*, side=1024, beta=0.3, chains=2, sweeps=4,
+                     report=print):
+    """Million-spin capacity datapoint (weekly CI, not the push gate):
+    compile a ``side x side`` torus (~``side**2`` spins) through the
+    sparse chain — parallel MIS coloring + degree-bucketed plans — and
+    measure compile wall plus steady-state spin-updates/s of the fused
+    sweep.  Returns a JSON-able dict; correctness is covered by the
+    tier-1 Onsager test, this row tracks *scale*."""
+    import time as _time
+
+    import jax
+
+    from repro.pgm.networks import ising_torus
+    from repro.pgm.sparse_compile import (
+        compile_factor_graph, init_fg_states, make_fg_sweep)
+
+    model = ising_torus(side, beta=beta)
+    t0 = _time.perf_counter()
+    prog = compile_factor_graph(model)
+    compile_s = _time.perf_counter() - t0
+
+    sweep = make_fg_sweep(prog)
+    key = jax.random.PRNGKey(0)
+    x = init_fg_states(key, prog, chains)
+    # one warm-up sweep pays the jit; then time the steady state
+    x, _ = sweep(key, x)
+    x.block_until_ready()
+    t0 = _time.perf_counter()
+    for i in range(sweeps):
+        key, sub = jax.random.split(key)
+        x, _ = sweep(sub, x)
+    x.block_until_ready()
+    sweep_s = (_time.perf_counter() - t0) / sweeps
+    updates_per_s = chains * model.n / sweep_s
+    report(row("serve_million_spin_sweep", sweep_s * 1e6,
+               f"spins={model.n};colors={prog.n_colors};chains={chains};"
+               f"compile_s={compile_s:.1f};"
+               f"Mupdates/s={updates_per_s/1e6:.2f}"))
+    return {
+        "side": side,
+        "n_spins": int(model.n),
+        "n_colors": int(prog.n_colors),
+        "chains": chains,
+        "compile_s": compile_s,
+        "sweep_s": sweep_s,
+        "mupdates_per_s": updates_per_s / 1e6,
+    }
+
+
 def run_stream(name, network, *, n_queries=32, n_patterns=2, budget=2048,
                chains=16, rate_qps=0.0, max_wait_ms=250.0, mesh=None,
                trace_out="", metrics_out="", report=print):
@@ -411,11 +526,14 @@ def main(report=print, *, smoke=False, stream=False, mesh_shape=None,
         runs = [run("asia_8n", "asia", n_queries=8, budget=512, chains=8,
                     **kw),
                 run_mrf("mrf_12x12", h=12, w=12, n_queries=8, budget=256,
-                        **kw)]
+                        **kw),
+                run_ising("ising_16", side=16, n_queries=8, budget=256,
+                          **kw)]
     else:
         runs = [run("asia_8n", "asia", **kw),
                 run("child_scale_20n", "child_scale", n_queries=16, **kw),
-                run_mrf("mrf_24x24", h=24, w=24, n_queries=16, **kw)]
+                run_mrf("mrf_24x24", h=24, w=24, n_queries=16, **kw),
+                run_ising("ising_32", side=32, n_queries=12, **kw)]
     # the retirement mode the runs actually used (each run records its
     # engine's) — the regression gate refuses to diff reports across
     # different modes, so a half-converted report must fail loudly here
@@ -495,6 +613,11 @@ def _cli(argv=None):
     ap.add_argument("--scaling", default="",
                     help="comma-separated forced-host device counts, "
                          "e.g. 1,2,4,8 — runs one subprocess per count")
+    ap.add_argument("--million-spin", action="store_true",
+                    help="add the million-spin torus capacity datapoint "
+                         "(compile wall + spin-updates/s; weekly CI)")
+    ap.add_argument("--million-spin-side", type=int, default=1024,
+                    help="torus side for --million-spin (side**2 spins)")
     ap.add_argument("--force-host-devices", type=int, default=0)
     ap.add_argument("--trace-out", default="",
                     help="with --stream: write the queued engine's "
@@ -522,6 +645,8 @@ def _cli(argv=None):
         with open(args.diagnostics_json, "w") as f:
             json.dump(diag, f, indent=2)
         print(f"# wrote {args.diagnostics_json}")
+    if args.million_spin:
+        rep["million_spin"] = run_million_spin(side=args.million_spin_side)
     if args.scaling:
         counts = [int(s) for s in args.scaling.split(",") if s]
         # scaling points are always smoke-sized: one datapoint per device

@@ -1,30 +1,42 @@
 """PGM substrate: model IR, coloring, compiler chain, Gibbs engines."""
-from repro.pgm.coloring import checkerboard, color_bayesnet, dsatur, verify_coloring
+from repro.pgm.coloring import (
+    checkerboard, color_bayesnet, color_graph, dsatur, verify_coloring)
 from repro.pgm.compile import (
-    BNSweepStats, CompiledBN, compile_bayesnet, init_states, make_sweep,
-    run_gibbs, sum_sweep_stats)
+    BNSweepStats, CompiledBN, compile_bayesnet, init_states, ky_weights,
+    make_sweep, run_gibbs, sum_sweep_stats)
 from repro.pgm.diagnostics import (
     Diagnostics, RunningDiagnostics, compute_diagnostics, ess_bulk,
     ess_tail, folded_rank_rhat, rank_normalize, rank_rhat, split_rhat)
 from repro.pgm.gibbs import (
     checkerboard_halfstep, clamp_labels, init_labels, mrf_gibbs)
-from repro.pgm.graph import BayesNet, MRFGrid
+from repro.pgm.graph import BayesNet, FactorGraph, IsingModel, MRFGrid
 from repro.pgm.mesh_gibbs import (
     make_mesh_gibbs_step, pad_mrf, shard_clamp, shard_mrf)
+from repro.pgm.metropolis import MHStats, fg_metropolis, mrf_metropolis
 from repro.pgm.mrf_compile import (
-    CompiledMRF, compile_mrf, init_mrf_states, mask_of)
+    CompiledMRF, compile_mrf, init_mrf_states, mask_of, mrf_factor_graph,
+    sparse_plan)
+from repro.pgm.sparse_compile import (
+    CompiledFactorGraph, DegreeBucket, SparsePlan, compile_factor_graph,
+    init_fg_states, make_fg_sweep, run_fg_gibbs, site_weights_sparse)
 from repro.pgm import networks
 
 __all__ = [
-    "checkerboard", "color_bayesnet", "dsatur", "verify_coloring",
+    "checkerboard", "color_bayesnet", "color_graph", "dsatur",
+    "verify_coloring",
     "BNSweepStats", "CompiledBN", "compile_bayesnet", "init_states",
-    "make_sweep", "run_gibbs", "sum_sweep_stats",
+    "ky_weights", "make_sweep", "run_gibbs", "sum_sweep_stats",
     "Diagnostics", "RunningDiagnostics", "compute_diagnostics",
     "ess_bulk", "ess_tail", "folded_rank_rhat", "rank_normalize",
     "rank_rhat", "split_rhat",
     "checkerboard_halfstep", "clamp_labels", "init_labels", "mrf_gibbs",
     "CompiledMRF", "compile_mrf", "init_mrf_states", "mask_of",
-    "BayesNet", "MRFGrid", "make_mesh_gibbs_step", "pad_mrf",
-    "shard_clamp", "shard_mrf",
+    "mrf_factor_graph", "sparse_plan",
+    "CompiledFactorGraph", "DegreeBucket", "SparsePlan",
+    "compile_factor_graph", "init_fg_states", "make_fg_sweep",
+    "run_fg_gibbs", "site_weights_sparse",
+    "MHStats", "fg_metropolis", "mrf_metropolis",
+    "BayesNet", "FactorGraph", "IsingModel", "MRFGrid",
+    "make_mesh_gibbs_step", "pad_mrf", "shard_clamp", "shard_mrf",
     "networks",
 ]

@@ -2,9 +2,13 @@
 
 Splits model variables into conditionally-independent sets ("colors")
 that can be updated in parallel.  MRF lattices get the closed-form
-2-color checkerboard (block Gibbs); irregular models (Bayesian networks)
-are colored with the DSatur heuristic on the moralized graph — the exact
-combination the paper uses (aGrUM moralization + NetworkX DSatur [13]).
+2-color checkerboard (block Gibbs); irregular models are colored on
+their interaction graph — DSatur for Bayesian networks and small sparse
+graphs (the exact combination the paper uses: aGrUM moralization +
+NetworkX DSatur [13]), and an iterated maximal-independent-set pass
+(Luby-style) for huge sparse graphs where DSatur's sequential scan is
+the bottleneck.  :func:`color_graph` is the one entry point the sparse
+compile layer calls; both methods guarantee ≤ maxdeg + 1 colors.
 """
 from __future__ import annotations
 
@@ -12,6 +16,12 @@ import networkx as nx
 import numpy as np
 
 from repro.pgm.graph import BayesNet
+
+# DSatur walks nodes one at a time with a heap of saturation degrees —
+# great colorings, serial time.  Past this many nodes the iterated-MIS
+# pass wins by orders of magnitude and the (slightly) higher color count
+# costs only a few extra sweep phases.
+_PARALLEL_THRESHOLD = 20_000
 
 
 def checkerboard(h: int, w: int) -> np.ndarray:
@@ -24,14 +34,111 @@ def dsatur(graph: nx.Graph) -> dict[int, int]:
     return nx.coloring.greedy_color(graph, strategy="saturation_largest_first")
 
 
+def _groups_of(coloring: dict[int, int]) -> list[np.ndarray]:
+    """node -> color mapping to sorted per-color id arrays."""
+    if not coloring:
+        return []
+    n_colors = max(coloring.values()) + 1
+    return [
+        np.array(sorted(v for v, c in coloring.items() if c == col), np.int32)
+        for col in range(n_colors)
+    ]
+
+
+def _mis_groups(n_vars: int, src: np.ndarray, dst: np.ndarray,
+                active: np.ndarray) -> list[np.ndarray]:
+    """Iterated-MIS coloring on (possibly masked) nodes, vectorized.
+
+    Each outer round extracts one maximal independent set via Luby's
+    algorithm (random priorities; a node wins when it beats every active
+    neighbour) and assigns it the next color.  Any node left uncolored
+    after a round had at least one neighbour colored in it, so the loop
+    runs at most maxdeg + 1 rounds — the same bound greedy coloring has.
+    ``src``/``dst`` must list each undirected edge in both directions.
+    """
+    rng = np.random.default_rng(0)  # deterministic plans: fixed priorities
+    p = rng.permutation(n_vars).astype(np.int64) + 1  # 0 = "no neighbour"
+    active = active.copy()
+    groups: list[np.ndarray] = []
+    while active.any():
+        in_mis = np.zeros(n_vars, bool)
+        cand = active.copy()
+        live = cand[src] & cand[dst]
+        s, d = src[live], dst[live]
+        while cand.any():
+            best = np.zeros(n_vars, np.int64)
+            np.maximum.at(best, s, np.where(cand[d], p[d], 0))
+            winners = cand & (p > best)
+            if not winners.any():  # isolated remnants all win at once
+                winners = cand.copy()
+            in_mis |= winners
+            # winners and their neighbours leave this round's candidacy
+            out = winners.copy()
+            np.logical_or.at(out, s, winners[d])
+            cand &= ~out
+            keep = cand[s] & cand[d]
+            s, d = s[keep], d[keep]
+        groups.append(np.flatnonzero(in_mis).astype(np.int32))
+        active &= ~in_mis
+    return groups
+
+
+def color_graph(n_vars: int, edges: np.ndarray, *,
+                skip: frozenset[int] | set[int] = frozenset(),
+                method: str = "auto",
+                validate: bool = False) -> list[np.ndarray]:
+    """Color an undirected graph given as an (E, 2) edge list.
+
+    Returns per-color sorted arrays of node ids covering every node not
+    in ``skip`` (clamped nodes are never resampled, so they need no
+    color — but edges into them are the caller's business, not ours: the
+    compile layer keeps them as energy contributions).
+
+    ``method``: ``"dsatur"`` (best color counts, serial),
+    ``"parallel"`` (iterated MIS, for huge graphs), or ``"auto"``
+    (DSatur below ~20k nodes).  ``validate=True`` re-checks the
+    independence invariant with :func:`verify_coloring` — off by
+    default so the serving hot path doesn't pay O(E) per compile.
+    """
+    edges = np.asarray(edges, np.int64).reshape(-1, 2)
+    active = np.ones(n_vars, bool)
+    if skip:
+        active[np.fromiter(skip, np.int64, len(skip))] = False
+    if method == "auto":
+        method = "parallel" if n_vars > _PARALLEL_THRESHOLD else "dsatur"
+    if method == "dsatur":
+        g = nx.Graph()
+        g.add_nodes_from(np.flatnonzero(active).tolist())
+        keep = active[edges[:, 0]] & active[edges[:, 1]]
+        g.add_edges_from(edges[keep].tolist())
+        groups = _groups_of(dsatur(g))
+    elif method == "parallel":
+        src = np.concatenate([edges[:, 0], edges[:, 1]])
+        dst = np.concatenate([edges[:, 1], edges[:, 0]])
+        groups = _mis_groups(n_vars, src, dst, active)
+        groups = [g for g in groups if len(g)]
+    else:
+        raise ValueError(f"unknown coloring method {method!r}")
+    if validate:
+        g = nx.Graph()
+        g.add_nodes_from(np.flatnonzero(active).tolist())
+        keep = active[edges[:, 0]] & active[edges[:, 1]]
+        g.add_edges_from(edges[keep].tolist())
+        if not verify_coloring(g, groups):
+            raise AssertionError("coloring violates independence")
+    return groups
+
+
 def color_bayesnet(
-    bn: BayesNet, skip: frozenset[int] | set[int] = frozenset()
+    bn: BayesNet, skip: frozenset[int] | set[int] = frozenset(), *,
+    validate: bool = False
 ) -> list[np.ndarray]:
     """Color the moral graph; returns per-color arrays of node ids.
 
-    Invariant (checked): no two nodes in one color share an edge in the
-    moral graph, i.e. they are conditionally independent given the rest —
-    safe to Gibbs-update in parallel.
+    Invariant (checked under ``validate=True`` via
+    :func:`verify_coloring`): no two nodes in one color share an edge in
+    the moral graph, i.e. they are conditionally independent given the
+    rest — safe to Gibbs-update in parallel.
 
     ``skip``: evidence-clamped nodes.  They are excluded from the coloring
     entirely (they never get resampled), but the marriage edges they induce
@@ -44,19 +151,9 @@ def color_bayesnet(
     g = bn.moralized()
     if skip:
         g = g.subgraph([v for v in g.nodes if v not in skip])
-    coloring = dsatur(g)
-    if not coloring:
-        return []
-    n_colors = max(coloring.values()) + 1
-    groups = [
-        np.array(sorted(v for v, c in coloring.items() if c == col), np.int32)
-        for col in range(n_colors)
-    ]
-    for grp in groups:  # validate the independence invariant
-        s = set(grp.tolist())
-        for v in grp:
-            if s & set(g.neighbors(int(v))):
-                raise AssertionError("coloring violates independence")
+    groups = _groups_of(dsatur(g))
+    if validate and not verify_coloring(g, groups):
+        raise AssertionError("coloring violates independence")
     return groups
 
 

@@ -205,6 +205,25 @@ def sum_sweep_stats(stats: "BNSweepStats") -> "BNSweepStats":
     )
 
 
+def ky_weights(logw: jax.Array, card: jax.Array, k: int,
+               use_iu: bool) -> jax.Array:
+    """Shared sampler tail: masked log-weights → int32 KY weights.
+
+    ``logw``: (..., G, L) unnormalized log-probabilities; ``card``: (G,)
+    per-variable cardinalities (labels past them are floored to an
+    impossible weight).  This is the IU-exp → fixed-point stage every
+    compiled family (BN gather plans, dense grids lowered to sparse
+    plans, arbitrary factor graphs) funnels through — max-subtract,
+    LUT exp, ``floor(y * (2^k - 1))`` — so the KY front-end sees one
+    weight format regardless of how the energies were gathered.
+    """
+    ls = jnp.arange(logw.shape[-1], dtype=jnp.int32)
+    logw = jnp.where(ls < card[..., None], logw, _NEG * 4)
+    z = logw - jnp.max(logw, axis=-1, keepdims=True)
+    y = _EXP(z) if use_iu else jnp.exp(z)
+    return jnp.floor(y * (2.0 ** k - 1.0)).astype(jnp.int32)
+
+
 def _color_update(
     key: jax.Array,
     x: jax.Array,               # (B, n) int32 current states
@@ -236,10 +255,7 @@ def _color_update(
     logw = logw + jnp.sum(jnp.take(log_cpt, ch_idx, mode="clip"), axis=-2)
 
     # --- IU-exp → fixed point → KY sample ---------------------------------
-    logw = jnp.where(ls[None, None] < card[None, :, None], logw, _NEG * 4)
-    z = logw - jnp.max(logw, axis=-1, keepdims=True)
-    y = _EXP(z) if use_iu else jnp.exp(z)
-    wts = jnp.floor(y * (2.0 ** k - 1.0)).astype(jnp.int32)
+    wts = ky_weights(logw, card, k, use_iu)
     res = ky_sample(key, wts.reshape((-1, max_card)))
     new = res.sample.reshape(logw.shape[:-1]).astype(jnp.int32)  # (B, G)
     x = x.at[:, nodes].set(new)

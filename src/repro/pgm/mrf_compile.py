@@ -13,6 +13,15 @@ There is no gather-plan stage here — the lattice's "plan" is the
 checkerboard itself (2 colors, fixed neighbourhood), so compiling is
 just freezing the (grid, mask, precision) triple.  The per-round runner
 lives in :mod:`repro.serve.families` next to its BN sibling.
+
+:func:`sparse_plan` lowers a compiled grid onto the unified sparse
+layer (:mod:`repro.pgm.sparse_compile`): checkerboard parity becomes a
+2-color partition, the 4-neighbourhood becomes one degree-4 bucket per
+color, and the per-site neighbour order is pinned to the dense kernel's
+up/down/left/right accumulation so the resulting KY weights are bitwise
+identical to :func:`repro.pgm.gibbs.site_weights` — the regression that
+lets the dense path remain the serving default while the sparse path
+generalizes it.
 """
 from __future__ import annotations
 
@@ -23,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fixedpoint import DEFAULT_K
-from repro.pgm.graph import MRFGrid
+from repro.pgm.graph import FactorGraph, MRFGrid
 
 
 @dataclass(frozen=True, eq=False)
@@ -112,3 +121,71 @@ def init_mrf_states(
         flat = flat.at[:, jnp.asarray(prog.observed, jnp.int32)].set(ev)
         labels = flat.reshape(n_lanes, h, w)
     return labels
+
+
+# ---------------------------------------------------------------------------
+# lowering onto the unified sparse layer
+# ---------------------------------------------------------------------------
+
+def mrf_factor_graph(mrf: MRFGrid) -> FactorGraph:
+    """Free-boundary lattice as a :class:`FactorGraph` (right+down edges,
+    every edge sharing the grid's one (L, L) pairwise table)."""
+    h, w = mrf.shape
+    sites = np.arange(h * w).reshape(h, w)
+    right = np.stack([sites[:, :-1], sites[:, 1:]], axis=-1).reshape(-1, 2)
+    down = np.stack([sites[:-1, :], sites[1:, :]], axis=-1).reshape(-1, 2)
+    edges = np.concatenate([right, down])
+    pair = np.broadcast_to(
+        np.asarray(mrf.pairwise, np.float32)[None], (len(edges),) + mrf.pairwise.shape)
+    return FactorGraph(
+        card=np.full(h * w, mrf.n_labels, np.int32),
+        unary=np.asarray(mrf.unary, np.float32).reshape(h * w, mrf.n_labels),
+        edges=edges, pair=pair)
+
+
+def sparse_plan(prog: CompiledMRF):
+    """Lower a compiled dense grid to a degenerate 2-color sparse plan.
+
+    The lowering pins two things the default sparse path would choose
+    differently, to stay bitwise-equal to the dense kernel:
+
+    * the **table bank** is the single shared pairwise table (the dense
+      kernel applies ``pw[l, m]`` in all four directions — it relies on
+      the symmetric tables Potts/truncated-linear produce), not a
+      per-direction dedup;
+    * the **per-site neighbour order** is up, down, left, right — the
+      dense kernel's accumulation order (:func:`repro.pgm.gibbs
+      .neighbor_pair_energy`), preserved through the packer's stable
+      sort, so float addition associates identically.
+
+    Returns a :class:`repro.pgm.sparse_compile.CompiledFactorGraph` over
+    the same clamp pattern and precision.
+    """
+    from repro.pgm.sparse_compile import compile_factor_graph
+
+    h, w = prog.shape
+    sites = np.arange(h * w).reshape(h, w)
+    # directed entries in the dense kernel's per-site order: the stable
+    # sort inside the packer keeps up-entries before down- before left-
+    # before right- for every source site.
+    up = (sites[1:, :], sites[:-1, :])
+    down = (sites[:-1, :], sites[1:, :])
+    left = (sites[:, 1:], sites[:, :-1])
+    right = (sites[:, :-1], sites[:, 1:])
+    dir_src = np.concatenate([s.ravel() for s, _ in (up, down, left, right)])
+    dir_dst = np.concatenate([d.ravel() for _, d in (up, down, left, right)])
+    dir_tab = np.zeros(len(dir_src), np.int64)
+    bank = np.asarray(prog.mrf.pairwise, np.float32)[None]
+
+    parity = (sites // w + sites % w) % 2
+    free = np.ones(h * w, bool)
+    if prog.observed:
+        free[list(prog.observed)] = False
+    groups = [
+        np.flatnonzero(free & (parity.ravel() == c)).astype(np.int32)
+        for c in (0, 1)
+    ]
+    groups = [g for g in groups if len(g)]
+    return compile_factor_graph(
+        mrf_factor_graph(prog.mrf), k=prog.k, observed=prog.observed,
+        directed=(dir_src, dir_dst, dir_tab, bank), groups=groups)

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.pgm.graph import BayesNet, MRFGrid
+from repro.pgm.graph import BayesNet, IsingModel, MRFGrid
 
 _EPS = 1e-3  # determinism softening for ergodic Gibbs
 
@@ -138,3 +138,47 @@ def art_task(h: int = 288, w: int = 384, *, n_labels: int = 16, beta: float = 1.
     unary = (np.abs(obs[..., None] - np.arange(n_labels)[None, None, :]) ** 2
              / (2 * noise ** 2)).astype(np.float32)
     return MRFGrid.truncated_linear(unary, beta, tau), truth
+
+
+# ---------------------------------------------------------------------------
+# Sparse Ising workloads (the sparse-Ising-machine family)
+# ---------------------------------------------------------------------------
+
+def ising_torus(side: int, *, beta: float = 0.4, j: float = 1.0,
+                h: float = 0.0) -> IsingModel:
+    """Ferromagnet on a ``side × side`` periodic lattice.
+
+    The inverse temperature is folded into the couplings/fields
+    (``J = beta * j``, ``h_v = beta * h``), so the model samples from
+    ``P(s) ∝ exp(beta * (j Σ s_i s_j + h Σ s_v))``.  At ``h = 0`` the
+    infinite-lattice magnetization is Onsager's
+    ``M = (1 - sinh(2βj)^-4)^(1/8)`` for ``βj > βc ≈ 0.4407`` — the
+    exactness oracle the sparse-path tests check against.
+    """
+    if side < 3:
+        # side == 2 would duplicate edges (right and left neighbours
+        # coincide under wraparound); the torus needs side >= 3.
+        raise ValueError("ising_torus needs side >= 3")
+    idx = np.arange(side * side).reshape(side, side)
+    right = np.stack([idx, np.roll(idx, -1, axis=1)], axis=-1)
+    down = np.stack([idx, np.roll(idx, -1, axis=0)], axis=-1)
+    edges = np.concatenate([right.reshape(-1, 2), down.reshape(-1, 2)])
+    return IsingModel(n=side * side, edges=edges,
+                      j=np.full(len(edges), beta * j),
+                      h=np.full(side * side, beta * h))
+
+
+def random_sparse_ising(n: int, *, avg_degree: float = 3.0, beta: float = 0.3,
+                        seed: int = 0, field: float = 0.1) -> IsingModel:
+    """Random sparse spin glass: ~``n * avg_degree / 2`` unique edges,
+    Gaussian couplings and fields scaled by ``beta`` — the irregular-
+    graph workload that exercises degree-bucketed plans."""
+    rng = np.random.default_rng(seed)
+    m = int(n * avg_degree / 2)
+    pairs = rng.integers(0, n, size=(int(m * 1.5) + 8, 2))
+    pairs = pairs[pairs[:, 0] != pairs[:, 1]]
+    pairs = np.sort(pairs, axis=1)
+    pairs = np.unique(pairs, axis=0)[:m]
+    return IsingModel(n=n, edges=pairs,
+                      j=beta * rng.normal(1.0, 0.5, len(pairs)),
+                      h=beta * field * rng.normal(0.0, 1.0, n))

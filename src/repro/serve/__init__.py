@@ -11,10 +11,11 @@ independent chains onto its cores (paper §III).  With a serve mesh the
 lane axis additionally shards across devices
 (:func:`repro.launch.mesh.make_serve_mesh`).
 
-Both of the paper's PGM families are served (:mod:`repro.serve.
-families`): :class:`Query` clamps Bayesian-network *nodes*,
-:class:`MrfQuery` clamps MRF grid *pixels* (scribble masks for
-interactive segmentation) — same engine, same plan cache, same queue.
+Three PGM families are served (:mod:`repro.serve.families`):
+:class:`Query` clamps Bayesian-network *nodes*, :class:`MrfQuery`
+clamps MRF grid *pixels* (scribble masks for interactive segmentation),
+and :class:`IsingQuery` clamps *spins* of a sparse Ising model /
+factor graph — same engine, same plan cache, same queue.
 
 Streaming traffic goes through :class:`AdmissionQueue`
 (:mod:`repro.serve.queue`): per-plan buckets dispatch on a deadline or
@@ -36,11 +37,11 @@ The engine (and with it jax) is imported lazily: the CLI must be able to
 apply ``--force-host-devices`` before the XLA backend initializes.
 """
 from repro.serve.plan_cache import (
-    CacheStats, PlanCache, load_compiled, network_fingerprint,
-    persisted_plan_path, plan_key, save_compiled)
+    CacheStats, PlanCache, graph_fingerprint, load_compiled,
+    network_fingerprint, persisted_plan_path, plan_key, save_compiled)
 from repro.serve.query import (
-    MrfQuery, Query, QueryCancelled, QueryHandle, QueryStatus, Result,
-    parse_evidence)
+    IsingQuery, MrfQuery, Query, QueryCancelled, QueryHandle, QueryStatus,
+    Result, parse_evidence)
 from repro.serve.telemetry import (
     MetricsRegistry, NullTelemetry, Telemetry, lifecycle_breakdown)
 
@@ -57,6 +58,8 @@ _LAZY = {
     "split_rhat": "repro.serve.engine",
     "make_round_runner": "repro.serve.families",
     "make_mrf_round_runner": "repro.serve.families",
+    "make_fg_round_runner": "repro.serve.families",
+    "IsingFamily": "repro.serve.families",
     "family_of": "repro.serve.families",
     "AdmissionQueue": "repro.serve.queue",
     "QueueStats": "repro.serve.queue",
@@ -64,13 +67,15 @@ _LAZY = {
 
 __all__ = [
     "AdmissionQueue", "CacheStats", "Diagnostics", "GroupRun",
-    "MetricsRegistry", "MrfQuery", "NullTelemetry", "PlanCache",
-    "PosteriorEngine", "Query", "QueryCancelled", "QueryHandle",
-    "QueryStatus", "QueueStats", "RETIREMENT_MODES", "Result",
-    "RunningDiagnostics", "Telemetry", "compute_diagnostics", "family_of",
-    "lifecycle_breakdown", "load_compiled", "make_mrf_round_runner",
-    "make_round_runner", "network_fingerprint", "parse_evidence",
-    "persisted_plan_path", "plan_key", "save_compiled", "split_rhat",
+    "IsingFamily", "IsingQuery", "MetricsRegistry", "MrfQuery",
+    "NullTelemetry", "PlanCache", "PosteriorEngine", "Query",
+    "QueryCancelled", "QueryHandle", "QueryStatus", "QueueStats",
+    "RETIREMENT_MODES", "Result", "RunningDiagnostics", "Telemetry",
+    "compute_diagnostics", "family_of", "graph_fingerprint",
+    "lifecycle_breakdown", "load_compiled", "make_fg_round_runner",
+    "make_mrf_round_runner", "make_round_runner", "network_fingerprint",
+    "parse_evidence", "persisted_plan_path", "plan_key", "save_compiled",
+    "split_rhat",
 ]
 
 

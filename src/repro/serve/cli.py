@@ -23,9 +23,12 @@ Request-file format: a JSON list of objects
 MRF requests use the sparse pixel-mask form instead of ``evidence``:
   {"network": "mrf_penguin", "mask_sites": [[2, 3, 1], [4, 0, 0]],
    "query_sites": [[0, 0], [5, 5]], "n_samples": 4096}
+Sparse-Ising requests use a spin clamp mask (``(site, ±1-spin)`` pairs):
+  {"network": "ising_torus", "clamp_sites": [[0, 1], [37, -1]],
+   "query_vars": [5, 6], "n_samples": 4096}
 (``mask_sites`` are (row, col, observed-label) triples; ``t`` — the
 arrival timestamp in seconds, optional — is only used by ``--stream``,
-which replays the file open-loop at those offsets.)  Either form may
+which replays the file open-loop at those offsets.)  Any form may
 carry per-query retirement overrides ``"rhat_target"`` /
 ``"ess_target"`` — see docs/serving.md for the full schema.
 
@@ -56,20 +59,26 @@ from repro.serve.telemetry import Telemetry, lifecycle_breakdown, monotonic
 # functions below — importing the sampling stack initializes the XLA
 # backend, which must not happen before --force-host-devices takes
 # effect.  repro.pgm.graph / networks are jax-free and safe to import.
-from repro.serve.query import MrfQuery, Query
+from repro.serve.query import IsingQuery, MrfQuery, Query
 
 NETWORKS = ("asia", "sprinkler", "child_scale", "alarm_scale",
             "hailfinder_scale")
 # Served MRF models (pixel-mask evidence); built at --mrf-shape size.
 MRF_NETWORKS = ("mrf_penguin",)
+# Served sparse-Ising models (spin clamp-mask evidence); --ising-side.
+ISING_NETWORKS = ("ising_torus",)
 
 
-def build_registry(names=NETWORKS + MRF_NETWORKS, *, mrf_shape=(24, 24)):
+def build_registry(names=NETWORKS + MRF_NETWORKS + ISING_NETWORKS, *,
+                   mrf_shape=(24, 24), ising_side=16):
     from repro.pgm import networks as _networks
     reg = {}
     for name in names:
         if name == "mrf_penguin":
             reg[name] = _networks.penguin_task(*mrf_shape)[0]
+        elif name == "ising_torus":
+            # subcritical β: fast mixing, still strongly coupled
+            reg[name] = _networks.ising_torus(ising_side, beta=0.35)
         else:
             reg[name] = getattr(_networks, name)()
     return reg
@@ -139,6 +148,33 @@ def synthetic_mrf_traffic(
     return out
 
 
+def synthetic_ising_traffic(
+    model, network: str, n_queries: int, n_patterns: int,
+    rng: np.random.Generator, n_samples: int,
+) -> list[IsingQuery]:
+    """Spin clamp-mask traffic: queries cycle a small set of clamp
+    *patterns* (the same boundary spins get pinned while the free bulk
+    is queried) with fresh ±1 values and query spins each time — the
+    sparse-graph mirror of :func:`synthetic_traffic`."""
+    n = model.n_vars
+    max_clamp = max(1, min(4, n - 2))
+    patterns = []
+    for _ in range(n_patterns):
+        size = int(rng.integers(1, max_clamp + 1))
+        patterns.append(tuple(sorted(
+            rng.choice(n, size=size, replace=False).tolist())))
+    out = []
+    for i in range(n_queries):
+        pat = patterns[i % len(patterns)]
+        clamp = tuple((int(v), int(rng.choice((-1, 1)))) for v in pat)
+        free = [v for v in range(n) if v not in pat]
+        n_q = int(rng.integers(1, min(3, len(free)) + 1))
+        qvars = tuple(int(v) for v in rng.choice(free, n_q, replace=False))
+        out.append(IsingQuery(network, clamp_sites=clamp, query_vars=qvars,
+                              n_samples=n_samples))
+    return out
+
+
 def load_requests(path: str) -> tuple[list[Query], list[float] | None]:
     """Parse a JSON request file; arrival timestamps (``"t"``) come back
     as a second list when every request carries one, else None."""
@@ -159,6 +195,13 @@ def load_requests(path: str) -> tuple[list[Query], list[float] | None]:
                                  for t in r["mask_sites"]),
                 query_sites=tuple(tuple(int(x) for x in t)
                                   for t in r.get("query_sites", ())),
+                n_samples=int(r.get("n_samples", 8192)), **targets)
+        if "clamp_sites" in r:  # sparse-Ising spin clamp request
+            return IsingQuery(
+                r["network"],
+                clamp_sites=tuple(tuple(int(x) for x in t)
+                                  for t in r["clamp_sites"]),
+                query_vars=tuple(r.get("query_vars", ())),
                 n_samples=int(r.get("n_samples", 8192)), **targets)
         return Query(r["network"], r.get("evidence", {}),
                      tuple(r.get("query_vars", ())),
@@ -309,6 +352,9 @@ def _run_batch(args, engine, registry, traffic):
             bn = registry[r.query.network]
             ev = {bn.names[bn.index(k)]: v
                   for k, v in r.query.evidence.items()}
+        elif isinstance(r.query, IsingQuery):  # spin clamp mask
+            n_sp = len(r.query.clamp_sites or ())
+            ev = f"{n_sp} clamped spins" if n_sp else "no clamps"
         else:  # MRF: report the scribble size, not a node dict
             n_px = len(r.query.mask_sites or ())
             if r.query.mask is not None:
@@ -350,13 +396,16 @@ def _run_stream(args, engine, sync_engine, traffic, arrivals):
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--network", default="asia",
-                    choices=NETWORKS + MRF_NETWORKS)
+                    choices=NETWORKS + MRF_NETWORKS + ISING_NETWORKS)
     ap.add_argument("--queries", type=int, default=64)
     ap.add_argument("--patterns", type=int, default=4,
                     help="distinct evidence patterns in synthetic traffic "
                          "(scribble-mask patterns for MRF networks)")
     ap.add_argument("--mrf-shape", default="24x24",
                     help="HxW lattice size of the served MRF models")
+    ap.add_argument("--ising-side", type=int, default=16,
+                    help="side of the served ising_torus lattice "
+                         "(side² spins)")
     ap.add_argument("--requests", default="",
                     help="JSON request file (overrides synthetic traffic)")
     ap.add_argument("--chains", type=int, default=32)
@@ -422,7 +471,11 @@ def main(argv=None) -> None:
         mrf_shape = ()
     if len(mrf_shape) != 2 or any(s < 2 for s in mrf_shape):
         raise SystemExit(f"bad --mrf-shape {args.mrf_shape!r}: expected HxW")
-    registry = build_registry(mrf_shape=mrf_shape)
+    if args.ising_side < 3:
+        raise SystemExit(
+            f"bad --ising-side {args.ising_side}: the torus needs >= 3")
+    registry = build_registry(mrf_shape=mrf_shape,
+                              ising_side=args.ising_side)
     engine_kw = dict(
         chains_per_query=args.chains, burn_in=args.burn_in,
         rhat_target=args.rhat, ess_target=args.ess_target,
@@ -440,7 +493,7 @@ def main(argv=None) -> None:
         print(f"loaded {len(traffic)} requests from {args.requests}"
               + (" (timestamped)" if arrivals else ""))
     else:
-        from repro.pgm.graph import MRFGrid
+        from repro.pgm.graph import FactorGraph, IsingModel, MRFGrid
 
         rng = np.random.default_rng(args.seed)
         model = registry[args.network]
@@ -452,6 +505,13 @@ def main(argv=None) -> None:
             print(f"network={args.network}: {h}x{w} grid "
                   f"(L={model.n_labels}), {args.queries} queries over "
                   f"{args.patterns} scribble-mask patterns")
+        elif isinstance(model, (IsingModel, FactorGraph)):
+            traffic = synthetic_ising_traffic(
+                model, args.network, args.queries, args.patterns, rng,
+                args.budget)
+            print(f"network={args.network}: {model.n_vars} spins, "
+                  f"{len(model.edges)} couplings, {args.queries} queries "
+                  f"over {args.patterns} clamp patterns")
         else:
             traffic = synthetic_traffic(
                 model, args.network, args.queries, args.patterns, rng,

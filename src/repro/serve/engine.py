@@ -574,11 +574,17 @@ class PosteriorEngine:
 
     # -- plan lookup -------------------------------------------------------
     def _plan_key(self, name: str, pattern: tuple[int, ...]) -> tuple:
+        # sparse families fold a graph-content fingerprint into the key
+        # (plans are shaped by the graph structure itself); name-keyed
+        # families return None — see ``plan_key``'s model_salt contract
+        model = self.networks.get(name)
+        salt = None if model is None else family_of(model).plan_salt(model)
         return plan_key(
             name, pattern, k=self.k, use_iu=self.use_iu,
             quantize_cpt_bits=self.quantize_cpt_bits,
             sweeps_per_round=self.sweeps_per_round, thin=self.thin,
-            mesh_fingerprint=mesh_fingerprint(self.mesh))
+            mesh_fingerprint=mesh_fingerprint(self.mesh),
+            model_salt=salt)
 
     def _plan(self, name: str, pattern: tuple[int, ...]):
         """(compiled program, round_runner, was_cache_hit) for one

@@ -1,4 +1,4 @@
-"""Model-family adapters: one serving engine, two PGM families.
+"""Model-family adapters: one serving engine, three PGM families.
 
 The AIA fabric runs MRF grids and Bayesian networks on the same 16
 Gibbs cores (paper Fig. 7); the serving analogue is one
@@ -8,15 +8,17 @@ compiles to a sweep program, how a round runner advances the packed
 lane state — lives behind the small adapter objects here.  Everything
 else (lane packing, per-query split-R̂ retirement, plan caching,
 admission-queue bucketing, mesh sharding, backfill) is family-agnostic
-because both adapters present the same *flat variable space* to the
+because every adapter presents the same *flat variable space* to the
 engine:
 
 * a state tensor with a leading chain-lane axis,
 * per-round ``counts (B, M, L)`` / ``xmean (B, M)`` over M flat
-  variables (BN: nodes; MRF: ``H*W`` sites),
+  variables (BN: nodes; MRF: ``H*W`` sites; Ising/factor graph: graph
+  nodes),
 * an evidence pattern that is a sorted tuple of flat variable ids
-  (BN: observed nodes; MRF: clamped ``r * W + c`` pixel indices), with
-  per-lane evidence *values* packed ``(B, O)`` in pattern order.
+  (BN: observed nodes; MRF: clamped ``r * W + c`` pixel indices;
+  Ising: clamped spin ids), with per-lane evidence *values* packed
+  ``(B, O)`` in pattern order.
 
 ``family_of(model)`` dispatches on the registered model's type.
 """
@@ -29,12 +31,16 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.pgm.compile import (
     BNSweepStats, _color_update, compile_bayesnet, init_states)
 from repro.pgm.gibbs import SweepStats, checkerboard_halfstep
-from repro.pgm.graph import BayesNet, MRFGrid
+from repro.pgm.graph import BayesNet, FactorGraph, IsingModel, MRFGrid
 from repro.pgm.mrf_compile import CompiledMRF, compile_mrf, init_mrf_states
+from repro.pgm.sparse_compile import (
+    CompiledFactorGraph, _sparse_color_update, compile_factor_graph,
+    init_fg_states)
 from repro.serve.plan_cache import (
-    load_compiled, persisted_plan_path, save_compiled)
+    graph_fingerprint, load_compiled, persisted_plan_path, save_compiled)
 from repro.sharding.specs import (
-    serve_cpt_spec, serve_mrf_state_spec, serve_state_spec)
+    serve_cpt_spec, serve_fg_state_spec, serve_mrf_state_spec,
+    serve_state_spec)
 
 
 # -- round runners ---------------------------------------------------------
@@ -182,6 +188,71 @@ def make_mrf_round_runner(prog: CompiledMRF, *, sweeps_per_round: int,
     return jax.jit(round_fn)
 
 
+def make_fg_round_runner(prog: CompiledFactorGraph, *,
+                         sweeps_per_round: int, thin: int, use_iu: bool,
+                         mesh=None):
+    """Jitted ``(key, x, offset) -> (x, counts, xmean, xsq, stats)`` per
+    round (sparse factor-graph / Ising family) — same contract as
+    :func:`make_round_runner`, over the graph's flat node space.
+
+    ``x`` is the (B, n) node-state tensor; the compiled color plans and
+    degree buckets are baked as constants (the plan IS the program —
+    one XLA build per (graph, clamp pattern), like one per BN evidence
+    pattern).  With ``mesh`` the lane axis shards over "batch" and —
+    for million-site graphs — the site axis additionally shards over
+    "model" (``serve_fg_state_spec``); the unary/table banks are
+    replicated (they are the gather operands of every lane's sweep).
+    """
+    unary = jnp.asarray(prog.unary)
+    tables_flat = jnp.asarray(prog.tables).reshape(-1)
+    card = jnp.asarray(prog.fg.card, jnp.int32)
+    state_sharding = None
+    if mesh is not None:
+        rep = NamedSharding(mesh, P())
+        unary = jax.device_put(unary, rep)
+        tables_flat = jax.device_put(tables_flat, rep)
+        card = jax.device_put(card, rep)
+        state_sharding = NamedSharding(
+            mesh, serve_fg_state_spec(mesh, prog.n_vars))
+    L = prog.max_card
+
+    def round_fn(key: jax.Array, x: jax.Array, offset: jax.Array):
+        if state_sharding is not None:
+            x = jax.lax.with_sharding_constraint(x, state_sharding)
+
+        def body(carry, i):
+            key, x, counts, xsum, xsqsum = carry
+            key, sub = jax.random.split(key)
+            bits, att = jnp.int32(0), jnp.int32(0)
+            for plan in prog.plans:
+                sub, s2 = jax.random.split(sub)
+                x, st = _sparse_color_update(
+                    s2, x, plan, unary, tables_flat, card, L, prog.k,
+                    use_iu)
+                bits, att = bits + st.bits_used, att + st.attempts
+            onehot = (x[..., None] == jnp.arange(L)).astype(jnp.int32)
+            kept = ((offset + i) % thin) == 0
+            if kept.ndim:  # per-lane offsets: broadcast over (node, label)
+                kept = kept[:, None, None]
+            counts = counts + jnp.where(kept, onehot, 0)
+            xf = x.astype(jnp.float32)
+            xsum = xsum + xf
+            xsqsum = xsqsum + xf * xf
+            return (key, x, counts, xsum, xsqsum), BNSweepStats(bits, att)
+
+        counts0 = jnp.zeros(x.shape + (L,), jnp.int32)
+        xsum0 = jnp.zeros(x.shape, jnp.float32)
+        (key, x, counts, xsum, xsqsum), per_sweep = jax.lax.scan(
+            body, (key, x, counts0, xsum0, xsum0),
+            jnp.arange(sweeps_per_round))
+        if state_sharding is not None:
+            x = jax.lax.with_sharding_constraint(x, state_sharding)
+        return (x, counts, xsum / sweeps_per_round,
+                xsqsum / sweeps_per_round, per_sweep)
+
+    return jax.jit(round_fn)
+
+
 # -- family adapters -------------------------------------------------------
 class BayesNetFamily:
     """Engine adapter for :class:`repro.pgm.graph.BayesNet` models."""
@@ -229,6 +300,10 @@ class BayesNetFamily:
 
     def n_free(self, prog) -> int:
         return len(prog.free_nodes)
+
+    def plan_salt(self, model):
+        """BN plans are fully determined by (name, pattern, knobs)."""
+        return None
 
     # -- plan persistence (compiler chain is worth skipping for BNs) ------
     def persisted_path(self, directory, name, pattern, model, *,
@@ -338,7 +413,101 @@ class MrfFamily:
     def n_free(self, prog) -> int:
         return prog.n_free
 
+    def plan_salt(self, model):
+        """MRF plans are fully determined by (name, pattern, knobs)."""
+        return None
+
     # -- plan persistence: compiling an MRF plan is O(1), nothing to skip
+    def persisted_path(self, directory, name, pattern, model, *,
+                       k, quantize_cpt_bits):
+        return None
+
+    def load_persisted(self, path, model):  # pragma: no cover - unused
+        return None
+
+    def save_persisted(self, path, prog):  # pragma: no cover - unused
+        pass
+
+
+class IsingFamily:
+    """Engine adapter for sparse :class:`repro.pgm.graph.IsingModel` /
+    :class:`repro.pgm.graph.FactorGraph` models.
+
+    Flat variable ids are graph node ids; evidence is a clamp mask over
+    spins (:class:`repro.serve.query.IsingQuery` ``clamp_sites`` pairs —
+    ``±1`` spins or ``{0, 1}`` labels), or a plain :class:`Query`-style
+    evidence mapping for general factor graphs.  Queries sharing a
+    clamp *pattern* share one compiled sparse sweep program
+    (:class:`repro.pgm.sparse_compile.CompiledFactorGraph`) whatever
+    their clamped values.
+    """
+
+    kind = "ising"
+
+    def normalize(self, model, query):
+        clamp = getattr(query, "clamp_sites", None)
+        if clamp is not None:
+            raw = {}
+            for site, spin in clamp:
+                v, spin = int(site), int(spin)
+                if raw.get(v, spin) != spin:
+                    raise ValueError(
+                        f"conflicting evidence for spin {v}")
+                raw[v] = spin
+            ev = model.normalize_evidence(raw)
+        else:
+            ev = model.normalize_evidence(query.evidence)
+        qvars = tuple(model.index(v) for v in query.query_vars) or tuple(
+            v for v in range(model.n_vars) if v not in ev)
+        clash = [model.var_name(v) for v in qvars if v in ev]
+        if clash:
+            raise ValueError(f"query vars {clash} are observed")
+        return ev, qvars, tuple(sorted(ev))
+
+    def compile(self, model, pattern, *, k, quantize_cpt_bits):
+        # quantize_cpt_bits is a CPT-bank knob; factor graphs carry
+        # energies, not CPTs (it still keys the plan cache)
+        return compile_factor_graph(model, k=k, observed=pattern)
+
+    def make_runner(self, prog, *, sweeps_per_round, thin, use_iu, mesh):
+        return make_fg_round_runner(
+            prog, sweeps_per_round=sweeps_per_round, thin=thin,
+            use_iu=use_iu, mesh=mesh)
+
+    def init_states(self, key, prog, n_lanes, evidence_values):
+        return init_fg_states(key, prog, n_lanes, evidence_values)
+
+    def state_spec(self, mesh):
+        return serve_fg_state_spec(mesh)
+
+    def n_vars(self, prog) -> int:
+        return prog.n_vars
+
+    def max_card(self, prog) -> int:
+        return prog.max_card
+
+    def var_card(self, prog, v: int) -> int:
+        return int(prog.fg.card[v])
+
+    def var_name(self, model, v: int) -> str:
+        return model.var_name(v)
+
+    def n_free(self, prog) -> int:
+        return prog.n_free
+
+    def plan_salt(self, model):
+        """Sparse plans are shaped by the graph itself (coloring, degree
+        buckets), so the cache key folds a content fingerprint — a
+        re-registered graph under the same name must miss.  Cached on
+        the model object: hashing a million-spin graph once is fine,
+        once per query is not."""
+        salt = getattr(model, "_plan_salt", None)
+        if salt is None:
+            salt = graph_fingerprint(model)
+            model._plan_salt = salt
+        return salt
+
+    # -- plan persistence: packing plans is cheap numpy, nothing to skip
     def persisted_path(self, directory, name, pattern, model, *,
                        k, quantize_cpt_bits):
         return None
@@ -352,6 +521,7 @@ class MrfFamily:
 
 BAYESNET_FAMILY = BayesNetFamily()
 MRF_FAMILY = MrfFamily()
+ISING_FAMILY = IsingFamily()
 
 
 def family_of(model):
@@ -361,11 +531,14 @@ def family_of(model):
 
         family_of(networks.asia()).kind          # 'bayesnet'
         family_of(networks.penguin_task(8, 8)[0]).kind   # 'mrf'
+        family_of(networks.ising_torus(8)).kind          # 'ising'
     """
     if isinstance(model, BayesNet):
         return BAYESNET_FAMILY
     if isinstance(model, MRFGrid):
         return MRF_FAMILY
+    if isinstance(model, (IsingModel, FactorGraph)):
+        return ISING_FAMILY
     raise TypeError(
         f"no serving family for model type {type(model).__name__!r} "
-        f"(expected BayesNet or MRFGrid)")
+        f"(expected BayesNet, MRFGrid, IsingModel, or FactorGraph)")

@@ -56,6 +56,7 @@ def plan_key(
     sweeps_per_round: int,
     thin: int,
     mesh_fingerprint=None,
+    model_salt=None,
 ) -> tuple:
     """Canonical cache key of one compiled (plan, round-runner) pair.
 
@@ -66,9 +67,16 @@ def plan_key(
     must never be served to an engine on another; see
     ``repro.launch.mesh.mesh_fingerprint``.  Long patterns (pixel
     masks) are folded to their :func:`pattern_key` digest.
+
+    ``model_salt`` folds in a *content* identity where the name alone is
+    too weak: sparse factor graphs compile to plans shaped by the graph
+    structure itself (degree buckets, coloring), so a re-registered
+    graph under the same name must miss — pass
+    :func:`graph_fingerprint` there.  Families whose plans depend only
+    on (name, pattern, knobs) leave it None.
     """
     return (network, pattern_key(pattern), k, use_iu, quantize_cpt_bits,
-            sweeps_per_round, thin, mesh_fingerprint)
+            sweeps_per_round, thin, mesh_fingerprint, model_salt)
 
 
 @dataclass
@@ -145,6 +153,29 @@ def network_fingerprint(bn) -> str:
                    tuple(tuple(p) for p in bn.parents))).encode())
     for t in bn.cpt:
         h.update(np.ascontiguousarray(t, np.float64).tobytes())
+    return h.hexdigest()
+
+
+def graph_fingerprint(model) -> str:
+    """Content hash of a sparse model (FactorGraph or IsingModel).
+
+    Duck-typed: anything with a ``pair`` attribute hashes like a factor
+    graph (cards + edges + energy tables); an Ising model hashes its
+    couplings/fields directly — cheaper than lowering a million-spin
+    model to (E, 2, 2) tables just to fingerprint it.
+    """
+    h = hashlib.sha1()
+    if hasattr(model, "pair"):
+        h.update(repr((int(model.n_vars),
+                       tuple(int(c) for c in model.card))).encode())
+        h.update(np.ascontiguousarray(model.edges, np.int64).tobytes())
+        h.update(np.ascontiguousarray(model.unary, np.float64).tobytes())
+        h.update(np.ascontiguousarray(model.pair, np.float64).tobytes())
+    else:
+        h.update(repr(("ising", int(model.n))).encode())
+        h.update(np.ascontiguousarray(model.edges, np.int64).tobytes())
+        h.update(np.ascontiguousarray(model.j, np.float64).tobytes())
+        h.update(np.ascontiguousarray(model.h, np.float64).tobytes())
     return h.hexdigest()
 
 

@@ -118,6 +118,40 @@ class MrfQuery:
 
 
 @dataclass
+class IsingQuery:
+    """One posterior-marginal request over a registered sparse Ising
+    model (or arbitrary factor graph).
+
+    Evidence is a *clamp mask* over spins: ``clamp_sites`` lists
+    ``(site, spin)`` pairs, with spins in ``{-1, +1}`` (or ``{0, 1}``
+    labels — ``-1`` and ``0`` both mean spin-down).  The sorted site
+    tuple is the evidence pattern: queries sharing a clamp pattern
+    share one compiled sparse sweep program and can pack into one
+    micro-batched group, whatever the clamped spin values — exactly the
+    BN-evidence / MRF-scribble contract on an irregular graph.
+
+    ``query_vars``: spin ids (or ``"s<id>"`` names) to report marginals
+    for; empty = every unclamped spin — fine for small graphs, prefer
+    an explicit subset on big ones (convergence is judged per query
+    var).  ``n_samples`` has :class:`Query` semantics;
+    ``rhat_target`` / ``ess_target`` override the engine's retirement
+    thresholds for this query alone.
+
+    Example::
+
+        IsingQuery("ising_torus", clamp_sites=[(0, +1), (5, -1)],
+                   query_vars=(1, 2), n_samples=4096)
+    """
+
+    network: str
+    clamp_sites: Sequence[tuple[int, int]] = ()
+    query_vars: Sequence[str | int] = ()
+    n_samples: int = 8192
+    rhat_target: float | None = None
+    ess_target: float | None = None
+
+
+@dataclass
 class Result:
     """Answer to one :class:`Query` (or :class:`MrfQuery`).
 

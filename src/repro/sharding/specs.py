@@ -233,6 +233,31 @@ def serve_cpt_spec(mesh: Mesh, n_elems: int) -> P:
     return P()
 
 
+# Sparse factor-graph state crosses this many sites before the site axis
+# is worth sharding: below it (every BN and small-Ising group) the
+# all-to-all a sharded neighbour gather implies costs more than the
+# memory it saves; above it (million-spin graphs) a lane-replicated
+# state tensor stops fitting comfortably and the XLA SPMD partitioner
+# turns the plan gathers into collectives instead.
+SERVE_SITE_SHARD_ELEMS = 1 << 20
+
+
+def serve_fg_state_spec(mesh: Mesh, n_sites: int | None = None) -> P:
+    """PartitionSpec of the (lanes, n_sites) sparse factor-graph state.
+
+    Lane axis shards over the leading "batch" axis like every served
+    family.  Irregular site counts additionally shard the site axis over
+    a trailing "model" axis once they pass
+    ``SERVE_SITE_SHARD_ELEMS`` (and divide evenly) — the million-spin
+    regime, where chain-lane parallelism alone can't spread one graph's
+    state across the mesh."""
+    if n_sites is not None:
+        m = _axis(mesh, "model")
+        if m > 1 and n_sites >= SERVE_SITE_SHARD_ELEMS and n_sites % m == 0:
+            return P(serve_batch_axis(mesh), "model")
+    return P(serve_batch_axis(mesh), None)
+
+
 def serve_lane_multiple(mesh: Mesh | None) -> int:
     """Lane-count divisibility the engine must pad micro-batches to."""
     return 1 if mesh is None else mesh.shape[serve_batch_axis(mesh)]

@@ -1,0 +1,339 @@
+"""Sparse factor-graph compile layer: undirected coloring invariants,
+degree-bucketed gather plans, bitwise grid-lowering regression, Ising
+convergence vs exact results, and the served Ising family."""
+import json
+
+import jax
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.pgm import (
+    FactorGraph,
+    color_bayesnet,
+    color_graph,
+    compile_factor_graph,
+    compile_mrf,
+    dsatur,
+    fg_metropolis,
+    init_fg_states,
+    networks,
+    run_fg_gibbs,
+    site_weights_sparse,
+    sparse_plan,
+    verify_coloring,
+)
+from repro.pgm.coloring import _mis_groups
+from repro.pgm.gibbs import site_weights
+from repro.pgm.mrf_compile import mask_of
+from repro.serve import IsingQuery, PosteriorEngine, family_of, plan_key
+from repro.serve.cli import load_requests
+
+
+def _pairs(flat):
+    """Fold a flat int list into (i, j) edge pairs, dropping self-loops
+    and duplicates (the hypothesis shim has no tuple strategy)."""
+    seen, out = set(), []
+    for a, b in zip(flat[::2], flat[1::2]):
+        i, j = min(a, b), max(a, b)
+        if i != j and (i, j) not in seen:
+            seen.add((i, j))
+            out.append((i, j))
+    return np.asarray(out, np.int64).reshape(-1, 2)
+
+
+def _groups_valid(n, edges, groups):
+    """Every node exactly once; no edge inside one group."""
+    allv = np.concatenate([np.asarray(g) for g in groups]) if groups else \
+        np.zeros(0, np.int64)
+    assert sorted(allv.tolist()) == list(range(n))
+    color = np.zeros(n, np.int64)
+    for c, g in enumerate(groups):
+        color[np.asarray(g)] = c
+    for i, j in edges:
+        assert color[i] != color[j], (i, j)
+
+
+def _small_fg(seed=0):
+    """5-var cyclic factor graph with mixed cards (2s and a 3)."""
+    rng = np.random.default_rng(seed)
+    card = np.array([2, 2, 3, 2, 2], np.int64)
+    edges = np.array([[0, 1], [1, 2], [2, 3], [3, 4], [0, 4]], np.int64)
+    unary = rng.normal(size=(5, 3)).astype(np.float64)
+    pair = rng.normal(size=(5, 3, 3)).astype(np.float64)
+    return FactorGraph(card=card, edges=edges, unary=unary, pair=pair)
+
+
+class TestColorGraph:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(4, 40), st.lists(st.integers(0, 39), min_size=0,
+                                        max_size=60))
+    def test_random_graphs_valid_and_bounded(self, n, flat):
+        edges = _pairs([v % n for v in flat])
+        for method in ("dsatur", "parallel"):
+            groups = color_graph(n, edges, method=method, validate=True)
+            _groups_valid(n, edges, groups)
+            maxdeg = 0
+            if len(edges):
+                maxdeg = int(np.bincount(edges.ravel(), minlength=n).max())
+            assert len(groups) <= maxdeg + 1, method
+
+    def test_empty_and_singleton(self):
+        groups = color_graph(1, np.zeros((0, 2), np.int64))
+        assert len(groups) == 1 and groups[0].tolist() == [0]
+        groups = color_graph(4, np.zeros((0, 2), np.int64))
+        assert len(groups) == 1 and sorted(groups[0].tolist()) == [0, 1, 2, 3]
+
+    def test_even_torus_is_bipartite(self):
+        model = networks.ising_torus(4)
+        groups = color_graph(model.n, model.edges, method="dsatur",
+                             validate=True)
+        assert len(groups) == 2
+
+    def test_skip_removes_nodes(self):
+        edges = np.array([[0, 1], [1, 2]], np.int64)
+        groups = color_graph(3, edges, skip=frozenset({1}))
+        allv = np.concatenate(groups).tolist()
+        assert sorted(allv) == [0, 2]
+
+    def test_parallel_mis_groups_cover_once(self):
+        model = networks.random_sparse_ising(200, avg_degree=4.0, seed=3)
+        # _mis_groups wants each undirected edge in both directions
+        src = np.concatenate([model.edges[:, 0], model.edges[:, 1]])
+        dst = np.concatenate([model.edges[:, 1], model.edges[:, 0]])
+        groups = _mis_groups(model.n, src, dst, np.ones(model.n, bool))
+        _groups_valid(model.n, model.edges, groups)
+
+    def test_color_bayesnet_validate_flag(self):
+        bn = networks.asia()
+        groups = color_bayesnet(bn, validate=True)
+        assert verify_coloring(bn.moralized(), groups)
+        # validate=False returns the same grouping (dsatur is deterministic)
+        fast = color_bayesnet(bn)
+        assert [g.tolist() for g in fast] == [g.tolist() for g in groups]
+
+    def test_dsatur_original_ids_preserved(self):
+        import networkx as nx
+        g = nx.Graph()
+        g.add_nodes_from(range(5))
+        g.add_edges_from([(0, 1), (3, 4)])
+        coloring = dsatur(g)
+        assert set(coloring) == set(range(5))
+
+
+class TestGraphIR:
+    def test_factor_graph_validation(self):
+        with pytest.raises(ValueError):
+            _small_fg().__class__(
+                card=np.array([2, 2]), edges=np.array([[0, 0]]),
+                unary=np.zeros((2, 2)), pair=np.zeros((1, 2, 2)))
+
+    def test_canonical_edge_orientation(self):
+        """Edges given as (j, i) with i < j are flipped and their
+        tables transposed — energies are orientation-independent."""
+        fg = _small_fg()
+        flipped = FactorGraph(
+            card=fg.card, edges=fg.edges[:, ::-1].copy(),
+            unary=fg.unary, pair=np.transpose(fg.pair, (0, 2, 1)).copy())
+        x = np.array([0, 1, 2, 0, 1])
+        assert np.allclose(fg.energy(x), flipped.energy(x))
+
+    def test_ising_round_trip_energy(self):
+        model = networks.ising_torus(3, beta=0.7, h=0.2)
+        fg = model.to_factor_graph()
+        rng = np.random.default_rng(0)
+        for _ in range(4):
+            x = rng.integers(0, 2, size=model.n)
+            s = 2 * x - 1
+            e = -(model.j * s[model.edges[:, 0]]
+                  * s[model.edges[:, 1]]).sum() - (model.h * s).sum()
+            assert np.allclose(fg.energy(x), e)
+
+    def test_evidence_normalization_aliases(self):
+        model = networks.ising_torus(3)
+        assert model.normalize_evidence({0: -1, 1: 1}) == {0: 0, 1: 1}
+        fg = model.to_factor_graph()
+        assert fg.normalize_evidence({"s2": -1}) == {2: 0}
+        with pytest.raises(ValueError):
+            fg.normalize_evidence({0: 5})
+
+
+class TestSparseCompile:
+    def test_grid_lowering_bitwise_equals_dense(self):
+        """Acceptance gate: the checkerboard grid lowered through the
+        sparse gather-plan path produces bit-identical int32 KY weights
+        to the dense rolled-lattice kernel, clamps included."""
+        mrf, truth = networks.penguin_task(h=12, w=10, beta=0.8)
+        mask = np.zeros((12, 10), bool)
+        mask[0, :] = True
+        mask[5, 3:6] = True
+        observed = tuple(int(v) for v in np.flatnonzero(mask.ravel()))
+        dense = compile_mrf(mrf, observed=observed)
+        prog = sparse_plan(dense)
+        assert prog.n_colors == 2
+
+        labels = np.where(mask, truth, 0).astype(np.int32)
+        rng = np.random.default_rng(0)
+        labels = np.where(mask, labels,
+                          rng.integers(0, 2, size=mask.shape)).astype(np.int32)
+        x_grid = jax.numpy.asarray(labels)[None]
+        x_flat = jax.numpy.asarray(labels.reshape(1, -1))
+
+        w_dense = np.asarray(site_weights(
+            x_grid, jax.numpy.asarray(mrf.unary),
+            jax.numpy.asarray(mrf.pairwise))).reshape(1, -1, 2)
+        w_sparse = np.asarray(site_weights_sparse(prog, x_flat))
+        free = ~mask.ravel()
+        assert (w_dense[:, free] == w_sparse[:, free]).all()
+
+    def test_dense_mrf_serving_path_untouched(self):
+        """mask_of on the dense program is unchanged by the refactor."""
+        mrf, _ = networks.penguin_task(h=4, w=4, beta=0.5)
+        prog = compile_mrf(mrf, observed=(0, 5))
+        assert mask_of(prog).sum() == 2
+
+    def test_small_fg_matches_brute_force(self):
+        fg = _small_fg()
+        prog = compile_factor_graph(fg, validate=True)
+        _, counts, stats = run_fg_gibbs(
+            jax.random.PRNGKey(0), prog, n_chains=64, n_sweeps=600,
+            burn_in=150)
+        marg = np.asarray(counts, np.float64)
+        marg /= np.maximum(marg.sum(-1, keepdims=True), 1.0)
+        exact = fg.marginals_exact()
+        for v in range(fg.n_vars):
+            c = int(fg.card[v])
+            assert np.abs(marg[v, :c] - exact[v][:c]).max() < 0.03, v
+        assert int(stats.bits_used) > 0
+
+    def test_evidence_conditioning(self):
+        fg = _small_fg(seed=1)
+        prog = compile_factor_graph(fg, observed=(2,))
+        ev = np.zeros(1, np.int32) + 2  # clamp var 2 to label 2
+        _, counts, _ = run_fg_gibbs(
+            jax.random.PRNGKey(1), prog, n_chains=64, n_sweeps=600,
+            burn_in=150, evidence=ev)
+        marg = np.asarray(counts, np.float64)
+        marg /= np.maximum(marg.sum(-1, keepdims=True), 1.0)
+        exact = fg.marginals_exact(evidence={2: 2})
+        for v in prog.free_nodes:
+            c = int(fg.card[v])
+            assert np.abs(marg[v, :c] - exact[v][:c]).max() < 0.04, v
+
+    def test_compile_validation(self):
+        fg = _small_fg()
+        with pytest.raises(ValueError):
+            compile_factor_graph(fg, observed=tuple(range(5)))
+        with pytest.raises(KeyError):
+            compile_factor_graph(fg, observed=("nope",))
+        prog = compile_factor_graph(fg, observed=("s1",))
+        assert prog.observed == (1,)
+        assert prog.n_free == 4
+        with pytest.raises(ValueError):
+            init_fg_states(jax.random.PRNGKey(0), prog, 2)  # needs values
+
+    @pytest.mark.slow
+    def test_torus_matches_onsager(self):
+        """2D-torus ferromagnet at beta=0.6 (well below T_c) reproduces
+        the exact Onsager spontaneous magnetization."""
+        beta = 0.6
+        model = networks.ising_torus(16, beta=beta)
+        prog = compile_factor_graph(model)
+        x0 = np.ones((48, model.n), np.int32)  # ordered start: all up
+        x, _, _ = run_fg_gibbs(
+            jax.random.PRNGKey(2), prog, n_chains=48, n_sweeps=150,
+            burn_in=0, x0=jax.numpy.asarray(x0))
+        m = float(np.mean(2.0 * np.asarray(x) - 1.0))
+        exact = (1.0 - np.sinh(2.0 * beta) ** -4) ** 0.125
+        assert abs(m - exact) < 0.03, (m, exact)
+
+
+class TestFgMetropolis:
+    def test_matches_brute_force(self):
+        fg = _small_fg(seed=2)
+        prog = compile_factor_graph(fg)
+        x0 = init_fg_states(jax.random.PRNGKey(0), prog, 128)
+        x, stats = fg_metropolis(jax.random.PRNGKey(1), x0, prog,
+                                 n_sweeps=800)
+        x = np.asarray(x)
+        exact = fg.marginals_exact()
+        for v in range(fg.n_vars):
+            c = int(fg.card[v])
+            emp = np.bincount(x[:, v], minlength=c)[:c] / x.shape[0]
+            assert np.abs(emp - exact[v][:c]).max() < 0.08, v
+        acc = float(stats.accept_rate)
+        assert 0.1 < acc <= 1.0
+
+
+class TestIsingServing:
+    def _engine(self, side=4, beta=0.5):
+        model = networks.ising_torus(side, beta=beta, h=0.1)
+        eng = PosteriorEngine({"t": model}, chains_per_query=64,
+                              burn_in=32, max_rounds=16)
+        return model, eng
+
+    def test_served_marginals_match_exact(self):
+        model, eng = self._engine()
+        res = eng.answer(IsingQuery("t", clamp_sites=((0, 1), (5, -1)),
+                                    query_vars=("s3", "s10"),
+                                    n_samples=30_000))
+        exact = model.to_factor_graph().marginals_exact(
+            evidence={0: 1, 5: 0})
+        for v in (3, 10):
+            assert np.abs(res.marginal(f"s{v}") - exact[v]).max() < 0.05, v
+
+    def test_shared_pattern_hits_plan_cache(self):
+        _, eng = self._engine()
+        q1 = IsingQuery("t", clamp_sites=((1, 1),), query_vars=("s2",))
+        q2 = IsingQuery("t", clamp_sites=((1, -1),), query_vars=("s2",))
+        eng.answer_batch([q1, q2])  # same pattern → one plan
+        s = eng.stats()["plan_cache"]
+        assert s["misses"] == 1
+        eng.answer(q1)
+        assert eng.stats()["plan_cache"]["hits"] >= 1
+
+    def test_graph_salt_keys_plans_by_content(self):
+        model, eng = self._engine()
+        key1 = eng._plan_key("t", ())
+        eng.register("t", networks.ising_torus(4, beta=0.9))
+        key2 = eng._plan_key("t", ())
+        assert key1 != key2  # same name, different couplings
+        fam = family_of(model)
+        assert fam.plan_salt(model) == fam.plan_salt(model)  # cached/stable
+
+    def test_plan_key_model_salt_default(self):
+        base = dict(k=14, use_iu=True, quantize_cpt_bits=None,
+                    sweeps_per_round=16, thin=1, mesh_fingerprint=None)
+        assert plan_key("n", (), **base) == plan_key("n", (), **base,
+                                                     model_salt=None)
+        assert plan_key("n", (), **base) != plan_key("n", (), **base,
+                                                     model_salt="x")
+
+    def test_conflicting_clamps_rejected(self):
+        _, eng = self._engine()
+        with pytest.raises(ValueError):
+            eng.answer(IsingQuery("t", clamp_sites=((0, 1), (0, -1)),
+                                  query_vars=("s1",)))
+        with pytest.raises(ValueError):
+            eng.answer(IsingQuery("t", clamp_sites=((0, 2),),
+                                  query_vars=("s1",)))
+
+    def test_load_requests_round_trip(self, tmp_path):
+        p = tmp_path / "reqs.json"
+        p.write_text(json.dumps([
+            {"network": "t", "clamp_sites": [[0, 1], [9, -1]],
+             "query_vars": ["s3"], "n_samples": 512},
+            {"network": "t", "evidence": {}, "query_vars": []},
+        ]))
+        reqs, times = load_requests(str(p))
+        assert times is None
+        assert isinstance(reqs[0], IsingQuery)
+        assert reqs[0].clamp_sites == ((0, 1), (9, -1))
+        assert reqs[0].query_vars == ("s3",)
+        assert not isinstance(reqs[1], IsingQuery)
+
+    def test_family_dispatch(self):
+        assert family_of(networks.ising_torus(3)).kind == "ising"
+        assert family_of(_small_fg()).kind == "ising"
+        with pytest.raises(TypeError):
+            family_of(object())
