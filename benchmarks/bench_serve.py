@@ -371,6 +371,7 @@ def run_stream(name, network, *, n_queries=32, n_patterns=2, budget=2048,
         f"qps={metrics['queries_per_s']:.2f};"
         f"sync_qps={metrics['sync_queries_per_s']:.2f};"
         f"speedup={metrics['speedup']:.2f}x;"
+        f"MSample/s={metrics['msample_per_s']:.3f};"
         f"ESS/s={metrics['ess_per_s']:.1f};"
         f"p50_ms={metrics['p50_ms']:.1f};p99_ms={metrics['p99_ms']:.1f};"
         + "".join(f"{p}_p50_ms={bd[p]['p50_ms']:.1f};"
@@ -468,6 +469,49 @@ def run_telemetry_overhead(network="asia", *, n_queries=16, n_patterns=2,
             "ratio": ratio}
 
 
+def run_sampler_compare(network="asia", *, n_queries=8, n_patterns=2,
+                        budget=512, chains=8, report=print):
+    """``sampler="xla"`` vs ``sampler="pallas"`` engine backends on
+    identical traffic: warm MSample/s for both plus the bitwise-identity
+    bit.  The regression gate holds ``identical`` unconditionally; the
+    speedup is only meaningful off-CPU (on CPU the fused kernel runs
+    through the Pallas *interpreter*), so the report carries the
+    ``platform`` for the gate to condition on."""
+    import jax
+
+    from repro.pgm import networks
+    from repro.serve.cli import synthetic_traffic
+    from repro.serve.engine import PosteriorEngine
+
+    bn = getattr(networks, network)()
+    traffic = synthetic_traffic(
+        bn, network, n_queries, n_patterns, np.random.default_rng(0), budget)
+    out = {"network": network, "platform": jax.default_backend(),
+           "n_queries": n_queries}
+    results = {}
+    for sampler in ("xla", "pallas"):
+        engine = PosteriorEngine({network: bn}, chains_per_query=chains,
+                                 burn_in=32, sampler=sampler, seed=7)
+        _pass(engine, traffic)                       # warm the plan cache
+        dt, samples, res = _pass(engine, traffic)
+        results[sampler] = res
+        out[sampler] = {"wall_s": dt, "queries_per_s": n_queries / dt,
+                        "msample_per_s": samples / dt / 1e6,
+                        "ess_per_s": _ess(res) / dt}
+        report(row(f"serve_sampler_{sampler}", dt / n_queries * 1e6,
+                   f"MSample/s={out[sampler]['msample_per_s']:.3f};"
+                   f"platform={out['platform']}"))
+    identical = all(_identical(a, b)
+                    for a, b in zip(results["xla"], results["pallas"]))
+    out["identical"] = bool(identical)
+    out["speedup"] = (out["pallas"]["msample_per_s"]
+                      / max(out["xla"]["msample_per_s"], 1e-12))
+    report(row("serve_sampler_identity", 0.0,
+               f"identical={identical};"
+               f"speedup_pallas={out['speedup']:.2f}x"))
+    return out
+
+
 def run_diagnostics_compare(network="asia", *, n_queries=16, n_patterns=2,
                             budget=2048, chains=16, rhat_target=1.05,
                             ess_target=100.0, report=print):
@@ -490,7 +534,7 @@ def run_diagnostics_compare(network="asia", *, n_queries=16, n_patterns=2,
             {network: bn}, chains_per_query=chains, burn_in=32,
             retirement=mode, rhat_target=rhat_target, ess_target=ess_target)
         _pass(engine, traffic)                       # warm the plan cache
-        dt, _, results = _pass(engine, traffic)
+        dt, samples, results = _pass(engine, traffic)
         sweeps = [r.n_sweeps for r in results]
         ess = _ess(results)
         out["modes"][mode] = {
@@ -499,6 +543,7 @@ def run_diagnostics_compare(network="asia", *, n_queries=16, n_patterns=2,
             "mean_sweeps_to_retirement": float(np.mean(sweeps)),
             "max_sweeps_to_retirement": int(max(sweeps)),
             "converged": int(sum(r.converged for r in results)),
+            "msample_per_s": samples / dt / 1e6,
             "ess_per_s": ess / dt,
             "mean_min_ess": ess / n_queries,
         }
@@ -506,6 +551,7 @@ def run_diagnostics_compare(network="asia", *, n_queries=16, n_patterns=2,
         report(row(
             f"serve_diag_{mode}", dt / n_queries * 1e6,
             f"sweeps={m['mean_sweeps_to_retirement']:.0f};"
+            f"MSample/s={m['msample_per_s']:.3f};"
             f"ESS/s={m['ess_per_s']:.1f};"
             f"converged={m['converged']}/{n_queries}"))
     return out
@@ -558,6 +604,10 @@ def main(report=print, *, smoke=False, stream=False, mesh_shape=None,
     # telemetry overhead: null vs live recorder on identical traffic —
     # self-relative, so the CI gate needs no baseline entry for it
     rep["telemetry_overhead"] = run_telemetry_overhead(report=report)
+    # fused-pallas vs xla sampler backends: identity is gated always,
+    # speedup only where the kernel compiles (non-CPU) — smoke-sized in
+    # every mode, it is a correctness/tracking row, not a throughput one
+    rep["sampler_pallas"] = run_sampler_compare(report=report)
     return rep
 
 

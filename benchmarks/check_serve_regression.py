@@ -21,6 +21,15 @@ Checks, per run matched by name against the baseline:
 * the streaming section (when both reports carry one): queued queries/s
   under the same tolerance, queued-vs-synchronous speedup at least
   ``--min-stream-speedup``, and the stream identity bit must be True.
+* the ``sampler_pallas`` section (when the current report carries one):
+  the fused-kernel-vs-XLA bitwise ``identical`` bit must be True on
+  every platform — it is the whole contract of ``sampler="pallas"`` —
+  and the fused/XLA warm-throughput ratio must meet
+  ``--min-pallas-speedup`` *only* where the kernel actually compiles
+  (``platform != "cpu"``; on CPU it runs through the Pallas interpreter
+  and the ratio measures nothing).  Like the telemetry check this is
+  self-relative — both backends were timed in the same process on
+  identical traffic — so it needs no baseline entry.
 * the ``telemetry_overhead`` section (when the current report carries
   one): enabled-recorder ESS/s must be within
   ``--telemetry-overhead-tolerance`` (default 5%) of the null-recorder
@@ -115,6 +124,7 @@ def _ess_check(metric, cur_section, base_section, tolerance,
 def check(current: dict, baseline: dict, *, tolerance: float,
           min_stream_speedup: float,
           telemetry_overhead_tolerance: float = 0.05,
+          min_pallas_speedup: float = 1.0,
           ) -> tuple[list[Failure], list[Failure]]:
     """Returns ``(regressions, setup_errors)`` — setup errors (exit 2)
     are comparisons that *cannot* be made: current runs with no baseline
@@ -219,6 +229,31 @@ def check(current: dict, baseline: dict, *, tolerance: float,
                 tolerance=telemetry_overhead_tolerance,
                 note="live recorder costs more than the overhead budget "
                      "— check the telemetry.enabled guards on hot paths"))
+
+    # sampler backends: the bitwise-identity bit is unconditional (it is
+    # the sampler="pallas" contract); the fused/XLA speedup floor only
+    # applies where the kernel compiles — on CPU it runs interpreted and
+    # the ratio is a correctness-plumbing number, not a perf one.
+    sp = current.get("sampler_pallas")
+    if sp is not None:
+        if not sp.get("identical", False):
+            failures.append(Failure(
+                "sampler_pallas.identical", observed=False,
+                note="fused Pallas sampler results differ from the XLA "
+                     "path — the bitwise contract is broken"))
+        speedup = sp.get("speedup", 0.0)
+        platform = sp.get("platform", "cpu")
+        gated = platform != "cpu"
+        print(f"sampler_pallas: identical={sp.get('identical')}, "
+              f"fused/xla {speedup:.2f}x on {platform} "
+              + (f"(floor {min_pallas_speedup:.2f}x)" if gated
+                 else "(interpreted — speedup not gated)"))
+        if gated and speedup < min_pallas_speedup:
+            failures.append(Failure(
+                "sampler_pallas.speedup", observed=round(speedup, 3),
+                floor=min_pallas_speedup,
+                note="fused kernel slower than the two-stage XLA path "
+                     "on a compiled backend"))
     return failures, setup
 
 
@@ -235,6 +270,11 @@ def main(argv=None) -> None:
                     help="allowed relative ESS/s cost of the live "
                          "telemetry recorder vs the null recorder "
                          "(self-relative; default 0.05)")
+    ap.add_argument("--min-pallas-speedup", type=float, default=1.0,
+                    help="required fused-pallas/xla warm-throughput "
+                         "ratio on compiled (non-CPU) backends; the "
+                         "bitwise identity bit is gated on every "
+                         "platform regardless")
     ap.add_argument("--update", action="store_true",
                     help="overwrite the baseline with the current report")
     args = ap.parse_args(argv)
@@ -255,7 +295,8 @@ def main(argv=None) -> None:
     failures, setup = check(
         current, baseline, tolerance=args.tolerance,
         min_stream_speedup=args.min_stream_speedup,
-        telemetry_overhead_tolerance=args.telemetry_overhead_tolerance)
+        telemetry_overhead_tolerance=args.telemetry_overhead_tolerance,
+        min_pallas_speedup=args.min_pallas_speedup)
     for f in failures + setup:
         print(f)
     if setup:

@@ -14,6 +14,17 @@ one small gather + one FMA per element instead of a transcendental.
 ``InterpTable.build`` constructs a table for an arbitrary scalar function
 over a range; pre-built tables for exp/log/sigmoid/softplus cover the
 distribution-generation pipeline of Gibbs sampling (energies -> weights).
+
+:func:`masked_exp_weights` is the shared distribution-generation tail of
+every Gibbs family (label mask → max-subtract → LUT-exp → fixed-point
+floor).  It is deliberately plain ``jnp`` so the fused Pallas sweep
+kernel (``kernels/fused_sweep.py``) can run the *same function* inside
+the kernel body — that, together with ``core/ky.py::ky_walk`` and a
+shared bit stream, is what makes ``sampler="pallas"`` bitwise-identical
+to the ``sampler="xla"`` path (contract spelled out in
+``docs/kernels.md``).  The Pallas wrapper around the bare LUT lives in
+``kernels/interp_lut.py``; both it and the fused kernel accept
+``interpret=True`` to run on CPU (the CI escape hatch).
 """
 from __future__ import annotations
 
@@ -57,6 +68,16 @@ class InterpTable:
         exact = np.asarray(fn(xs.astype(np.float64)))
         approx = np.asarray(jax.jit(self.__call__)(xs))
         return float(np.max(np.abs(exact - approx)))
+
+
+# Pytree registration: the node values are traced data, the range/shape
+# metadata is static — so an InterpTable can cross a jit boundary (e.g.
+# as the `table` argument of kernels.fused_sweep.fused_gibbs_sample).
+jax.tree_util.register_pytree_node(
+    InterpTable,
+    lambda t: ((t.table,), (t.lo, t.hi, t.m)),
+    lambda aux, ch: InterpTable(table=ch[0], lo=aux[0], hi=aux[1], m=aux[2]),
+)
 
 
 # Pre-built tables used by the Gibbs distribution-generation stage.
@@ -103,6 +124,44 @@ def iu_exp_weights(energies: jax.Array, k: int, table: InterpTable | None = None
     e = jnp.asarray(energies, jnp.float32)
     z = e - jnp.max(e, axis=-1, keepdims=True)
     y = table(z)
+    return jnp.floor(y * (2.0 ** k - 1.0)).astype(jnp.int32)
+
+
+# Labels at or beyond a lane's cardinality are masked to this log-weight
+# before the max-subtract: 4x the compiler chain's per-entry CPT floor
+# (pgm.compile._NEG = -60), far below any reachable real energy, and deep
+# under the exp-LUT's lo clamp so the masked weight quantizes to 0 for
+# every k <= 23 (exp(-16) * (2**23 - 1) < 1).
+MASK_NEG = -240.0
+
+
+def masked_exp_weights(
+    logw: jax.Array,
+    card: jax.Array,
+    k: int,
+    *,
+    use_iu: bool = True,
+    table: "InterpTable | None" = None,
+    mask_value: float = MASK_NEG,
+) -> jax.Array:
+    """Shared Gibbs distribution-generation tail: log-weights -> KY weights.
+
+    ``w = floor(exp(logw - max logw) * (2**k - 1))`` with labels
+    ``>= card`` first masked to ``mask_value`` (they quantize to weight 0
+    for ``k <= 23``), and ``exp`` evaluated through the IU LUT when
+    ``use_iu``.  ``logw`` is (..., L); ``card`` broadcasts against the
+    batch axes (per-node cardinalities for BN/sparse plans, a scalar L
+    for dense grids).  This exact function runs both in the XLA sampler
+    path (via ``pgm.compile.ky_weights``) and *inside* the fused Pallas
+    kernel, so the two are bitwise-comparable by construction.
+    """
+    ls = jnp.arange(logw.shape[-1], dtype=jnp.int32)
+    logw = jnp.where(ls < card[..., None], logw, mask_value)
+    z = logw - jnp.max(logw, axis=-1, keepdims=True)
+    if use_iu:
+        y = (table or _EXP_DEFAULT)(z)
+    else:
+        y = jnp.exp(z)
     return jnp.floor(y * (2.0 ** k - 1.0)).astype(jnp.int32)
 
 

@@ -21,6 +21,19 @@ masking wastes little work.
 The expected number of random bits consumed per sample is ≈ H(p) + 2
 (the paper's headline efficiency metric); ``KYResult.bits_used`` exposes
 the exact per-lane count.
+
+Bit-stream contract (see ``docs/kernels.md``): this module uses a
+**per-lane bit cursor** — lane ``i`` reads bit ``t_i`` of its own uint32
+word row, and ``t_i`` advances only while lane ``i`` is still walking.
+:func:`ky_walk` is the cursor-and-walk core, factored out so the fused
+Pallas sweep kernel (``kernels/fused_sweep.py``) can run the *identical*
+code on the identical pre-generated words — which is what makes the
+engine's ``sampler="pallas"`` path bitwise-interchangeable with
+``sampler="xla"``.  The standalone KY kernel/oracle pair
+(``kernels/ky_sampler.py`` / ``kernels/ref.py::ky_ref``) instead shares a
+**global** bit cursor (every lane reads bit ``it`` of its own stream at
+loop iteration ``it``); the two disciplines consume different bit
+positions and are *not* bit-comparable with each other.
 """
 from __future__ import annotations
 
@@ -45,30 +58,24 @@ def max_levels(k: int, n: int) -> int:
     return int(k + max(int(jnp.ceil(jnp.log2(max(n, 2)))), 1) + 1)
 
 
-def ky_sample(
-    key: jax.Array,
-    weights: jax.Array,
-    *,
-    max_attempts: int = 32,
-    bit_words: jax.Array | None = None,
-) -> KYResult:
-    """Draw one exact sample per lane from non-normalized int32 weights.
+def ky_walk(flat: jax.Array, bit_words: jax.Array) -> KYResult:
+    """Lock-step DDG walk over pre-generated per-lane bit streams.
 
     Args:
-      key: PRNG key (ignored if ``bit_words`` given).
-      weights: (..., n) non-negative int32; rows must not be all-zero.
-      max_attempts: restart budget; non-terminating lanes (prob < 2**-32)
-        fall back to argmax and are flagged ``ok=False``.
-      bit_words: optional pre-generated (..., W) uint32 bit stream — used
-        by tests for bit-exact comparison with the reference/LFSR path.
+      flat: (b, n) non-negative int32 weight rows.
+      bit_words: (b, W) uint32; lane ``i`` consumes bits of row ``i``
+        under the per-lane cursor (bit ``t_i``, advanced only while the
+        lane is active).  The walk budget is ``W * 32`` bits per lane.
 
-    Returns KYResult with ``sample`` shaped like ``weights[..., 0]``.
+    This is the sampling core behind :func:`ky_sample`; the fused Pallas
+    sweep kernel (``kernels/fused_sweep.py``) calls it verbatim inside
+    the kernel body, so both consume identical bit positions and return
+    bitwise-identical results for identical inputs.  Returns a
+    :class:`KYResult` with (b,) fields.
     """
-    w = jnp.asarray(weights, jnp.int32)
-    batch_shape = w.shape[:-1]
-    n = w.shape[-1]
-    flat = w.reshape((-1, n))
-    b = flat.shape[0]
+    flat = jnp.asarray(flat, jnp.int32)
+    b, n = flat.shape
+    budget = int(bit_words.shape[-1]) * 32
 
     total = jnp.sum(flat, axis=-1)
     # Defensive: an all-zero row would hang the walk; force outcome 0.
@@ -77,14 +84,6 @@ def ky_sample(
 
     k_lvl = jnp.maximum(ceil_log2(total), 1)      # per-lane K (>=1)
     reject_w = (jnp.int32(1) << k_lvl) - total    # pad mass (may be 0)
-
-    k_static = 31  # static per-attempt level cap (int32 weights)
-    budget = k_static * max_attempts
-    if bit_words is None:
-        bit_words = rng_lib.random_bit_words(key, (b,), budget)
-    else:
-        bit_words = bit_words.reshape((b, -1))
-        budget = int(bit_words.shape[-1]) * 32
 
     def cond(state):
         done, _, _, _, t, _ = state
@@ -135,11 +134,49 @@ def ky_sample(
     done, _, _, res, t, att = jax.lax.while_loop(cond, body, state)
     # Fallback for (astronomically unlikely) budget exhaustion.
     res = jnp.where(done, res, jnp.argmax(flat, axis=-1).astype(jnp.int32))
+    return KYResult(sample=res, bits_used=t, attempts=att, ok=done)
+
+
+def ky_sample(
+    key: jax.Array,
+    weights: jax.Array,
+    *,
+    max_attempts: int = 32,
+    bit_words: jax.Array | None = None,
+) -> KYResult:
+    """Draw one exact sample per lane from non-normalized int32 weights.
+
+    Args:
+      key: PRNG key (ignored if ``bit_words`` given).
+      weights: (..., n) non-negative int32; rows must not be all-zero.
+      max_attempts: restart budget; non-terminating lanes (prob < 2**-32)
+        fall back to argmax and are flagged ``ok=False``.
+      bit_words: optional pre-generated (..., W) uint32 bit stream — used
+        by tests for bit-exact comparison with the reference/LFSR path.
+
+    Returns KYResult with ``sample`` shaped like ``weights[..., 0]``.
+    The bit stream is read with the per-lane cursor of :func:`ky_walk`;
+    ``kernels/fused_sweep.py`` draws from the same stream for the same
+    ``key``, which is what the engine's ``sampler=`` flag relies on.
+    """
+    w = jnp.asarray(weights, jnp.int32)
+    batch_shape = w.shape[:-1]
+    n = w.shape[-1]
+    flat = w.reshape((-1, n))
+    b = flat.shape[0]
+
+    k_static = 31  # static per-attempt level cap (int32 weights)
+    if bit_words is None:
+        bit_words = rng_lib.random_bit_words(key, (b,), k_static * max_attempts)
+    else:
+        bit_words = bit_words.reshape((b, -1))
+
+    r = ky_walk(flat, bit_words)
     return KYResult(
-        sample=res.reshape(batch_shape),
-        bits_used=t.reshape(batch_shape),
-        attempts=att.reshape(batch_shape),
-        ok=done.reshape(batch_shape),
+        sample=r.sample.reshape(batch_shape),
+        bits_used=r.bits_used.reshape(batch_shape),
+        attempts=r.attempts.reshape(batch_shape),
+        ok=r.ok.reshape(batch_shape),
     )
 
 

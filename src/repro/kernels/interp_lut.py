@@ -10,6 +10,14 @@ one index split (shift/scale), two table reads, and one FMA:
 The table read is expressed with ``jnp.take``; on hardware Mosaic lowers
 small-table gathers directly (a one-hot-matmul fallback would also keep
 it on the MXU).  ``ref.py::interp_ref`` is the jnp oracle.
+
+This standalone kernel demonstrates the IU in isolation; the serving
+hot path instead runs the same LUT lookup *inside* the fused sweep
+kernel (``fused_sweep.py``), where ``core.interp.InterpTable.__call__``
+executes on a VMEM-pinned table between the energy gather and the KY
+walk — see docs/kernels.md for the fused dataflow.  ``interpret=True``
+(default; tests run on CPU) routes through the Pallas interpreter, the
+CPU/CI escape hatch shared by every kernel in this package.
 """
 from __future__ import annotations
 

@@ -17,9 +17,21 @@ cursor).  This keeps the per-iteration bit fetch a scalar-indexed VMEM
 slice instead of a per-lane gather; lanes see iid bits either way.
 ``ref.py::ky_ref`` mirrors these exact semantics for bit-exact testing.
 
+Bit-stream contract (docs/kernels.md): the global cursor makes this
+kernel bit-comparable with ``ref.py::ky_ref`` only.  The engine-facing
+fused sweep kernel (``fused_sweep.py``) instead embeds
+``core/ky.py::ky_walk`` and its **per-lane** cursor — the discipline
+``core.ky.ky_sample`` uses — because its contract is bitwise identity
+with the ``sampler="xla"`` serving path.  The two cursor disciplines
+consume different bit positions and are *not* bit-comparable with each
+other; this module is the standalone kernel/oracle pair, not the hot
+path behind the engine's ``sampler=`` flag.
+
 Block shape: ``(block_b, n_pad)`` with ``n_pad`` a multiple of 128 (VPU
 lane width); zero-padded outcomes contribute empty bit columns and can
-never be selected.
+never be selected.  ``interpret=True`` (the default here; tests run on
+CPU) routes through the Pallas interpreter — the same escape hatch
+``fused_sweep.py`` and ``interp_lut.py`` expose.
 """
 from __future__ import annotations
 

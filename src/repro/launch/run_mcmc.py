@@ -35,6 +35,10 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=0,
                     help="fake host devices for --mesh on CPU")
     ap.add_argument("--no-iu", action="store_true")
+    ap.add_argument("--sampler", choices=("xla", "pallas"), default="xla",
+                    help="sampling backend: two-stage XLA ops or the "
+                         "fused Pallas sweep kernel (bitwise-identical; "
+                         "interpreted off-TPU)")
     ap.add_argument("--evidence", default="",
                     help="BN only: observations, e.g. smoke=1,dysp=1 — "
                          "answers a posterior query via repro.serve")
@@ -79,7 +83,8 @@ def main() -> None:
                else None)
         engine = PosteriorEngine(
             {cfg.network: bn}, chains_per_query=chains, k=cfg.k,
-            use_iu=use_iu, burn_in=cfg.burn_in, telemetry=tel)
+            use_iu=use_iu, sampler=args.sampler, burn_in=cfg.burn_in,
+            telemetry=tel)
         budget = chains * max(sweeps - cfg.burn_in, 1)
         res = engine.answer(Query(cfg.network, evidence, qvars,
                                   n_samples=budget))
@@ -115,7 +120,7 @@ def main() -> None:
         t0 = monotonic()
         x, counts, stats = run_gibbs(
             jax.random.PRNGKey(0), prog, n_chains=chains, n_sweeps=sweeps,
-            burn_in=cfg.burn_in, use_iu=use_iu)
+            burn_in=cfg.burn_in, use_iu=use_iu, sampler=args.sampler)
         jax.block_until_ready(counts)
         dt = monotonic() - t0
         n_samples = chains * sweeps * bn.n_nodes
@@ -145,7 +150,8 @@ def main() -> None:
         mesh = make_pgm_mesh(rows, cols)
         key = jax.random.PRNGKey(0)
         lab, u, pw, valid, _ = shard_mrf(mesh, mrf, n_chains=chains, key=key)
-        step = make_mesh_gibbs_step(mesh, k=cfg.k, use_iu=use_iu)
+        step = make_mesh_gibbs_step(mesh, k=cfg.k, use_iu=use_iu,
+                                    sampler=args.sampler)
         t0 = monotonic()
         bits = 0
         for i in range(sweeps):
@@ -162,7 +168,7 @@ def main() -> None:
         lab, stats = mrf_gibbs(
             jax.random.PRNGKey(1), lab, jnp.asarray(mrf.unary),
             jnp.asarray(mrf.pairwise), n_sweeps=sweeps, k=cfg.k,
-            use_iu=use_iu)
+            use_iu=use_iu, sampler=args.sampler)
         jax.block_until_ready(lab)
         dt = monotonic() - t0
         bits = int(stats.bits_used)

@@ -27,8 +27,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fixedpoint import DEFAULT_K
-from repro.core.interp import exp_table
+from repro.core.interp import exp_table, masked_exp_weights
 from repro.core.ky import ky_sample
+from repro.kernels.fused_sweep import fused_gibbs_sample
 from repro.pgm.coloring import color_bayesnet
 from repro.pgm.graph import BayesNet
 
@@ -216,12 +217,13 @@ def ky_weights(logw: jax.Array, card: jax.Array, k: int,
     plans, arbitrary factor graphs) funnels through — max-subtract,
     LUT exp, ``floor(y * (2^k - 1))`` — so the KY front-end sees one
     weight format regardless of how the energies were gathered.
+
+    Thin wrapper over :func:`repro.core.interp.masked_exp_weights` — the
+    same function the fused Pallas kernel runs *inside* its kernel body,
+    which is what keeps ``sampler="pallas"`` bitwise-comparable.
     """
-    ls = jnp.arange(logw.shape[-1], dtype=jnp.int32)
-    logw = jnp.where(ls < card[..., None], logw, _NEG * 4)
-    z = logw - jnp.max(logw, axis=-1, keepdims=True)
-    y = _EXP(z) if use_iu else jnp.exp(z)
-    return jnp.floor(y * (2.0 ** k - 1.0)).astype(jnp.int32)
+    return masked_exp_weights(logw, card, k, use_iu=use_iu, table=_EXP,
+                              mask_value=_NEG * 4)
 
 
 def _color_update(
@@ -232,6 +234,7 @@ def _color_update(
     max_card: int,
     k: int,
     use_iu: bool,
+    sampler: str = "xla",
 ) -> tuple[jax.Array, BNSweepStats]:
     ls = jnp.arange(max_card, dtype=jnp.int32)            # (L,)
     nodes = jnp.asarray(plan.nodes)
@@ -255,14 +258,25 @@ def _color_update(
     logw = logw + jnp.sum(jnp.take(log_cpt, ch_idx, mode="clip"), axis=-2)
 
     # --- IU-exp → fixed point → KY sample ---------------------------------
-    wts = ky_weights(logw, card, k, use_iu)
-    res = ky_sample(key, wts.reshape((-1, max_card)))
+    # sampler="pallas": mask → LUT-exp → floor → KY walk fused in one
+    # Pallas kernel, weight tile resident in VMEM (kernels/fused_sweep.py);
+    # bitwise-identical to the two-stage XLA path below by construction.
+    if sampler == "pallas":
+        lane_card = jnp.broadcast_to(
+            card[None], logw.shape[:-1]).reshape(-1)
+        res = fused_gibbs_sample(
+            key, logw.reshape((-1, max_card)), lane_card,
+            k=k, use_iu=use_iu, table=_EXP)
+    else:
+        wts = ky_weights(logw, card, k, use_iu)
+        res = ky_sample(key, wts.reshape((-1, max_card)))
     new = res.sample.reshape(logw.shape[:-1]).astype(jnp.int32)  # (B, G)
     x = x.at[:, nodes].set(new)
     return x, BNSweepStats(jnp.sum(res.bits_used), jnp.sum(res.attempts))
 
 
-def make_sweep(prog: CompiledBN, *, use_iu: bool = True):
+def make_sweep(prog: CompiledBN, *, use_iu: bool = True,
+               sampler: str = "xla"):
     """Build the jitted one-sweep function: (key, x) -> (x', stats)."""
     log_cpt = jnp.asarray(prog.log_cpt)
 
@@ -272,7 +286,8 @@ def make_sweep(prog: CompiledBN, *, use_iu: bool = True):
         for i, plan in enumerate(prog.plans):
             key, sub = jax.random.split(key)
             x, st = _color_update(
-                sub, x, plan, log_cpt, prog.max_card, prog.k, use_iu)
+                sub, x, plan, log_cpt, prog.max_card, prog.k, use_iu,
+                sampler)
             bits, att = bits + st.bits_used, att + st.attempts
         return x, BNSweepStats(bits, att)
 
@@ -306,7 +321,8 @@ def init_states(
     return x0
 
 
-@partial(jax.jit, static_argnames=("prog", "n_sweeps", "n_chains", "burn_in", "use_iu"))
+@partial(jax.jit, static_argnames=(
+    "prog", "n_sweeps", "n_chains", "burn_in", "use_iu", "sampler"))
 def _run_gibbs_device(
     key: jax.Array,
     prog: CompiledBN,
@@ -315,6 +331,7 @@ def _run_gibbs_device(
     n_sweeps: int,
     burn_in: int,
     use_iu: bool = True,
+    sampler: str = "xla",
     evidence=None,
 ):
     """Jitted Gibbs scan; stats are *per-sweep* (n_sweeps,) int32 arrays.
@@ -338,7 +355,8 @@ def _run_gibbs_device(
         for plan in prog.plans:
             sub, s2 = jax.random.split(sub)
             x, st = _color_update(
-                s2, x, plan, log_cpt, prog.max_card, prog.k, use_iu)
+                s2, x, plan, log_cpt, prog.max_card, prog.k, use_iu,
+                sampler)
             bits, att = bits + st.bits_used, att + st.attempts
         onehot = (x[..., None] == jnp.arange(prog.max_card)[None, None]).astype(jnp.int32)
         counts = counts + jnp.where(i >= burn_in, jnp.sum(onehot, axis=0), 0)
@@ -358,6 +376,7 @@ def run_gibbs(
     n_sweeps: int,
     burn_in: int,
     use_iu: bool = True,
+    sampler: str = "xla",
     evidence=None,
 ):
     """Run BN Gibbs; returns (final_states, marginal_counts, stats).
@@ -374,7 +393,7 @@ def run_gibbs(
     """
     x, counts, per_sweep = _run_gibbs_device(
         key, prog, n_chains=n_chains, n_sweeps=n_sweeps, burn_in=burn_in,
-        use_iu=use_iu, evidence=evidence)
+        use_iu=use_iu, sampler=sampler, evidence=evidence)
     return x, counts, sum_sweep_stats(per_sweep)
 
 

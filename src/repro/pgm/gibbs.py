@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.core.fixedpoint import DEFAULT_K
 from repro.core.interp import InterpTable, exp_table
 from repro.core.ky import ky_sample
+from repro.kernels.fused_sweep import fused_gibbs_sample
 from repro.pgm.graph import MRFGrid
 
 
@@ -73,7 +74,7 @@ def site_weights(
     return jnp.floor(y * (2.0 ** k - 1.0)).astype(jnp.int32)
 
 
-@partial(jax.jit, static_argnames=("k", "use_iu"))
+@partial(jax.jit, static_argnames=("k", "use_iu", "sampler"))
 def checkerboard_halfstep(
     key: jax.Array,
     labels: jax.Array,          # (B, H, W) int32
@@ -84,6 +85,7 @@ def checkerboard_halfstep(
     clamp: jax.Array | None = None,   # (H, W) or (B, H, W) bool, True = frozen
     k: int = DEFAULT_K,
     use_iu: bool = True,
+    sampler: str = "xla",
 ) -> tuple[jax.Array, SweepStats]:
     """Resample all sites of one checkerboard color, all chains at once.
 
@@ -91,11 +93,23 @@ def checkerboard_halfstep(
     the update and by the bit accounting, but their *fixed* labels still
     sit in ``labels`` and therefore keep contributing pairwise energy to
     their neighbours — exactly CPT conditioning, lattice edition.
+
+    ``sampler="pallas"`` routes the distribution-generation tail and the
+    KY walk through the fused kernel (``kernels/fused_sweep.py``): the
+    per-site energies become negated log-weights (negation is exact, so
+    ``-(e - min e)`` and ``(-e) - max(-e)`` feed the exp LUT the same
+    floats) and the result is bitwise-identical to the XLA path.
     """
     b, h, w = labels.shape
     l = unary.shape[-1]
-    wts = site_weights(labels, unary, pairwise, k=k, use_iu=use_iu)
-    res = ky_sample(key, wts.reshape((-1, l)))
+    if sampler == "pallas":
+        energies = unary[None] + neighbor_pair_energy(labels, pairwise)
+        res = fused_gibbs_sample(
+            key, (-energies).reshape((-1, l)), l, k=k, use_iu=use_iu,
+            table=_EXP)
+    else:
+        wts = site_weights(labels, unary, pairwise, k=k, use_iu=use_iu)
+        res = ky_sample(key, wts.reshape((-1, l)))
     new = res.sample.reshape((b, h, w))
     mask = (((jnp.arange(h)[:, None] + jnp.arange(w)[None, :]) % 2) == parity)[None]
     if clamp is not None:
@@ -109,7 +123,7 @@ def checkerboard_halfstep(
     return labels, stats
 
 
-@partial(jax.jit, static_argnames=("n_sweeps", "k", "use_iu"))
+@partial(jax.jit, static_argnames=("n_sweeps", "k", "use_iu", "sampler"))
 def mrf_gibbs(
     key: jax.Array,
     labels0: jax.Array,
@@ -120,6 +134,7 @@ def mrf_gibbs(
     clamp: jax.Array | None = None,
     k: int = DEFAULT_K,
     use_iu: bool = True,
+    sampler: str = "xla",
 ) -> tuple[jax.Array, SweepStats]:
     """n_sweeps full checkerboard sweeps (2 half-steps each).
 
@@ -134,10 +149,10 @@ def mrf_gibbs(
         key, k0, k1 = jax.random.split(key, 3)
         labels, s0 = checkerboard_halfstep(
             k0, labels, unary, pairwise, jnp.int32(0), clamp=clamp,
-            k=k, use_iu=use_iu)
+            k=k, use_iu=use_iu, sampler=sampler)
         labels, s1 = checkerboard_halfstep(
             k1, labels, unary, pairwise, jnp.int32(1), clamp=clamp,
-            k=k, use_iu=use_iu)
+            k=k, use_iu=use_iu, sampler=sampler)
         return (labels, key), SweepStats(
             bits_used=s0.bits_used + s1.bits_used,
             attempts=s0.attempts + s1.attempts,

@@ -36,6 +36,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.fixedpoint import DEFAULT_K
 from repro.core.interp import exp_table
 from repro.core.ky import ky_sample
+from repro.kernels.fused_sweep import fused_gibbs_sample
 from repro.pgm.graph import MRFGrid
 
 try:
@@ -138,6 +139,7 @@ def make_mesh_gibbs_step(
     col_axis: str = "col",
     k: int = DEFAULT_K,
     use_iu: bool = True,
+    sampler: str = "xla",
     comm: str = "halo",  # "halo" (C3) | "allgather" (global-buffer baseline)
     clamped: bool = False,
 ):
@@ -192,10 +194,17 @@ def make_mesh_gibbs_step(
         def halfstep(labels, parity, subkey):
             padded = gather(labels)
             e = _tile_energies(padded, pvalid, unary_tile, pairwise)
-            z = e - jnp.min(e, axis=-1, keepdims=True)
-            y = _EXP(-z) if use_iu else jnp.exp(-z)
-            wts = jnp.floor(y * (2.0 ** k - 1.0)).astype(jnp.int32)
-            res = ky_sample(subkey, wts.reshape((-1, l)))
+            if sampler == "pallas":
+                # negation is exact, so (-e) - max(-e) == -(e - min e):
+                # the fused kernel sees the same floats as the XLA tail
+                res = fused_gibbs_sample(
+                    subkey, (-e).reshape((-1, l)), l, k=k, use_iu=use_iu,
+                    table=_EXP)
+            else:
+                z = e - jnp.min(e, axis=-1, keepdims=True)
+                y = _EXP(-z) if use_iu else jnp.exp(-z)
+                wts = jnp.floor(y * (2.0 ** k - 1.0)).astype(jnp.int32)
+                res = ky_sample(subkey, wts.reshape((-1, l)))
             new = res.sample.reshape((b, ht, wt))
             gi = row0 + jnp.arange(ht)[:, None]
             gj = col0 + jnp.arange(wt)[None, :]

@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.core.fixedpoint import DEFAULT_K
 from repro.core.ky import ky_sample
+from repro.kernels.fused_sweep import fused_gibbs_sample
 from repro.pgm.coloring import color_graph
 from repro.pgm.compile import BNSweepStats, ky_weights, sum_sweep_stats
 from repro.pgm.graph import FactorGraph, IsingModel
@@ -287,12 +288,26 @@ def _sparse_color_update(
     max_card: int,
     k: int,
     use_iu: bool,
+    sampler: str = "xla",
 ) -> tuple[jax.Array, BNSweepStats]:
-    """Resample every node of one color, all lanes at once."""
+    """Resample every node of one color, all lanes at once.
+
+    ``sampler="pallas"`` hands the negated energies straight to the fused
+    kernel (``kernels/fused_sweep.py``) — ``-energies`` is exactly the
+    log-weight tensor ``ky_weights`` receives, so the fused path is
+    bitwise-identical to the XLA path by construction.
+    """
     nodes = jnp.asarray(plan.nodes)
     energies = _plan_energies(x, plan, unary, tables_flat, max_card)
-    wts = ky_weights(-energies, card[nodes], k, use_iu)
-    res = ky_sample(key, wts.reshape((-1, max_card)))
+    if sampler == "pallas":
+        lane_card = jnp.broadcast_to(
+            card[nodes][None], energies.shape[:-1]).reshape(-1)
+        res = fused_gibbs_sample(
+            key, (-energies).reshape((-1, max_card)), lane_card,
+            k=k, use_iu=use_iu)
+    else:
+        wts = ky_weights(-energies, card[nodes], k, use_iu)
+        res = ky_sample(key, wts.reshape((-1, max_card)))
     new = res.sample.reshape(energies.shape[:-1]).astype(jnp.int32)
     x = x.at[:, nodes].set(new)
     return x, BNSweepStats(jnp.sum(res.bits_used), jnp.sum(res.attempts))
@@ -319,7 +334,8 @@ def site_weights_sparse(
     return out
 
 
-def make_fg_sweep(prog: CompiledFactorGraph, *, use_iu: bool = True):
+def make_fg_sweep(prog: CompiledFactorGraph, *, use_iu: bool = True,
+                  sampler: str = "xla"):
     """Build the jitted one-sweep function: (key, x) -> (x', stats)."""
     unary = jnp.asarray(prog.unary)
     tables_flat = jnp.asarray(prog.tables).reshape(-1)
@@ -332,7 +348,7 @@ def make_fg_sweep(prog: CompiledFactorGraph, *, use_iu: bool = True):
             key, sub = jax.random.split(key)
             x, st = _sparse_color_update(
                 sub, x, plan, unary, tables_flat, card, prog.max_card,
-                prog.k, use_iu)
+                prog.k, use_iu, sampler)
             bits, att = bits + st.bits_used, att + st.attempts
         return x, BNSweepStats(bits, att)
 
@@ -367,7 +383,7 @@ def init_fg_states(
 
 
 @partial(jax.jit, static_argnames=(
-    "prog", "n_sweeps", "n_chains", "burn_in", "use_iu"))
+    "prog", "n_sweeps", "n_chains", "burn_in", "use_iu", "sampler"))
 def _run_fg_gibbs_device(
     key: jax.Array,
     prog: CompiledFactorGraph,
@@ -376,6 +392,7 @@ def _run_fg_gibbs_device(
     n_sweeps: int,
     burn_in: int,
     use_iu: bool = True,
+    sampler: str = "xla",
     evidence=None,
     x0=None,
 ):
@@ -397,7 +414,7 @@ def _run_fg_gibbs_device(
             sub, s2 = jax.random.split(sub)
             x, st = _sparse_color_update(
                 s2, x, plan, unary, tables_flat, card, prog.max_card,
-                prog.k, use_iu)
+                prog.k, use_iu, sampler)
             bits, att = bits + st.bits_used, att + st.attempts
         onehot = (x[..., None]
                   == jnp.arange(prog.max_card)[None, None]).astype(jnp.int32)
@@ -418,6 +435,7 @@ def run_fg_gibbs(
     n_sweeps: int,
     burn_in: int,
     use_iu: bool = True,
+    sampler: str = "xla",
     evidence=None,
     x0=None,
 ):
@@ -432,6 +450,6 @@ def run_fg_gibbs(
     """
     x, counts, per_sweep = _run_fg_gibbs_device(
         key, prog, n_chains=n_chains, n_sweeps=n_sweeps, burn_in=burn_in,
-        use_iu=use_iu, evidence=evidence,
+        use_iu=use_iu, sampler=sampler, evidence=evidence,
         x0=None if x0 is None else jnp.asarray(x0, jnp.int32))
     return x, counts, sum_sweep_stats(per_sweep)

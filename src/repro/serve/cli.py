@@ -278,6 +278,9 @@ def measure_stream(engine, sync_engine, traffic: list[Query],
         "p50_ms": float(p50),
         "p99_ms": float(p99),
         "converged": int(sum(r.converged for r in results)),
+        # raw and effective throughput side by side: MSample/s is the
+        # paper's headline unit, ESS/s the honest mixing-adjusted one
+        "msample_per_s": sum(r.n_node_samples for r in results) / wall / 1e6,
         "ess_per_s": ess_total(results) / wall,
         "dispatched_groups": st.dispatched_groups,
         "backfilled": st.backfilled,

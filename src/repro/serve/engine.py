@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import itertools
 import math
+import os
 from dataclasses import dataclass
 from typing import Mapping
 
@@ -517,6 +518,7 @@ class PosteriorEngine:
         max_rounds: int = 64,
         k: int = DEFAULT_K,
         use_iu: bool = True,
+        sampler: str | None = None,
         quantize_cpt_bits: int | None = 16,
         cache: PlanCache | None = None,
         mesh=None,
@@ -542,6 +544,14 @@ class PosteriorEngine:
         self.max_rounds = int(max_rounds)
         self.k = k
         self.use_iu = use_iu
+        # sampler backend: "xla" (two-stage weights + KY) or "pallas"
+        # (fused sweep kernel, bitwise-identical); None defers to the
+        # REPRO_SAMPLER env var (the CI matrix knob), then "xla".
+        sampler = sampler or os.environ.get("REPRO_SAMPLER") or "xla"
+        if sampler not in ("xla", "pallas"):
+            raise ValueError(
+                f"sampler {sampler!r} not in ('xla', 'pallas')")
+        self.sampler = sampler
         self.quantize_cpt_bits = quantize_cpt_bits
         self.cache = cache if cache is not None else PlanCache()
         self.mesh = mesh
@@ -581,6 +591,7 @@ class PosteriorEngine:
         salt = None if model is None else family_of(model).plan_salt(model)
         return plan_key(
             name, pattern, k=self.k, use_iu=self.use_iu,
+            sampler=self.sampler,
             quantize_cpt_bits=self.quantize_cpt_bits,
             sweeps_per_round=self.sweeps_per_round, thin=self.thin,
             mesh_fingerprint=mesh_fingerprint(self.mesh),
@@ -610,7 +621,8 @@ class PosteriorEngine:
                     fam.save_persisted(path, prog)
             runner = fam.make_runner(
                 prog, sweeps_per_round=self.sweeps_per_round,
-                thin=self.thin, use_iu=self.use_iu, mesh=self.mesh)
+                thin=self.thin, use_iu=self.use_iu,
+                sampler=self.sampler, mesh=self.mesh)
             return prog, runner
 
         (prog, runner), hit = self.cache.get(

@@ -45,7 +45,7 @@ from repro.sharding.specs import (
 
 # -- round runners ---------------------------------------------------------
 def make_round_runner(prog, *, sweeps_per_round: int, thin: int,
-                      use_iu: bool, mesh=None):
+                      use_iu: bool, sampler: str = "xla", mesh=None):
     """Jitted ``(key, x, offset) -> (x, counts, xmean, xsq, stats)`` per
     round (Bayesian-network family).
 
@@ -94,7 +94,7 @@ def make_round_runner(prog, *, sweeps_per_round: int, thin: int,
             for plan in prog.plans:
                 sub, s2 = jax.random.split(sub)
                 x, st = _color_update(
-                    s2, x, plan, log_cpt, L, prog.k, use_iu)
+                    s2, x, plan, log_cpt, L, prog.k, use_iu, sampler)
                 bits, att = bits + st.bits_used, att + st.attempts
             onehot = (x[..., None] == jnp.arange(L)).astype(jnp.int32)
             kept = ((offset + i) % thin) == 0
@@ -120,7 +120,8 @@ def make_round_runner(prog, *, sweeps_per_round: int, thin: int,
 
 
 def make_mrf_round_runner(prog: CompiledMRF, *, sweeps_per_round: int,
-                          thin: int, use_iu: bool, mesh=None):
+                          thin: int, use_iu: bool, sampler: str = "xla",
+                          mesh=None):
     """Jitted ``(key, x, offset) -> (x, counts, xmean, xsq, stats)`` per
     round (MRF family) — same contract as :func:`make_round_runner`,
     over the flat site space.
@@ -159,10 +160,10 @@ def make_mrf_round_runner(prog: CompiledMRF, *, sweeps_per_round: int,
             key, k0, k1 = jax.random.split(key, 3)
             x, s0 = checkerboard_halfstep(
                 k0, x, unary, pairwise, jnp.int32(0), clamp=clamp,
-                k=prog.k, use_iu=use_iu)
+                k=prog.k, use_iu=use_iu, sampler=sampler)
             x, s1 = checkerboard_halfstep(
                 k1, x, unary, pairwise, jnp.int32(1), clamp=clamp,
-                k=prog.k, use_iu=use_iu)
+                k=prog.k, use_iu=use_iu, sampler=sampler)
             flat = x.reshape(b, h * w)
             onehot = (flat[..., None] == jnp.arange(L)).astype(jnp.int32)
             kept = ((offset + i) % thin) == 0
@@ -190,7 +191,7 @@ def make_mrf_round_runner(prog: CompiledMRF, *, sweeps_per_round: int,
 
 def make_fg_round_runner(prog: CompiledFactorGraph, *,
                          sweeps_per_round: int, thin: int, use_iu: bool,
-                         mesh=None):
+                         sampler: str = "xla", mesh=None):
     """Jitted ``(key, x, offset) -> (x, counts, xmean, xsq, stats)`` per
     round (sparse factor-graph / Ising family) — same contract as
     :func:`make_round_runner`, over the graph's flat node space.
@@ -228,7 +229,7 @@ def make_fg_round_runner(prog: CompiledFactorGraph, *,
                 sub, s2 = jax.random.split(sub)
                 x, st = _sparse_color_update(
                     s2, x, plan, unary, tables_flat, card, L, prog.k,
-                    use_iu)
+                    use_iu, sampler)
                 bits, att = bits + st.bits_used, att + st.attempts
             onehot = (x[..., None] == jnp.arange(L)).astype(jnp.int32)
             kept = ((offset + i) % thin) == 0
@@ -275,10 +276,11 @@ class BayesNetFamily:
             model, k=k, quantize_cpt_bits=quantize_cpt_bits,
             observed=pattern)
 
-    def make_runner(self, prog, *, sweeps_per_round, thin, use_iu, mesh):
+    def make_runner(self, prog, *, sweeps_per_round, thin, use_iu,
+                    sampler="xla", mesh=None):
         return make_round_runner(
             prog, sweeps_per_round=sweeps_per_round, thin=thin,
-            use_iu=use_iu, mesh=mesh)
+            use_iu=use_iu, sampler=sampler, mesh=mesh)
 
     def init_states(self, key, prog, n_lanes, evidence_values):
         return init_states(key, prog, n_lanes, evidence_values)
@@ -386,10 +388,11 @@ class MrfFamily:
         # CPTs, so it does not apply here (it still keys the plan cache)
         return compile_mrf(model, k=k, observed=pattern)
 
-    def make_runner(self, prog, *, sweeps_per_round, thin, use_iu, mesh):
+    def make_runner(self, prog, *, sweeps_per_round, thin, use_iu,
+                    sampler="xla", mesh=None):
         return make_mrf_round_runner(
             prog, sweeps_per_round=sweeps_per_round, thin=thin,
-            use_iu=use_iu, mesh=mesh)
+            use_iu=use_iu, sampler=sampler, mesh=mesh)
 
     def init_states(self, key, prog, n_lanes, evidence_values):
         return init_mrf_states(key, prog, n_lanes, evidence_values)
@@ -469,10 +472,11 @@ class IsingFamily:
         # energies, not CPTs (it still keys the plan cache)
         return compile_factor_graph(model, k=k, observed=pattern)
 
-    def make_runner(self, prog, *, sweeps_per_round, thin, use_iu, mesh):
+    def make_runner(self, prog, *, sweeps_per_round, thin, use_iu,
+                    sampler="xla", mesh=None):
         return make_fg_round_runner(
             prog, sweeps_per_round=sweeps_per_round, thin=thin,
-            use_iu=use_iu, mesh=mesh)
+            use_iu=use_iu, sampler=sampler, mesh=mesh)
 
     def init_states(self, key, prog, n_lanes, evidence_values):
         return init_fg_states(key, prog, n_lanes, evidence_values)

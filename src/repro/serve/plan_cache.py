@@ -55,6 +55,7 @@ def plan_key(
     quantize_cpt_bits: int | None,
     sweeps_per_round: int,
     thin: int,
+    sampler: str = "xla",
     mesh_fingerprint=None,
     model_salt=None,
 ) -> tuple:
@@ -75,8 +76,9 @@ def plan_key(
     :func:`graph_fingerprint` there.  Families whose plans depend only
     on (name, pattern, knobs) leave it None.
     """
-    return (network, pattern_key(pattern), k, use_iu, quantize_cpt_bits,
-            sweeps_per_round, thin, mesh_fingerprint, model_salt)
+    return (network, pattern_key(pattern), k, use_iu, sampler,
+            quantize_cpt_bits, sweeps_per_round, thin, mesh_fingerprint,
+            model_salt)
 
 
 @dataclass

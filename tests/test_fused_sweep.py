@@ -1,0 +1,93 @@
+"""Fused Pallas sweep kernel (kernels/fused_sweep.py): bitwise identity
+with the two-stage XLA path — the ``sampler="pallas"`` contract pinned
+in docs/kernels.md — plus ragged batches, per-lane cardinalities, the
+jnp.exp fallback, and the k-cap guard."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fixedpoint import DEFAULT_K
+from repro.core.interp import exp_table, masked_exp_weights
+from repro.core.ky import ky_sample
+from repro.kernels.fused_sweep import (
+    MAX_FUSED_K, fused_gibbs_sample, fused_gibbs_sample_ref)
+
+
+def _logw(seed, b, n):
+    p = jax.random.dirichlet(jax.random.PRNGKey(seed), jnp.ones(n), (b,))
+    return jnp.log(jnp.clip(p, 1e-7, None))
+
+
+def _assert_identical(got, want):
+    """All four KYResult fields: sample, bits_used, attempts, ok."""
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def _two_stage(key, logw, card, k, use_iu=True):
+    return ky_sample(key, masked_exp_weights(logw, card, k, use_iu=use_iu))
+
+
+class TestFusedBitwise:
+    @pytest.mark.parametrize("b,n", [(64, 4), (256, 16), (300, 5), (7, 3)])
+    def test_matches_two_stage_xla(self, b, n):
+        """The kernel, its pure-XLA ref twin, and the literal two-stage
+        path agree bit for bit — non-multiple-of-block_b batches and
+        non-multiple-of-128 label counts exercise the padding."""
+        logw = _logw(b * 100 + n, b, n)
+        key = jax.random.PRNGKey(b + n)
+        xla = _two_stage(key, logw, jnp.int32(n), DEFAULT_K)
+        fused = fused_gibbs_sample(key, logw, n, k=DEFAULT_K)
+        ref = fused_gibbs_sample_ref(key, logw, n, k=DEFAULT_K)
+        _assert_identical(fused, xla)
+        _assert_identical(ref, xla)
+        assert bool(fused.ok.all())
+
+    def test_per_lane_cardinality(self):
+        """Lanes with card < n mask their high labels to weight zero —
+        the sparse factor-graph family's mixed-cardinality case."""
+        b, n = 96, 6
+        logw = _logw(7, b, n)
+        card = jnp.asarray([(i % (n - 1)) + 2 for i in range(b)], jnp.int32)
+        key = jax.random.PRNGKey(3)
+        fused = fused_gibbs_sample(key, logw, card, k=DEFAULT_K)
+        _assert_identical(fused, _two_stage(key, logw, card, DEFAULT_K))
+        assert bool((fused.sample < card).all())
+
+    def test_use_iu_false_jnp_exp_path(self):
+        logw = _logw(11, 40, 4)
+        key = jax.random.PRNGKey(5)
+        fused = fused_gibbs_sample(key, logw, 4, k=DEFAULT_K, use_iu=False)
+        _assert_identical(
+            fused, _two_stage(key, logw, jnp.int32(4), DEFAULT_K,
+                              use_iu=False))
+
+    def test_explicit_table_and_k_at_cap(self):
+        """A caller-supplied LUT and the largest legal k both hold the
+        identity (k = MAX_FUSED_K is where masked labels are closest to
+        quantizing to a nonzero weight)."""
+        tab = exp_table()
+        logw = _logw(13, 64, 8)
+        key = jax.random.PRNGKey(9)
+        fused = fused_gibbs_sample(key, logw, 8, k=MAX_FUSED_K, table=tab)
+        xla = ky_sample(key, masked_exp_weights(
+            logw, jnp.int32(8), MAX_FUSED_K, table=tab))
+        _assert_identical(fused, xla)
+
+    def test_k_above_cap_rejected(self):
+        """k > MAX_FUSED_K would let masked labels quantize to nonzero
+        weight, silently breaking the mask — refused up front."""
+        with pytest.raises(ValueError, match="fused sampler requires"):
+            fused_gibbs_sample(jax.random.PRNGKey(0), _logw(0, 8, 4), 4,
+                               k=MAX_FUSED_K + 1)
+
+    def test_block_b_invariance(self):
+        """Results are independent of the launch geometry: the bit words
+        are generated at the true lane count, so re-tiling cannot change
+        the stream (the threefry counter-pairing hazard)."""
+        logw = _logw(17, 100, 4)
+        key = jax.random.PRNGKey(21)
+        a = fused_gibbs_sample(key, logw, 4, k=DEFAULT_K, block_b=32)
+        b = fused_gibbs_sample(key, logw, 4, k=DEFAULT_K, block_b=256)
+        _assert_identical(a, b)

@@ -9,9 +9,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.pgm import compile_bayesnet, init_states, make_sweep, networks, run_gibbs
+from repro.pgm import (
+    compile_bayesnet, compile_factor_graph, compile_mrf, init_fg_states,
+    init_mrf_states, init_states, make_sweep, networks, run_gibbs)
+from repro.pgm.graph import MRFGrid
 from repro.serve import (
-    PlanCache, PosteriorEngine, Query, load_compiled, make_round_runner,
+    AdmissionQueue, PlanCache, PosteriorEngine, Query, load_compiled,
+    make_fg_round_runner, make_mrf_round_runner, make_round_runner,
     parse_evidence, persisted_plan_path, save_compiled, split_rhat)
 
 
@@ -351,3 +355,82 @@ class TestServeCLI:
         assert "stream:" in out and "p50" in out and "speedup" in out
         import os
         assert any(f.endswith(".npz") for f in os.listdir(cache_dir)), out
+
+
+class TestPallasSampler:
+    """``sampler="pallas"`` ≡ ``sampler="xla"`` bit for bit, at every
+    layer the flag reaches: the three family round runners and the
+    queued serving path (docs/kernels.md pins the contract)."""
+
+    @staticmethod
+    def _assert_rounds_identical(run_xla, run_pallas, key, x, offset):
+        out_x = run_xla(key, x, offset)
+        out_p = run_pallas(key, x, offset)
+        for a, b in zip(jax.tree_util.tree_leaves(out_x),
+                        jax.tree_util.tree_leaves(out_p)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_bn_round_runner_bitwise(self):
+        prog = compile_bayesnet(networks.asia())
+        mk = lambda s: make_round_runner(
+            prog, sweeps_per_round=4, thin=1, use_iu=True, sampler=s)
+        x = init_states(jax.random.PRNGKey(0), prog, 4)
+        self._assert_rounds_identical(
+            mk("xla"), mk("pallas"), jax.random.PRNGKey(1), x, jnp.int32(0))
+
+    def test_mrf_round_runner_bitwise(self):
+        rng = np.random.default_rng(0)
+        mrf_prog = compile_mrf(MRFGrid.potts(
+            rng.normal(0, 1, (6, 6, 3)).astype(np.float32), beta=0.6))
+        mk = lambda s: make_mrf_round_runner(
+            mrf_prog, sweeps_per_round=4, thin=1, use_iu=True, sampler=s)
+        x = init_mrf_states(jax.random.PRNGKey(0), mrf_prog, 2)
+        self._assert_rounds_identical(
+            mk("xla"), mk("pallas"), jax.random.PRNGKey(2), x, jnp.int32(0))
+
+    def test_ising_round_runner_bitwise(self):
+        prog = compile_factor_graph(networks.ising_torus(4, beta=0.4))
+        mk = lambda s: make_fg_round_runner(
+            prog, sweeps_per_round=4, thin=1, use_iu=True, sampler=s)
+        x = init_fg_states(jax.random.PRNGKey(0), prog, 4)
+        self._assert_rounds_identical(
+            mk("xla"), mk("pallas"), jax.random.PRNGKey(3), x, jnp.int32(0))
+
+    def test_engine_marginals_bitwise(self):
+        """End to end through answer_batch: identical marginals, counts,
+        and diagnostics for the same seed."""
+        kw = dict(chains_per_query=4, burn_in=8, sweeps_per_round=8,
+                  max_rounds=4, seed=11)
+        qs = [Query("sprinkler", {"wetgrass": 1}, ("rain",), n_samples=256),
+              Query("asia", {"smoke": 1}, ("lung",), n_samples=256)]
+        rx = PosteriorEngine(_registry(), sampler="xla", **kw).answer_batch(qs)
+        rp = PosteriorEngine(
+            _registry(), sampler="pallas", **kw).answer_batch(qs)
+        for a, b in zip(rx, rp):
+            assert a.n_samples == b.n_samples
+            for var in a.marginals:
+                np.testing.assert_array_equal(a.marginal(var),
+                                              b.marginal(var))
+
+    @pytest.mark.slow
+    def test_queued_identical_to_answer_batch_under_pallas(self):
+        """The queue reroutes scheduling, never sampling — so streamed
+        dispatch under the pallas sampler still matches answer_batch."""
+        kw = dict(chains_per_query=4, burn_in=8, sweeps_per_round=8,
+                  max_rounds=4, sampler="pallas", seed=11)
+        qs = [Query("sprinkler", {"wetgrass": 1}, ("rain",), n_samples=256),
+              Query("sprinkler", {"wetgrass": 0}, ("rain",), n_samples=256)]
+        ref = PosteriorEngine(_registry(), **kw).answer_batch(qs)
+        queue = AdmissionQueue(PosteriorEngine(_registry(), **kw),
+                               max_wait_ms=3_600_000.0)
+        try:
+            hs = [queue.submit(q) for q in qs]
+            queue.flush()
+            got = [h.result(timeout=300.0) for h in hs]
+        finally:
+            queue.close()
+        for a, b in zip(ref, got):
+            assert a.n_samples == b.n_samples
+            for var in a.marginals:
+                np.testing.assert_array_equal(a.marginal(var),
+                                              b.marginal(var))
