@@ -20,6 +20,13 @@ Invocation forms:
   PYTHONPATH=src:. python -m benchmarks.bench_serve --scaling 1,2,4,8 \\
       --json BENCH_serve.json                  # device-scaling subprocesses
 
+Every report also carries a ``map`` section (annealed MAP/MPE queries/s
+under assignment-stability retirement, :func:`run_map`) and a
+``filtering`` section (temporal dynamic-BN filtering: per-slice latency
+of warm-started streaming-sensor slices vs cold re-solves, with the
+per-slice plan-cache hit rate the gate holds at 100% after slice 0,
+:func:`run_filtering`) — see ``docs/inference_modes.md``.
+
 ``--stream`` adds the open-loop streaming benchmark: traffic arrives at
 a fixed rate (default 4x the measured synchronous rate), is served
 through the admission queue (:mod:`repro.serve.queue`), and reported as
@@ -128,10 +135,14 @@ def run(name, network, *, n_queries=32, n_patterns=3, budget=2048,
 
 
 def _identical(a, b) -> bool:
-    return (a.n_samples == b.n_samples and a.rhat == b.rhat
+    return (a.n_samples == b.n_samples
+            and (a.rhat == b.rhat
+                 or (np.isnan(a.rhat) and np.isnan(b.rhat)))
             and set(a.marginals) == set(b.marginals)
             and all(np.array_equal(a.marginals[k], b.marginals[k])
-                    for k in a.marginals))
+                    for k in a.marginals)
+            and a.map_assignment == b.map_assignment
+            and a.map_energy == b.map_energy)
 
 
 def run_mrf(name, *, h=16, w=16, n_queries=12, n_patterns=2, budget=1024,
@@ -392,6 +403,135 @@ def run_stream(name, network, *, n_queries=32, n_patterns=2, budget=2048,
             "identical": bool(identical)}
 
 
+def run_map(name, network, *, n_queries=16, n_patterns=2, budget=1024,
+            chains=16, mesh=None, report=print):
+    """Annealed MAP/MPE serving benchmark: cold + warm qps for
+    ``mode="map"`` traffic (simulated-annealing β schedule on the IU-exp
+    weight path, assignment-stability retirement — see
+    ``docs/inference_modes.md``).  The MAP rows live in their own report
+    section rather than ``runs`` because ESS/s is not a meaningful
+    throughput for annealed (deliberately non-mixing) chains; the gate
+    compares warm queries/s only.  ``assignments_agree`` reports whether
+    the cold and warm passes decoded the same argmax per query —
+    informational (the passes consume different key-stream positions, so
+    a near-tie can legitimately flip)."""
+    import dataclasses
+
+    from repro.pgm import networks
+    from repro.serve.cli import synthetic_traffic
+    from repro.serve.engine import PosteriorEngine
+
+    bn = getattr(networks, network)()
+    traffic = [dataclasses.replace(q, mode="map") for q in synthetic_traffic(
+        bn, network, n_queries, n_patterns, np.random.default_rng(0), budget)]
+    engine = PosteriorEngine({network: bn}, chains_per_query=chains,
+                             burn_in=32, mesh=mesh)
+    cold_dt, _, cold_results = _pass(engine, traffic)
+    warm_dt, _, results = _pass(engine, traffic)
+    stable = sum(r.converged for r in results)
+    agree = sum(a.map_assignment == b.map_assignment
+                for a, b in zip(cold_results, results))
+    energy = float(np.mean([r.map_energy for r in results]))
+    s = engine.cache.stats
+    report(row(
+        f"serve_{name}_cold", cold_dt / n_queries * 1e6,
+        f"qps={n_queries/cold_dt:.2f};mode=map"))
+    report(row(
+        f"serve_{name}_warm", warm_dt / n_queries * 1e6,
+        f"qps={n_queries/warm_dt:.2f};speedup={cold_dt/warm_dt:.1f}x;"
+        f"hit_rate={s.hit_rate:.2f};map_stable={stable}/{n_queries};"
+        f"agree={agree}/{n_queries};mean_energy={energy:.2f}"))
+    return {
+        "name": name,
+        "network": network,
+        "n_queries": n_queries,
+        "retirement": engine.retirement,
+        "cold": {"wall_s": cold_dt, "queries_per_s": n_queries / cold_dt},
+        "warm": {"wall_s": warm_dt, "queries_per_s": n_queries / warm_dt},
+        "map_stable": int(stable),
+        "assignments_agree": int(agree),
+        "mean_map_energy": energy,
+        "cache_hit_rate": s.hit_rate,
+    }
+
+
+def run_filtering(name, network, *, n_streams=4, n_slices=6, budget=1024,
+                  chains=8, burn_in=128, drift=0.25, mesh=None,
+                  report=print):
+    """Temporal filtering benchmark: per-slice latency for streaming-
+    sensor traffic served *warm* (``stream_id`` set — each slice
+    warm-starts from its stream's retained chains and skips burn-in) vs
+    *cold* (identical traffic with ``stream_id`` stripped — every slice
+    pays burn-in from scratch).  Both passes run through one engine, so
+    everything after the cold pass's first slice is plan-cache-hot and
+    the cold/warm latency ratio isolates the warm-start mechanism.
+
+    Reported per the acceptance bar of ``docs/inference_modes.md``: the
+    warm pass's per-slice plan-cache hit rate (must be 100% after slice
+    0 — the gate fails otherwise), warm-started query counts per slice,
+    and the cold/warm per-slice latency ratio
+    ``benchmarks/check_serve_regression.py`` holds above
+    ``--min-filtering-speedup``."""
+    import dataclasses
+
+    from repro.pgm import networks
+    from repro.serve.cli import synthetic_stream_traffic
+    from repro.serve.engine import PosteriorEngine
+
+    bn = getattr(networks, network)()
+    traffic = synthetic_stream_traffic(
+        bn, network, n_streams, n_slices, np.random.default_rng(0), budget,
+        drift=drift)
+    slices = [traffic[i * n_streams:(i + 1) * n_streams]
+              for i in range(n_slices)]
+    engine = PosteriorEngine({network: bn}, chains_per_query=chains,
+                             burn_in=burn_in, mesh=mesh)
+
+    def _slice_pass(strip):
+        times, hit_rates, warm = [], [], 0
+        for sl in slices:
+            qs = ([dataclasses.replace(q, stream_id=None) for q in sl]
+                  if strip else sl)
+            h0, m0 = engine.cache.stats.hits, engine.cache.stats.misses
+            t0 = time.perf_counter()
+            results = engine.answer_batch(qs)
+            times.append(time.perf_counter() - t0)
+            dh = engine.cache.stats.hits - h0
+            dm = engine.cache.stats.misses - m0
+            hit_rates.append(dh / max(dh + dm, 1))
+            warm += sum(r.warm_start for r in results)
+        return times, hit_rates, warm
+
+    cold_times, _, _ = _slice_pass(strip=True)       # also warms the plans
+    warm_times, warm_hits, warm_started = _slice_pass(strip=False)
+
+    cold_ms = float(np.mean(cold_times[1:])) * 1e3
+    warm_ms = float(np.mean(warm_times[1:])) * 1e3
+    speedup = cold_ms / max(warm_ms, 1e-9)
+    hit_after_0 = float(min(warm_hits[1:]))
+    expected_warm = n_streams * (n_slices - 1)
+    report(row(
+        f"serve_{name}", warm_ms * 1e3,
+        f"warm_slice_ms={warm_ms:.1f};cold_slice_ms={cold_ms:.1f};"
+        f"speedup={speedup:.2f}x;hit_rate_after_slice0={hit_after_0:.2f};"
+        f"warm_started={warm_started}/{expected_warm}"))
+    return {
+        "name": name,
+        "network": network,
+        "n_streams": n_streams,
+        "n_slices": n_slices,
+        "burn_in": burn_in,
+        "retirement": engine.retirement,
+        "cold_slice_ms": cold_ms,
+        "warm_slice_ms": warm_ms,
+        "slices_per_s_warm": 1e3 / max(warm_ms, 1e-9),
+        "speedup": speedup,
+        "warm_hit_rate_after_slice0": hit_after_0,
+        "warm_started": int(warm_started),
+        "expected_warm": int(expected_warm),
+    }
+
+
 def run_telemetry_overhead(network="asia", *, n_queries=16, n_patterns=2,
                            budget=2048, chains=16, repeats=8, report=print):
     """Null-recorder vs live-recorder warm throughput on identical
@@ -476,7 +616,13 @@ def run_sampler_compare(network="asia", *, n_queries=8, n_patterns=2,
     bit.  The regression gate holds ``identical`` unconditionally; the
     speedup is only meaningful off-CPU (on CPU the fused kernel runs
     through the Pallas *interpreter*), so the report carries the
-    ``platform`` for the gate to condition on."""
+    ``platform`` for the gate to condition on.
+
+    The traffic covers *both* inference modes: the marginal queries get
+    MAP-mode twins appended, so the one matrix row also pins the
+    annealed (β-scaled) weight path to xla/pallas bitwise identity."""
+    import dataclasses
+
     import jax
 
     from repro.pgm import networks
@@ -486,6 +632,9 @@ def run_sampler_compare(network="asia", *, n_queries=8, n_patterns=2,
     bn = getattr(networks, network)()
     traffic = synthetic_traffic(
         bn, network, n_queries, n_patterns, np.random.default_rng(0), budget)
+    traffic = traffic + [dataclasses.replace(q, mode="map")
+                         for q in traffic[:max(n_patterns, 2)]]
+    n_queries = len(traffic)
     out = {"network": network, "platform": jax.default_backend(),
            "n_queries": n_queries}
     results = {}
@@ -495,9 +644,13 @@ def run_sampler_compare(network="asia", *, n_queries=8, n_patterns=2,
         _pass(engine, traffic)                       # warm the plan cache
         dt, samples, res = _pass(engine, traffic)
         results[sampler] = res
+        # ESS is a mixing metric — meaningless for the annealed MAP
+        # twins, so the throughput row counts only the marginal queries
         out[sampler] = {"wall_s": dt, "queries_per_s": n_queries / dt,
                         "msample_per_s": samples / dt / 1e6,
-                        "ess_per_s": _ess(res) / dt}
+                        "ess_per_s": _ess(
+                            [r for r in res if r.map_assignment is None]
+                        ) / dt}
         report(row(f"serve_sampler_{sampler}", dt / n_queries * 1e6,
                    f"MSample/s={out[sampler]['msample_per_s']:.3f};"
                    f"platform={out['platform']}"))
@@ -591,6 +744,22 @@ def main(report=print, *, smoke=False, stream=False, mesh_shape=None,
            "retirement": modes.pop(),
            "mesh_shape": None if mesh_shape is None else list(mesh_shape),
            "runs": runs}
+    # MAP qps + temporal-filtering rows (docs/inference_modes.md): their
+    # own sections — ESS/s is not meaningful for annealed chains, and
+    # the filtering row is per-slice latency, not per-query throughput
+    if smoke:
+        rep["map"] = run_map("asia_map", "asia", n_queries=8, budget=512,
+                             chains=8, **kw)
+        rep["filtering"] = run_filtering(
+            "asia_filtering", "asia", n_streams=3, n_slices=4, budget=512,
+            **kw)
+    else:
+        rep["map"] = run_map("asia_map", "asia", **kw)
+        rep["filtering"] = run_filtering("asia_filtering", "asia", **kw)
+    for section in ("map", "filtering"):
+        if rep[section].pop("retirement") != rep["retirement"]:
+            raise RuntimeError(
+                f"{section} run used a different retirement mode")
     if stream:
         stream_kw = dict(kw, trace_out=trace_out, metrics_out=metrics_out)
         if smoke:

@@ -21,6 +21,18 @@ Checks, per run matched by name against the baseline:
 * the streaming section (when both reports carry one): queued queries/s
   under the same tolerance, queued-vs-synchronous speedup at least
   ``--min-stream-speedup``, and the stream identity bit must be True.
+* the ``map`` section (annealed MAP/MPE serving,
+  ``docs/inference_modes.md``): warm queries/s under the same
+  tolerance.  ESS/s is deliberately not compared — annealed chains
+  don't mix, so effective-sample throughput is not a meaningful number
+  for ``mode="map"``.
+* the ``filtering`` section (temporal dynamic-BN filtering): the warm
+  pass's per-slice plan-cache hit rate after slice 0 must be exactly
+  100% and every post-slice-0 query must report ``warm_start`` — both
+  are contract bits, not perf numbers — plus the cold/warm per-slice
+  latency ratio at least ``--min-filtering-speedup`` (self-relative:
+  warm slices skip burn-in, cold re-solves pay it) and warm slices/s
+  against the baseline under the shared tolerance.
 * the ``sampler_pallas`` section (when the current report carries one):
   the fused-kernel-vs-XLA bitwise ``identical`` bit must be True on
   every platform — it is the whole contract of ``sampler="pallas"`` —
@@ -125,6 +137,7 @@ def check(current: dict, baseline: dict, *, tolerance: float,
           min_stream_speedup: float,
           telemetry_overhead_tolerance: float = 0.05,
           min_pallas_speedup: float = 1.0,
+          min_filtering_speedup: float = 1.2,
           ) -> tuple[list[Failure], list[Failure]]:
     """Returns ``(regressions, setup_errors)`` — setup errors (exit 2)
     are comparisons that *cannot* be made: current runs with no baseline
@@ -205,6 +218,80 @@ def check(current: dict, baseline: dict, *, tolerance: float,
             note="baseline has a stream section but current doesn't "
                  "(did the bench run without --stream?)"))
 
+    # MAP section (annealed MAP/MPE qps — docs/inference_modes.md):
+    # warm queries/s against the baseline under the shared tolerance.
+    # ESS/s is deliberately absent (annealed chains don't mix), and the
+    # cold-vs-warm assignment agreement is informational only — the two
+    # passes consume different key-stream positions.
+    map_sec, base_map = current.get("map"), baseline.get("map")
+    if map_sec is not None:
+        if base_map is not None:
+            f = _qps_check("map.warm.queries_per_s",
+                           map_sec["warm"]["queries_per_s"],
+                           base_map["warm"]["queries_per_s"], tolerance)
+            if f:
+                failures.append(f)
+        else:
+            setup.append(Failure(
+                "map.warm.queries_per_s",
+                observed=round(map_sec["warm"]["queries_per_s"], 3),
+                note="no baseline map section — refresh the baseline "
+                     "with --update and commit it"))
+    elif base_map is not None:
+        failures.append(Failure(
+            "map", observed="absent",
+            note="baseline has a map section but current doesn't"))
+
+    # temporal-filtering section: two self-relative contract bits (the
+    # warm pass's per-slice plan-cache hit rate must be 100% after
+    # slice 0, and every post-slice-0 query must have warm-started)
+    # plus the cold/warm per-slice latency ratio against its floor and
+    # the warm per-slice throughput against the baseline.
+    filt, base_filt = current.get("filtering"), baseline.get("filtering")
+    if filt is not None:
+        hit = filt.get("warm_hit_rate_after_slice0", 0.0)
+        speedup = filt.get("speedup", 0.0)
+        print(f"filtering: warm {filt['warm_slice_ms']:.1f} ms/slice vs "
+              f"cold {filt['cold_slice_ms']:.1f} ms/slice — "
+              f"{speedup:.2f}x (floor {min_filtering_speedup:.2f}x), "
+              f"post-slice-0 hit rate {hit:.2f}, warm-started "
+              f"{filt['warm_started']}/{filt['expected_warm']}")
+        if hit < 1.0:
+            failures.append(Failure(
+                "filtering.warm_hit_rate_after_slice0",
+                observed=round(hit, 3), floor=1.0,
+                note="a post-slice-0 slice missed the plan cache — "
+                     "slice traffic should reuse its stream's plan"))
+        if filt["warm_started"] != filt["expected_warm"]:
+            failures.append(Failure(
+                "filtering.warm_started", observed=filt["warm_started"],
+                floor=float(filt["expected_warm"]),
+                note="a post-slice-0 query did not warm-start from its "
+                     "stream's retained chains"))
+        if speedup < min_filtering_speedup:
+            failures.append(Failure(
+                "filtering.speedup", observed=round(speedup, 3),
+                floor=min_filtering_speedup,
+                note="warm-start per-slice latency advantage below "
+                     "floor — is burn-in being skipped?"))
+        if base_filt is not None:
+            f = _qps_check("filtering.slices_per_s_warm",
+                           filt["slices_per_s_warm"],
+                           base_filt["slices_per_s_warm"], tolerance,
+                           unit="slices/s")
+            if f:
+                failures.append(f)
+        else:
+            setup.append(Failure(
+                "filtering.slices_per_s_warm",
+                observed=round(filt["slices_per_s_warm"], 3),
+                note="no baseline filtering section — refresh the "
+                     "baseline with --update and commit it"))
+    elif base_filt is not None:
+        failures.append(Failure(
+            "filtering", observed="absent",
+            note="baseline has a filtering section but current doesn't"))
+
     # telemetry overhead: self-relative (null vs enabled recorder were
     # measured in the same process on identical traffic), so no baseline
     # entry is consulted — the floor is the current report's own null
@@ -275,6 +362,10 @@ def main(argv=None) -> None:
                          "ratio on compiled (non-CPU) backends; the "
                          "bitwise identity bit is gated on every "
                          "platform regardless")
+    ap.add_argument("--min-filtering-speedup", type=float, default=1.2,
+                    help="required cold/warm per-slice latency ratio for "
+                         "the temporal-filtering section (warm slices "
+                         "skip burn-in; self-relative)")
     ap.add_argument("--update", action="store_true",
                     help="overwrite the baseline with the current report")
     args = ap.parse_args(argv)
@@ -296,7 +387,8 @@ def main(argv=None) -> None:
         current, baseline, tolerance=args.tolerance,
         min_stream_speedup=args.min_stream_speedup,
         telemetry_overhead_tolerance=args.telemetry_overhead_tolerance,
-        min_pallas_speedup=args.min_pallas_speedup)
+        min_pallas_speedup=args.min_pallas_speedup,
+        min_filtering_speedup=args.min_filtering_speedup)
     for f in failures + setup:
         print(f)
     if setup:

@@ -45,6 +45,11 @@ def main() -> None:
     ap.add_argument("--query", default="",
                     help="BN only: comma-separated query variables "
                          "(default: all unobserved)")
+    ap.add_argument("--mode", default="marginals",
+                    choices=("marginals", "map"),
+                    help="with --evidence: posterior marginals (default) "
+                         "or annealed MAP/MPE search (reports the argmax "
+                         "assignment + its energy; docs/inference_modes.md)")
     ap.add_argument("--trace-out", default="",
                     help="with --evidence: write a Chrome/Perfetto trace "
                          "of the query lifecycle here")
@@ -87,9 +92,11 @@ def main() -> None:
             telemetry=tel)
         budget = chains * max(sweeps - cfg.burn_in, 1)
         res = engine.answer(Query(cfg.network, evidence, qvars,
-                                  n_samples=budget))
-        print(f"{cfg.network}: evidence {evidence} -> "
-              f"{len(res.marginals)} query vars")
+                                  n_samples=budget, mode=args.mode))
+        n_q = (len(res.marginals) if res.map_assignment is None
+               else len(res.map_assignment))
+        print(f"{cfg.network}: evidence {evidence} -> {n_q} query vars "
+              f"(mode={args.mode})")
         print(f"{res.n_node_samples} RV samples in {res.wall_s:.2f}s -> "
               f"{res.n_node_samples/res.wall_s/1e6:.2f} MSample/s (CPU), "
               f"{res.bits_per_sample:.2f} bits/sample")
@@ -100,6 +107,10 @@ def main() -> None:
               f"({d.min_ess/res.wall_s:.0f} ESS/s)")
         print(f"converged={res.converged} kept={res.n_samples} "
               f"sweeps={d.sweeps_used} plan_cache_hit={res.cache_hit}")
+        if res.map_assignment is not None:
+            print(f"  MAP assignment (energy {res.map_energy:.3f} nats):")
+            for var, val in res.map_assignment.items():
+                print(f"    {var} = {val}")
         for var, m in res.marginals.items():
             print(f"  P({var} | e) = {np.round(m, 3)}")
         if args.trace_out:

@@ -4,12 +4,18 @@
       --smoke --batch 4 --prompt-len 16 --max-new 32 --sampler ky
 
 ``--stream`` switches to the *posterior* streaming service instead:
-timestamped query traffic is replayed open-loop through the admission
-queue (every other argument is forwarded to ``repro.serve.cli``, which
-owns the streaming flags — including the retirement-rule knobs
-``--retirement {rank,legacy}`` / ``--ess-target`` (see
-``docs/diagnostics.md``) and the telemetry exports ``--trace-out`` /
-``--metrics-json`` (see ``docs/observability.md``)):
+for Bayesian networks the synthetic traffic becomes the streaming-
+sensor scenario — ``--patterns`` sensor streams re-observed over
+``--slices`` drifting time slices, each slice warm-starting from its
+stream's retained chains (temporal filtering; see
+``docs/inference_modes.md``) — replayed open-loop through the
+admission queue.  Every other argument is forwarded to
+``repro.serve.cli``, which owns the streaming flags — including
+``--mode {marginals,map}`` (annealed MAP/MPE search), the
+retirement-rule knobs ``--retirement {rank,legacy}`` /
+``--ess-target`` (see ``docs/diagnostics.md``) and the telemetry
+exports ``--trace-out`` / ``--metrics-json`` (see
+``docs/observability.md``):
 
   PYTHONPATH=src python -m repro.launch.serve --stream --network asia \
       --rate 50 --max-wait-ms 20 --trace-out trace.json

@@ -235,6 +235,7 @@ def _color_update(
     k: int,
     use_iu: bool,
     sampler: str = "xla",
+    beta: jax.Array | None = None,   # traced inverse temperature, (B,) or scalar
 ) -> tuple[jax.Array, BNSweepStats]:
     ls = jnp.arange(max_card, dtype=jnp.int32)            # (L,)
     nodes = jnp.asarray(plan.nodes)
@@ -256,6 +257,22 @@ def _color_update(
     )                                                      # (B, G, C)
     ch_idx = ch_base[..., None] + jnp.asarray(plan.ch_vstride)[None, ..., None] * ls
     logw = logw + jnp.sum(jnp.take(log_cpt, ch_idx, mode="clip"), axis=-2)
+
+    # --- annealing: scale log-weights by the inverse temperature ----------
+    # Applied before the sampler branch, so the XLA and Pallas paths see
+    # the same floats and stay bitwise-interchangeable at every β.  β > 1
+    # sharpens the conditional toward its argmax (simulated annealing for
+    # MAP/MPE); β = 1 (or None) is ordinary Gibbs.  Per-lane (B,) values
+    # let one jitted sweep mix annealed and unannealed chains.  The valid-
+    # label max is subtracted *before* scaling so the best label pins at
+    # 0 whatever β is — an unbounded β can then never push every valid
+    # label under the mask floor ``ky_weights`` applies.
+    if beta is not None:
+        b = jnp.asarray(beta, logw.dtype)
+        b = b[:, None, None] if b.ndim == 1 else b
+        valid = ls[None, None, :] < card[None, :, None]
+        m = jnp.max(jnp.where(valid, logw, -jnp.inf), axis=-1, keepdims=True)
+        logw = (logw - m) * b
 
     # --- IU-exp → fixed point → KY sample ---------------------------------
     # sampler="pallas": mask → LUT-exp → floor → KY walk fused in one

@@ -54,6 +54,23 @@ def neighbor_pair_energy(labels: jax.Array, pairwise: jax.Array) -> jax.Array:
     return e
 
 
+def _weights_from_energies(
+    energies: jax.Array,
+    *,
+    k: int = DEFAULT_K,
+    table: InterpTable | None = None,
+    use_iu: bool = True,
+) -> jax.Array:
+    """(..., L) energies → int32 non-normalized KY weights."""
+    z = energies - jnp.min(energies, axis=-1, keepdims=True)  # best label → 0
+    if use_iu:
+        table = table or _EXP
+        y = table(-z)  # exp(-z) via the IU LUT (z >= 0, clamped at 16)
+    else:
+        y = jnp.exp(-z)
+    return jnp.floor(y * (2.0 ** k - 1.0)).astype(jnp.int32)
+
+
 def site_weights(
     labels: jax.Array,
     unary: jax.Array,
@@ -65,13 +82,7 @@ def site_weights(
 ) -> jax.Array:
     """(B, H, W, L) int32 non-normalized KY weights for every site."""
     energies = unary[None] + neighbor_pair_energy(labels, pairwise)
-    z = energies - jnp.min(energies, axis=-1, keepdims=True)  # best label → 0
-    if use_iu:
-        table = table or _EXP
-        y = table(-z)  # exp(-z) via the IU LUT (z >= 0, clamped at 16)
-    else:
-        y = jnp.exp(-z)
-    return jnp.floor(y * (2.0 ** k - 1.0)).astype(jnp.int32)
+    return _weights_from_energies(energies, k=k, table=table, use_iu=use_iu)
 
 
 @partial(jax.jit, static_argnames=("k", "use_iu", "sampler"))
@@ -86,6 +97,7 @@ def checkerboard_halfstep(
     k: int = DEFAULT_K,
     use_iu: bool = True,
     sampler: str = "xla",
+    beta: jax.Array | None = None,    # traced inverse temperature, (B,) or scalar
 ) -> tuple[jax.Array, SweepStats]:
     """Resample all sites of one checkerboard color, all chains at once.
 
@@ -93,6 +105,13 @@ def checkerboard_halfstep(
     the update and by the bit accounting, but their *fixed* labels still
     sit in ``labels`` and therefore keep contributing pairwise energy to
     their neighbours — exactly CPT conditioning, lattice edition.
+
+    ``beta`` scales the site energies (traced, never a static argument):
+    weights become ``exp(-β·(e - min e))``, the simulated-annealing
+    sharpening the MAP mode drives; per-lane (B,) values anneal each
+    chain on its own schedule.  None / 1.0 is ordinary Gibbs.  The scale
+    is applied before the sampler branch, so the XLA and Pallas paths
+    stay bitwise-interchangeable at every β.
 
     ``sampler="pallas"`` routes the distribution-generation tail and the
     KY walk through the fused kernel (``kernels/fused_sweep.py``): the
@@ -102,13 +121,23 @@ def checkerboard_halfstep(
     """
     b, h, w = labels.shape
     l = unary.shape[-1]
-    if sampler == "pallas":
+    if beta is None:
+        energies = None  # keep the β-free trace byte-identical to the old one
+    else:
         energies = unary[None] + neighbor_pair_energy(labels, pairwise)
+        bb = jnp.asarray(beta, energies.dtype)
+        energies = energies * (bb[:, None, None, None] if bb.ndim == 1 else bb)
+    if sampler == "pallas":
+        if energies is None:
+            energies = unary[None] + neighbor_pair_energy(labels, pairwise)
         res = fused_gibbs_sample(
             key, (-energies).reshape((-1, l)), l, k=k, use_iu=use_iu,
             table=_EXP)
     else:
-        wts = site_weights(labels, unary, pairwise, k=k, use_iu=use_iu)
+        if energies is None:
+            wts = site_weights(labels, unary, pairwise, k=k, use_iu=use_iu)
+        else:
+            wts = _weights_from_energies(energies, k=k, use_iu=use_iu)
         res = ky_sample(key, wts.reshape((-1, l)))
     new = res.sample.reshape((b, h, w))
     mask = (((jnp.arange(h)[:, None] + jnp.arange(w)[None, :]) % 2) == parity)[None]

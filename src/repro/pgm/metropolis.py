@@ -43,6 +43,7 @@ def mrf_metropolis(
     *,
     n_sweeps: int,
     use_iu: bool = True,
+    beta: jax.Array | None = None,   # traced inverse temperature, (B,) or scalar
 ) -> tuple[jax.Array, MHStats]:
     b, h, w = labels0.shape
     l = unary.shape[-1]
@@ -56,6 +57,11 @@ def mrf_metropolis(
         e_cur = jnp.take_along_axis(e, labels[..., None], axis=-1)[..., 0]
         e_new = jnp.take_along_axis(e, prop[..., None], axis=-1)[..., 0]
         de = (e_new - e_cur).astype(jnp.float32)
+        if beta is not None:
+            # annealing: accept iff u < exp(-β·ΔE) — ΔE scales, the
+            # fixed-point acceptance circuit below is untouched
+            bb = jnp.asarray(beta, de.dtype)
+            de = de * (bb[:, None, None] if bb.ndim == 1 else bb)
         # fixed-point acceptance: u16 < floor(exp(-max(dE,0)) * 2^16)
         p_acc = _EXP(-jnp.clip(de, 0.0, 16.0)) if use_iu else jnp.exp(
             -jnp.clip(de, 0.0, 16.0))
@@ -92,6 +98,7 @@ def fg_metropolis(
     *,
     n_sweeps: int,
     use_iu: bool = True,
+    beta: jax.Array | None = None,   # traced inverse temperature, (B,) or scalar
 ) -> tuple[jax.Array, MHStats]:
     """MH-within-colors on a compiled sparse plan.
 
@@ -99,6 +106,8 @@ def fg_metropolis(
     nodes are never in any plan, so evidence holds automatically.  Uses
     the plan's candidate-label energies — the same gathers the Gibbs
     sweep runs — and the fixed-point 16-bit acceptance rule above.
+    ``beta`` anneals the acceptance (``u < exp(-β·ΔE)``), the MH face of
+    the same simulated-annealing hook the Gibbs sweeps carry.
     """
     from repro.pgm.sparse_compile import _plan_energies
 
@@ -117,6 +126,9 @@ def fg_metropolis(
         e_cur = jnp.take_along_axis(e, cur[..., None], axis=-1)[..., 0]
         e_new = jnp.take_along_axis(e, prop[..., None], axis=-1)[..., 0]
         de = (e_new - e_cur).astype(jnp.float32)
+        if beta is not None:
+            bb = jnp.asarray(beta, de.dtype)
+            de = de * (bb[:, None] if bb.ndim == 1 else bb)
         p_acc = _EXP(-jnp.clip(de, 0.0, 16.0)) if use_iu else jnp.exp(
             -jnp.clip(de, 0.0, 16.0))
         thresh = jnp.floor(p_acc * (2.0 ** _ACC_BITS)).astype(jnp.int32)

@@ -289,8 +289,15 @@ def _sparse_color_update(
     k: int,
     use_iu: bool,
     sampler: str = "xla",
+    beta: jax.Array | None = None,   # traced inverse temperature, (B,) or scalar
 ) -> tuple[jax.Array, BNSweepStats]:
     """Resample every node of one color, all lanes at once.
+
+    ``beta`` scales the candidate energies before the sampler branch
+    (traced, per-lane (B,) or scalar) — the simulated-annealing hook of
+    the MAP mode; None / 1.0 is ordinary Gibbs.  Both sampler branches
+    see the scaled energies, so they stay bitwise-interchangeable at
+    every β.
 
     ``sampler="pallas"`` hands the negated energies straight to the fused
     kernel (``kernels/fused_sweep.py``) — ``-energies`` is exactly the
@@ -299,6 +306,9 @@ def _sparse_color_update(
     """
     nodes = jnp.asarray(plan.nodes)
     energies = _plan_energies(x, plan, unary, tables_flat, max_card)
+    if beta is not None:
+        bb = jnp.asarray(beta, energies.dtype)
+        energies = energies * (bb[:, None, None] if bb.ndim == 1 else bb)
     if sampler == "pallas":
         lane_card = jnp.broadcast_to(
             card[nodes][None], energies.shape[:-1]).reshape(-1)

@@ -15,7 +15,13 @@ Three PGM families are served (:mod:`repro.serve.families`):
 :class:`Query` clamps Bayesian-network *nodes*, :class:`MrfQuery`
 clamps MRF grid *pixels* (scribble masks for interactive segmentation),
 and :class:`IsingQuery` clamps *spins* of a sparse Ising model /
-factor graph — same engine, same plan cache, same queue.
+factor graph — same engine, same plan cache, same queue.  All three
+share the :class:`Request` base (network, budget, retirement targets,
+``mode``, ``stream_id``): ``mode="map"`` switches a query to annealed
+MAP/MPE search (a point assignment + energy instead of marginals), and
+``stream_id`` opts it into temporal filtering — each slice of a stream
+warm-starts from the previous slice's retained chains.  See
+``docs/inference_modes.md``.
 
 Streaming traffic goes through :class:`AdmissionQueue`
 (:mod:`repro.serve.queue`): per-plan buckets dispatch on a deadline or
@@ -40,8 +46,8 @@ from repro.serve.plan_cache import (
     CacheStats, PlanCache, graph_fingerprint, load_compiled,
     network_fingerprint, persisted_plan_path, plan_key, save_compiled)
 from repro.serve.query import (
-    IsingQuery, MrfQuery, Query, QueryCancelled, QueryHandle, QueryStatus,
-    Result, parse_evidence)
+    MODES, IsingQuery, MrfQuery, Query, QueryCancelled, QueryHandle,
+    QueryStatus, Request, Result, parse_evidence)
 from repro.serve.telemetry import (
     MetricsRegistry, NullTelemetry, Telemetry, lifecycle_breakdown)
 
@@ -67,10 +73,11 @@ _LAZY = {
 
 __all__ = [
     "AdmissionQueue", "CacheStats", "Diagnostics", "GroupRun",
-    "IsingFamily", "IsingQuery", "MetricsRegistry", "MrfQuery",
+    "IsingFamily", "IsingQuery", "MODES", "MetricsRegistry", "MrfQuery",
     "NullTelemetry", "PlanCache", "PosteriorEngine", "Query",
     "QueryCancelled", "QueryHandle", "QueryStatus", "QueueStats",
-    "RETIREMENT_MODES", "Result", "RunningDiagnostics", "Telemetry",
+    "RETIREMENT_MODES", "Request", "Result", "RunningDiagnostics",
+    "Telemetry",
     "compute_diagnostics", "family_of", "graph_fingerprint",
     "lifecycle_breakdown", "load_compiled", "make_fg_round_runner",
     "make_mrf_round_runner", "make_round_runner", "network_fingerprint",

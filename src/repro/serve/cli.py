@@ -17,9 +17,11 @@
   PYTHONPATH=src python -m repro.serve.cli --network asia \
       --force-host-devices 4 --mesh-shape 4
 
-Request-file format: a JSON list of objects
-  {"network": "asia", "evidence": {"smoke": 1}, "query_vars": ["lung"],
-   "n_samples": 8192, "t": 0.125}
+Request-file format: a JSON list of objects, schema-versioned by an
+optional ``"v"`` field (1 = the historical marginals-only schema, the
+default; 2 adds ``"mode"`` and ``"stream_id"``):
+  {"v": 2, "network": "asia", "evidence": {"smoke": 1},
+   "query_vars": ["lung"], "mode": "map", "n_samples": 8192, "t": 0.125}
 MRF requests use the sparse pixel-mask form instead of ``evidence``:
   {"network": "mrf_penguin", "mask_sites": [[2, 3, 1], [4, 0, 0]],
    "query_sites": [[0, 0], [5, 5]], "n_samples": 4096}
@@ -30,7 +32,7 @@ Sparse-Ising requests use a spin clamp mask (``(site, ±1-spin)`` pairs):
 arrival timestamp in seconds, optional — is only used by ``--stream``,
 which replays the file open-loop at those offsets.)  Any form may
 carry per-query retirement overrides ``"rhat_target"`` /
-``"ess_target"`` — see docs/serving.md for the full schema.
+``"ess_target"`` — see docs/serving.md for the full schema table.
 
 Batch mode reports queries/s and MSample/s for a cold pass (empty plan
 cache, XLA compiles on the critical path) and a warm pass (same traffic
@@ -59,7 +61,12 @@ from repro.serve.telemetry import Telemetry, lifecycle_breakdown, monotonic
 # functions below — importing the sampling stack initializes the XLA
 # backend, which must not happen before --force-host-devices takes
 # effect.  repro.pgm.graph / networks are jax-free and safe to import.
-from repro.serve.query import IsingQuery, MrfQuery, Query
+from repro.serve.query import MODES, IsingQuery, MrfQuery, Query
+
+# JSON request-file schema versions this CLI can parse (see
+# docs/serving.md): 1 = the historical marginals-only form, 2 adds
+# "mode" and "stream_id"
+SCHEMA_VERSIONS = (1, 2)
 
 NETWORKS = ("asia", "sprinkler", "child_scale", "alarm_scale",
             "hailfinder_scale")
@@ -106,6 +113,42 @@ def synthetic_traffic(
         n_q = int(rng.integers(1, min(3, len(free)) + 1))
         qvars = tuple(int(v) for v in rng.choice(free, n_q, replace=False))
         out.append(Query(network, evidence, qvars, n_samples=n_samples))
+    return out
+
+
+def synthetic_stream_traffic(
+    bn, network: str, n_streams: int, n_slices: int,
+    rng: np.random.Generator, n_samples: int, drift: float = 0.25,
+) -> list[Query]:
+    """Streaming-sensor traffic for temporal (dynamic-BN) filtering:
+    ``n_streams`` independent sensors each own a fixed evidence pattern
+    and query set, re-observed ``n_slices`` times; per slice each
+    observed value re-randomizes with probability ``drift`` (slow
+    drift), so consecutive slices are *nearby* evidence sets — the
+    regime where warm-starting slice ``t+1`` from slice ``t``'s
+    retained chains pays.  Slices are emitted slice-major (slice 0 of
+    every stream, then slice 1, …) and each carries its sensor's
+    ``stream_id``; one pattern per stream means every slice after the
+    first is a plan-cache hit by construction."""
+    n = bn.n_nodes
+    streams = []
+    for _ in range(n_streams):
+        size = int(rng.integers(1, max(1, min(2, n - 2)) + 1))
+        pat = tuple(sorted(rng.choice(n, size=size, replace=False).tolist()))
+        vals = {int(v): int(rng.integers(bn.card[v])) for v in pat}
+        free = [v for v in range(n) if v not in pat]
+        n_q = int(rng.integers(1, min(3, len(free)) + 1))
+        qvars = tuple(int(v) for v in rng.choice(free, n_q, replace=False))
+        streams.append((pat, vals, qvars))
+    out = []
+    for t in range(n_slices):
+        for i, (pat, vals, qvars) in enumerate(streams):
+            if t:
+                for v in pat:
+                    if rng.random() < drift:
+                        vals[v] = int(rng.integers(bn.card[v]))
+            out.append(Query(network, dict(vals), qvars,
+                             n_samples=n_samples, stream_id=f"sensor{i}"))
     return out
 
 
@@ -182,8 +225,32 @@ def load_requests(path: str) -> tuple[list[Query], list[float] | None]:
         reqs = json.load(f)
 
     def parse(r):
+        v = int(r.get("v", 1))
+        if v not in SCHEMA_VERSIONS:
+            raise ValueError(
+                f"unknown request schema version {v} (accepted: "
+                f"{', '.join(str(s) for s in SCHEMA_VERSIONS)})")
+        if v < 2:
+            # v1 predates inference modes: auto-upgrade to marginals,
+            # and refuse v2-only fields rather than silently ignore them
+            for field in ("mode", "stream_id"):
+                if field in r:
+                    raise ValueError(
+                        f"{field!r} requires schema version 2 "
+                        f'(add "v": 2 to the request)')
+            mode, stream_id = "marginals", None
+        else:
+            mode = str(r.get("mode", "marginals"))
+            if mode not in MODES:
+                raise ValueError(
+                    f"unknown inference mode {mode!r} "
+                    f"(accepted: {', '.join(MODES)})")
+            stream_id = (None if r.get("stream_id") is None
+                         else str(r["stream_id"]))
         # per-query retirement overrides (None = engine defaults)
-        targets = dict(
+        common = dict(
+            n_samples=int(r.get("n_samples", 8192)),
+            mode=mode, stream_id=stream_id,
             rhat_target=(None if r.get("rhat_target") is None
                          else float(r["rhat_target"])),
             ess_target=(None if r.get("ess_target") is None
@@ -195,17 +262,16 @@ def load_requests(path: str) -> tuple[list[Query], list[float] | None]:
                                  for t in r["mask_sites"]),
                 query_sites=tuple(tuple(int(x) for x in t)
                                   for t in r.get("query_sites", ())),
-                n_samples=int(r.get("n_samples", 8192)), **targets)
+                **common)
         if "clamp_sites" in r:  # sparse-Ising spin clamp request
             return IsingQuery(
                 r["network"],
                 clamp_sites=tuple(tuple(int(x) for x in t)
                                   for t in r["clamp_sites"]),
                 query_vars=tuple(r.get("query_vars", ())),
-                n_samples=int(r.get("n_samples", 8192)), **targets)
+                **common)
         return Query(r["network"], r.get("evidence", {}),
-                     tuple(r.get("query_vars", ())),
-                     n_samples=int(r.get("n_samples", 8192)), **targets)
+                     tuple(r.get("query_vars", ())), **common)
 
     queries = [parse(r) for r in reqs]
     arrivals = None
@@ -240,11 +306,17 @@ def measure_stream(engine, sync_engine, traffic: list[Query],
     """
     from repro.serve.queue import AdmissionQueue
 
+    import dataclasses
+
     queue = AdmissionQueue(engine, max_wait_ms=max_wait_ms)
     seen: dict[tuple, Query] = {}
     for q in traffic:
         _, _, _, pattern = engine.normalize(q)
-        seen.setdefault((q.network, pattern), q)
+        # streamless probe: warm-up must not retain chains that would
+        # warm-start the measured replay's first slices
+        seen.setdefault((q.network, pattern,
+                         getattr(q, "mode", "marginals")),
+                        dataclasses.replace(q, stream_id=None))
     sync_engine.answer_batch(list(seen.values()))
     queue.warm(traffic)
 
@@ -285,6 +357,9 @@ def measure_stream(engine, sync_engine, traffic: list[Query],
         "dispatched_groups": st.dispatched_groups,
         "backfilled": st.backfilled,
         "submitted": st.submitted,
+        # temporal filtering: slices whose lanes were seeded from their
+        # stream's previous slice (0 for streamless traffic)
+        "warm_started": int(sum(r.warm_start for r in results)),
     }
     # with a live recorder the end-to-end latency decomposes into its
     # lifecycle phases (wait / plan / service) straight from the spans
@@ -368,6 +443,9 @@ def _run_batch(args, engine, registry, traffic):
               f"rhat={r.rhat:.3f} rank_rhat={d.worst_rank_rhat:.3f} "
               f"ess={d.min_ess:.0f} sweeps={d.sweeps_used} "
               f"kept={r.n_samples}")
+        if r.map_assignment is not None:
+            shown = dict(list(r.map_assignment.items())[:6])
+            print(f"    MAP {shown} (energy {r.map_energy:.3f} nats)")
         for var, m in list(r.marginals.items())[:6]:
             print(f"    P({var} | e) = {np.round(m, 3)}")
 
@@ -387,6 +465,9 @@ def _run_stream(args, engine, sync_engine, traffic, arrivals):
     print(f"  {m['dispatched_groups']} groups "
           f"(avg {m['submitted']/max(m['dispatched_groups'],1):.1f} "
           f"queries), {m['backfilled']} backfilled into freed lanes")
+    if m["warm_started"]:
+        print(f"  temporal filtering: {m['warm_started']}/{m['n_queries']} "
+              f"slices warm-started from retained stream chains")
     bd = m.get("latency_breakdown")
     if bd:
         parts = " + ".join(
@@ -411,6 +492,13 @@ def main(argv=None) -> None:
                          "(side² spins)")
     ap.add_argument("--requests", default="",
                     help="JSON request file (overrides synthetic traffic)")
+    ap.add_argument("--mode", default="marginals", choices=MODES,
+                    help="inference mode for synthetic traffic: posterior "
+                         "marginals (default) or annealed MAP/MPE search")
+    ap.add_argument("--slices", type=int, default=0,
+                    help="time slices per sensor stream in the --stream "
+                         "scenario (0 = queries/patterns); BN traffic "
+                         "becomes temporal-filtering slice traffic")
     ap.add_argument("--chains", type=int, default=32)
     ap.add_argument("--budget", type=int, default=4096,
                     help="sample budget per query")
@@ -515,6 +603,17 @@ def main(argv=None) -> None:
             print(f"network={args.network}: {model.n_vars} spins, "
                   f"{len(model.edges)} couplings, {args.queries} queries "
                   f"over {args.patterns} clamp patterns")
+        elif args.stream:
+            # the streaming-sensor scenario: each pattern is a sensor
+            # re-observed over drifting time slices (temporal filtering)
+            n_slices = args.slices or max(
+                2, args.queries // max(args.patterns, 1))
+            traffic = synthetic_stream_traffic(
+                model, args.network, args.patterns, n_slices, rng,
+                args.budget)
+            print(f"network={args.network}: {model.n_nodes} nodes, "
+                  f"{args.patterns} sensor streams x {n_slices} time "
+                  f"slices ({len(traffic)} queries)")
         else:
             traffic = synthetic_traffic(
                 model, args.network, args.queries, args.patterns, rng,
@@ -522,6 +621,10 @@ def main(argv=None) -> None:
             print(f"network={args.network}: {model.n_nodes} nodes, "
                   f"{args.queries} queries over {args.patterns} "
                   f"evidence patterns")
+
+    if args.mode != "marginals":
+        import dataclasses
+        traffic = [dataclasses.replace(q, mode=args.mode) for q in traffic]
 
     if args.stream:
         sync_engine = PosteriorEngine(registry, **engine_kw)

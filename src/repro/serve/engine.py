@@ -31,6 +31,22 @@ retired query's lane block is free real estate that
 mid-flight (how the admission queue in :mod:`repro.serve.queue`
 backfills under streaming traffic).
 
+Two extensions ride the same lifecycle (PR 9).  **MAP/MPE mode**
+(``Request.mode="map"``): the group's round runner receives a traced
+per-lane inverse temperature ``beta`` that follows a geometric
+simulated-annealing schedule (``map_beta0 * map_beta_growth**round``,
+capped at ``map_beta_max``), sharpening the IU-exp weight path toward
+the argmax; such slots retire on *assignment stability* — the per-round
+argmax assignment unchanged for ``map_stable_rounds`` consecutive
+rounds — instead of R̂/ESS, and their result carries
+``map_assignment``/``map_energy`` instead of marginals.  **Temporal
+filtering** (``Request.stream_id``): when a slot retires, its final
+lane states are retained host-side keyed ``(network, stream_id)``; the
+next slice on the same stream warm-starts from them (evidence
+re-clamped via the family's ``clamp_states``) and skips burn-in — the
+dynamic-BN filtering move, with the plan cache already making the
+compile side free across slices.
+
 Multi-device serving: give the engine a mesh from
 ``repro.launch.mesh.make_serve_mesh`` and each group's lane axis
 ``(n_queries * chains_per_query, n_nodes)`` is sharded over the mesh's
@@ -64,7 +80,7 @@ from repro.pgm.diagnostics import (
 from repro.pgm.graph import BayesNet
 from repro.serve.families import family_of
 from repro.serve.plan_cache import PlanCache, plan_key
-from repro.serve.query import MrfQuery, Query, Result
+from repro.serve.query import IsingQuery, MrfQuery, Query, Request, Result
 from repro.serve.telemetry import (
     DEFAULT_COUNT_BINS, NULL, Telemetry, monotonic)
 from repro.sharding.specs import serve_lane_multiple
@@ -89,7 +105,7 @@ class GroupEntry:
     ``answer_batch`` path.  ``result`` is filled in at retirement.
     """
 
-    query: "Query | MrfQuery"
+    query: "Query | MrfQuery | IsingQuery"
     ev: dict[int, int]
     qvars: tuple[int, ...]
     handle: object | None = None
@@ -128,6 +144,11 @@ class _Slot:
     converged: bool = False                # active rule satisfied
     done: bool = False
     cancelled: bool = False
+    mode: str = "marginals"                # inference mode (Request.mode)
+    anneal_rounds: int = 0      # rounds on the annealing schedule (incl. burn)
+    map_last: np.ndarray | None = None     # last round's argmax, (n_vars,)
+    map_stable: int = 0         # consecutive rounds map_last was unchanged
+    warm: bool = False          # lanes seeded from a previous slice's states
 
 
 class GroupRun:
@@ -188,6 +209,17 @@ class GroupRun:
         self.burn_rounds = math.ceil(engine.burn_in / self.spr)
         self.n_free = self.family.n_free(self.prog)
         self.n_vars = self.family.n_vars(self.prog)
+        # groups are mode-homogeneous: ``answer_batch`` and the admission
+        # queue fold the mode into the group key, so one group is either
+        # all-marginal (runner called without beta — the pre-MAP trace,
+        # byte-identical) or all-MAP (per-lane annealed beta)
+        self.mode = getattr(entries[0].query, "mode", "marginals")
+        if self.mode == "map":
+            fam, prog = self.family, self.prog
+            cards = np.array(
+                [fam.var_card(prog, v) for v in range(self.n_vars)])
+            self._card_mask = (
+                np.arange(fam.max_card(prog))[None, :] < cards[:, None])
         nq = len(entries)
         # shape bucketing: pad the slot count up to a power of two so
         # streaming traffic only ever compiles O(log max_group) distinct
@@ -217,6 +249,26 @@ class GroupRun:
             _Slot(entry=None, j=j, cap=0, burn_left=0, t0=t0, done=True)
             for j in range(nq, self.bt // self.c)
         ]
+        # temporal filtering: slots on a known stream warm-start from the
+        # previous slice's retained chains (this slice's evidence
+        # re-clamped) and skip burn-in — the states are already near the
+        # posterior of a nearby evidence set
+        for j, e in enumerate(entries):
+            blk = engine._retained_block(name, e.query)
+            if blk is None or blk.shape != (self.c,) + self.x.shape[1:]:
+                continue
+            x0 = jnp.asarray(blk)
+            if pattern:
+                x0 = self.family.clamp_states(
+                    self.prog, x0,
+                    jnp.asarray(ev_vals[j * self.c:(j + 1) * self.c]))
+            self.x = self.x.at[j * self.c:(j + 1) * self.c].set(x0)
+            self.slots[j].warm = True
+            self.slots[j].burn_left = 0
+            if tel.enabled:
+                tel.instant("warm-start", self.tel_tid, slot=j)
+                tel.count("serve_warm_starts_total",
+                          help="slots seeded from retained stream states")
         # service starts at plan-end: the per-query wait/plan/service
         # spans share boundary timestamps, so they tile [submit, retire]
         # exactly (state init is the head of the service phase)
@@ -237,6 +289,7 @@ class GroupRun:
         ess_target = getattr(q, "ess_target", None)
         return _Slot(
             entry=entry, j=j, cap=cap, burn_left=self.burn_rounds, t0=t0,
+            mode=getattr(q, "mode", "marginals"),
             counts=np.zeros((self.n_vars, L), np.int64),
             diags={v: RunningDiagnostics(self.spr) for v in entry.qvars},
             rhat_target=(eng.rhat_target if rhat_target is None
@@ -274,8 +327,24 @@ class GroupRun:
             if not s.done and not s.burn_left:
                 offsets[s.j * self.c:(s.j + 1) * self.c] = s.rounds * self.spr
         self._run_key, sub = jax.random.split(self._run_key)
-        self.x, rc, xmean, xsq, st = self.runner(
-            sub, self.x, jnp.asarray(offsets))
+        if self.mode == "map":
+            # per-lane annealed inverse temperature: each slot walks the
+            # geometric schedule from its own admission round (backfilled
+            # slots restart at beta0), so one traced runner serves every
+            # point of every lane's schedule without retracing
+            betas = np.ones(self.bt, np.float32)
+            for s in self.slots:
+                if not s.done:
+                    betas[s.j * self.c:(s.j + 1) * self.c] = eng.map_beta(
+                        s.anneal_rounds)
+                    s.anneal_rounds += 1
+            self.x, rc, xmean, xsq, st = self.runner(
+                sub, self.x, jnp.asarray(offsets), jnp.asarray(betas))
+        else:
+            # marginal groups keep the 3-arg call: beta=None traces the
+            # exact pre-annealing program (bitwise-pinned baselines)
+            self.x, rc, xmean, xsq, st = self.runner(
+                sub, self.x, jnp.asarray(offsets))
         self.bits += int(sum_sweep_stats(st).bits_used)
         self.sweeps_done += self.spr
 
@@ -292,11 +361,28 @@ class GroupRun:
                 xmean_np = np.asarray(xmean)
                 xsq_np = np.asarray(xsq)
             sl = slice(s.j * self.c, (s.j + 1) * self.c)
-            s.counts += rc_np[sl].sum(axis=0)
+            rd = rc_np[sl].sum(axis=0)        # this round's counts (n, L)
+            s.counts += rd
             for v, d in s.diags.items():
                 d.update(xmean_np[sl, v], xsq_np[sl, v])
             s.rounds += 1
-            if s.rounds >= eng.min_rounds:
+            if s.mode == "map":
+                # assignment-stability retirement: the annealed chains'
+                # per-round argmax must sit still for map_stable_rounds
+                # consecutive rounds (rd can be all-zero when thin > spr
+                # leaves a round with no kept draw — skip those rounds)
+                if rd.any():
+                    assign = np.where(
+                        self._card_mask, rd, -1).argmax(axis=1)
+                    if (s.map_last is not None
+                            and np.array_equal(assign, s.map_last)):
+                        s.map_stable += 1
+                    else:
+                        s.map_stable = 1
+                    s.map_last = assign
+                if s.rounds >= eng.min_rounds:
+                    s.converged = s.map_stable >= eng.map_stable_rounds
+            elif s.rounds >= eng.min_rounds:
                 if eng.retirement == "rank":
                     # staged check: the cheap R̂ gate first, the
                     # O(rounds²) ESS estimators only once every
@@ -314,6 +400,7 @@ class GroupRun:
                     s.converged = s.rhat < s.rhat_target
             if s.converged or s.rounds >= s.cap:
                 reason = ("max-sweeps" if not s.converged
+                          else "map-stable" if s.mode == "map"
                           else "rhat+ess" if eng.retirement == "rank"
                           else "rhat")
                 self._retire(s, reason)
@@ -377,11 +464,23 @@ class GroupRun:
                 np.array([entry.ev[v] for v in self.pattern], np.int32),
                 (c, 1)))
         self.engine._key, init_key = jax.random.split(self.engine._key)
-        x0 = self.family.init_states(init_key, self.prog, c, ev)
+        blk = self.engine._retained_block(self.name, entry.query)
+        warm = blk is not None and blk.shape == (c,) + self.x.shape[1:]
+        if warm:
+            # temporal filtering through backfill: seed the freed block
+            # from the stream's retained chains instead of fresh noise
+            x0 = jnp.asarray(blk)
+            if ev is not None:
+                x0 = self.family.clamp_states(self.prog, x0, ev)
+        else:
+            x0 = self.family.init_states(init_key, self.prog, c, ev)
         self.x = self.x.at[slot.j * c:(slot.j + 1) * c].set(x0)
         t_admit = monotonic()
         fresh = self._fresh_slot(entry, slot.j, t_admit)
         fresh.t_service0, fresh.backfilled = t_admit, True
+        if warm:
+            fresh.warm = True
+            fresh.burn_left = 0
         self.slots[slot.j] = fresh
         tel = self.tel
         if tel.enabled:
@@ -427,14 +526,35 @@ class GroupRun:
     def _retire(self, s: _Slot, reason: str = "max-sweeps") -> None:
         s.done = True
         eng, fam = self.engine, self.family
-        marginals = {}
-        for v in s.entry.qvars:
-            m = s.counts[v, :fam.var_card(self.prog, v)].astype(np.float64)
-            marginals[fam.var_name(self.model, v)] = m / max(m.sum(), 1.0)
+        marginals: dict = {}
+        map_assignment = map_energy = None
+        if s.mode == "map":
+            # annealed counts are argmax evidence, not posterior mass —
+            # report the point assignment (and its energy), no marginals
+            full = (np.where(self._card_mask, s.counts, -1).argmax(axis=1)
+                    if s.map_last is None else s.map_last.copy())
+            for v, val in s.entry.ev.items():
+                full[v] = val
+            map_assignment = {
+                fam.var_name(self.model, v): int(full[v])
+                for v in s.entry.qvars}
+            map_energy = float(fam.assignment_energy(self.model, full))
+        else:
+            for v in s.entry.qvars:
+                m = s.counts[v, :fam.var_card(self.prog, v)].astype(
+                    np.float64)
+                marginals[fam.var_name(self.model, v)] = m / max(m.sum(), 1.0)
+        sid = getattr(s.entry.query, "stream_id", None)
+        if sid is not None:
+            # retain the slot's final chains for the stream's next slice
+            sl = slice(s.j * self.c, (s.j + 1) * self.c)
+            eng._retained[(self.name, sid)] = np.asarray(self.x[sl])
         # kept draws per lane: global sweep indices in [0, rounds*spr)
         # that are multiples of ``thin``
         kept_total = (s.rounds * self.spr + eng.thin - 1) // eng.thin
-        total_sweeps = (self.burn_rounds + s.rounds) * self.spr
+        # warm (temporal) slots skipped burn-in — count only what ran
+        total_sweeps = ((0 if s.warm else self.burn_rounds) + s.rounds) \
+            * self.spr
         group_node_samples = self.bt * self.n_free * self.sweeps_done
         # diagnostics payload: worst-case R̂s / smallest ESS over the
         # query variables, computed once at retirement (cached per
@@ -464,6 +584,9 @@ class GroupRun:
             bits_per_sample=(
                 self.bits / group_node_samples if group_node_samples else 0.0),
             diagnostics=diag,
+            map_assignment=map_assignment,
+            map_energy=map_energy,
+            warm_start=s.warm,
         )
         if self.tel.enabled:
             self._record_query_spans(s, reason)
@@ -482,6 +605,15 @@ class PosteriorEngine:
     split-R̂-only rule (comparable to pre-diagnostics perf baselines).
     Both thresholds are engine defaults that individual queries may
     override (``Query.rhat_target`` / ``Query.ess_target``).
+
+    ``Request.mode="map"`` switches a query to annealed MAP/MPE search:
+    ``map_beta0``/``map_beta_growth``/``map_beta_max`` set the geometric
+    inverse-temperature schedule and ``map_stable_rounds`` the number of
+    consecutive rounds the per-round argmax assignment must hold for the
+    query to retire (reason ``"map-stable"``).  ``Request.stream_id``
+    opts a query into temporal filtering: each retired slice's chains
+    are retained and the stream's next slice warm-starts from them,
+    skipping burn-in (``reset_streams`` forgets them).
 
     ``mesh`` (from :func:`repro.launch.mesh.make_serve_mesh`) shards each
     group's chain-lane axis over the mesh's "batch" axis; ``None`` keeps
@@ -516,6 +648,10 @@ class PosteriorEngine:
         retirement: str = "rank",
         min_rounds: int = 4,
         max_rounds: int = 64,
+        map_beta0: float = 0.5,
+        map_beta_growth: float = 1.3,
+        map_beta_max: float = 8.0,
+        map_stable_rounds: int = 3,
         k: int = DEFAULT_K,
         use_iu: bool = True,
         sampler: str | None = None,
@@ -542,6 +678,18 @@ class PosteriorEngine:
         self.retirement = retirement
         self.min_rounds = max(int(min_rounds), 4)  # split-R̂ needs >= 4
         self.max_rounds = int(max_rounds)
+        # MAP-mode annealing schedule: beta(t) = beta0 * growth^t, capped
+        # at beta_max (= the IU-exp LUT's greedy-saturation point: any
+        # label whose unscaled gap from the argmax exceeds 16/beta_max
+        # quantizes to weight 0)
+        if map_beta0 <= 0 or map_beta_growth < 1.0 or map_beta_max <= 0:
+            raise ValueError(
+                "map_beta0/map_beta_max must be > 0 and "
+                "map_beta_growth >= 1.0")
+        self.map_beta0 = float(map_beta0)
+        self.map_beta_growth = float(map_beta_growth)
+        self.map_beta_max = float(map_beta_max)
+        self.map_stable_rounds = max(int(map_stable_rounds), 1)
         self.k = k
         self.use_iu = use_iu
         # sampler backend: "xla" (two-stage weights + KY) or "pallas"
@@ -563,7 +711,35 @@ class PosteriorEngine:
         self._group_seq = itertools.count()
         self._query_seq = itertools.count()
         self._attached_queue = None  # set by AdmissionQueue for stats()
+        # temporal filtering: final lane states of retired stream slots,
+        # keyed (network, stream_id) — the warm-start seed for the
+        # stream's next slice (host-side numpy, device-agnostic)
+        self._retained: dict[tuple[str, str], np.ndarray] = {}
         self._key = jax.random.PRNGKey(seed)
+
+    # -- MAP annealing / temporal filtering --------------------------------
+    def map_beta(self, t: int) -> float:
+        """Inverse temperature after ``t`` rounds of the geometric
+        simulated-annealing schedule (see ``docs/inference_modes.md``)."""
+        return min(self.map_beta_max,
+                   self.map_beta0 * self.map_beta_growth ** t)
+
+    def _retained_block(self, name: str, query) -> np.ndarray | None:
+        """Retained lane states for a query's stream, or None when the
+        query is streamless / the stream has no retired slice yet."""
+        sid = getattr(query, "stream_id", None)
+        if sid is None:
+            return None
+        return self._retained.get((name, sid))
+
+    def reset_streams(self, network: str | None = None) -> None:
+        """Drop retained temporal-filtering states (all streams, or one
+        network's) — subsequent slices cold-start again."""
+        if network is None:
+            self._retained.clear()
+        else:
+            for key in [k for k in self._retained if k[0] == network]:
+                del self._retained[key]
 
     # -- registry ----------------------------------------------------------
     def register(self, name: str, model) -> None:
@@ -572,6 +748,7 @@ class PosteriorEngine:
         from the old model's parameters."""
         if self.networks.get(name) is not model:
             self.cache.invalidate(lambda key: key[0] == name)
+            self.reset_streams(name)  # retained chains came from the old model
         self.networks[name] = model
 
     def _network(self, name: str):
@@ -653,7 +830,7 @@ class PosteriorEngine:
         return out
 
     # -- serving -----------------------------------------------------------
-    def normalize(self, query: "Query | MrfQuery"):
+    def normalize(self, query: Request):
         """Resolve a query against its model: ``(model, evidence-by-flat-
         id, query-var ids, evidence pattern)``.  Raises on unknown
         models, bad evidence, or query vars that are observed — the
@@ -663,18 +840,26 @@ class PosteriorEngine:
         ev, qvars, pattern = family_of(model).normalize(model, query)
         return model, ev, qvars, pattern
 
-    def answer(self, query: "Query | MrfQuery") -> Result:
+    def answer(self, query: Request) -> Result:
         return self.answer_batch([query])[0]
 
-    def answer_batch(self, queries: "list[Query | MrfQuery]") -> list[Result]:
-        """Answer a batch; compatible queries share one jitted sweep."""
+    def answer_batch(self, queries: "list[Request]") -> list[Result]:
+        """Answer a batch; compatible queries share one jitted sweep.
+
+        Groups are keyed (network, evidence pattern, mode): marginal and
+        MAP queries never mix lanes — MAP groups run the annealed
+        (traced-beta) round program, marginal groups the plain one.
+        Both modes of one pattern still share a single plan-cache entry
+        (the mode is not part of the plan key)."""
         groups: dict[tuple, list[GroupEntry]] = {}
         entries = []
         for q in queries:
             _, ev, qvars, pattern = self.normalize(q)
             e = GroupEntry(q, ev, qvars)
             entries.append(e)
-            groups.setdefault((q.network, pattern), []).append(e)
-        for (name, pattern), group in groups.items():
+            groups.setdefault(
+                (q.network, pattern, getattr(q, "mode", "marginals")),
+                []).append(e)
+        for (name, pattern, _mode), group in groups.items():
             GroupRun(self, name, pattern, group).run_to_completion()
         return [e.result for e in entries]  # type: ignore[return-value]

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.pgm.compile import (
@@ -46,8 +47,16 @@ from repro.sharding.specs import (
 # -- round runners ---------------------------------------------------------
 def make_round_runner(prog, *, sweeps_per_round: int, thin: int,
                       use_iu: bool, sampler: str = "xla", mesh=None):
-    """Jitted ``(key, x, offset) -> (x, counts, xmean, xsq, stats)`` per
-    round (Bayesian-network family).
+    """Jitted ``(key, x, offset[, beta]) -> (x, counts, xmean, xsq,
+    stats)`` per round (Bayesian-network family).
+
+    ``beta`` (traced float32, scalar or per-lane ``(B,)``; default None
+    = ordinary Gibbs) is the inverse temperature of the simulated-
+    annealing MAP mode: every color update scales its log-weights by it
+    before the IU-exp tail, so one compiled round program serves both
+    inference modes — and any point of an annealing schedule — without
+    retracing.  Per-lane values let annealed (MAP) and β=1 (marginal)
+    slots share one micro-batched group.
 
     ``offset`` (traced int32, scalar or per-lane ``(B,)``) is the global
     post-burn-in sweep index of the round's first sweep: draws are kept
@@ -83,7 +92,8 @@ def make_round_runner(prog, *, sweeps_per_round: int, thin: int,
         state_sharding = NamedSharding(mesh, serve_state_spec(mesh))
     L = prog.max_card
 
-    def round_fn(key: jax.Array, x: jax.Array, offset: jax.Array):
+    def round_fn(key: jax.Array, x: jax.Array, offset: jax.Array,
+                 beta: jax.Array | None = None):
         if state_sharding is not None:
             x = jax.lax.with_sharding_constraint(x, state_sharding)
 
@@ -94,7 +104,8 @@ def make_round_runner(prog, *, sweeps_per_round: int, thin: int,
             for plan in prog.plans:
                 sub, s2 = jax.random.split(sub)
                 x, st = _color_update(
-                    s2, x, plan, log_cpt, L, prog.k, use_iu, sampler)
+                    s2, x, plan, log_cpt, L, prog.k, use_iu, sampler,
+                    beta)
                 bits, att = bits + st.bits_used, att + st.attempts
             onehot = (x[..., None] == jnp.arange(L)).astype(jnp.int32)
             kept = ((offset + i) % thin) == 0
@@ -122,8 +133,9 @@ def make_round_runner(prog, *, sweeps_per_round: int, thin: int,
 def make_mrf_round_runner(prog: CompiledMRF, *, sweeps_per_round: int,
                           thin: int, use_iu: bool, sampler: str = "xla",
                           mesh=None):
-    """Jitted ``(key, x, offset) -> (x, counts, xmean, xsq, stats)`` per
-    round (MRF family) — same contract as :func:`make_round_runner`,
+    """Jitted ``(key, x, offset[, beta]) -> (x, counts, xmean, xsq,
+    stats)`` per round (MRF family) — same contract as
+    :func:`make_round_runner` (including the traced annealing ``beta``),
     over the flat site space.
 
     ``x`` is the (B, H, W) label field; the clamp mask compiled into
@@ -150,7 +162,8 @@ def make_mrf_round_runner(prog: CompiledMRF, *, sweeps_per_round: int,
     h, w = prog.shape
     L = prog.n_labels
 
-    def round_fn(key: jax.Array, x: jax.Array, offset: jax.Array):
+    def round_fn(key: jax.Array, x: jax.Array, offset: jax.Array,
+                 beta: jax.Array | None = None):
         if state_sharding is not None:
             x = jax.lax.with_sharding_constraint(x, state_sharding)
         b = x.shape[0]
@@ -160,10 +173,10 @@ def make_mrf_round_runner(prog: CompiledMRF, *, sweeps_per_round: int,
             key, k0, k1 = jax.random.split(key, 3)
             x, s0 = checkerboard_halfstep(
                 k0, x, unary, pairwise, jnp.int32(0), clamp=clamp,
-                k=prog.k, use_iu=use_iu, sampler=sampler)
+                k=prog.k, use_iu=use_iu, sampler=sampler, beta=beta)
             x, s1 = checkerboard_halfstep(
                 k1, x, unary, pairwise, jnp.int32(1), clamp=clamp,
-                k=prog.k, use_iu=use_iu, sampler=sampler)
+                k=prog.k, use_iu=use_iu, sampler=sampler, beta=beta)
             flat = x.reshape(b, h * w)
             onehot = (flat[..., None] == jnp.arange(L)).astype(jnp.int32)
             kept = ((offset + i) % thin) == 0
@@ -192,9 +205,10 @@ def make_mrf_round_runner(prog: CompiledMRF, *, sweeps_per_round: int,
 def make_fg_round_runner(prog: CompiledFactorGraph, *,
                          sweeps_per_round: int, thin: int, use_iu: bool,
                          sampler: str = "xla", mesh=None):
-    """Jitted ``(key, x, offset) -> (x, counts, xmean, xsq, stats)`` per
-    round (sparse factor-graph / Ising family) — same contract as
-    :func:`make_round_runner`, over the graph's flat node space.
+    """Jitted ``(key, x, offset[, beta]) -> (x, counts, xmean, xsq,
+    stats)`` per round (sparse factor-graph / Ising family) — same
+    contract as :func:`make_round_runner` (including the traced
+    annealing ``beta``), over the graph's flat node space.
 
     ``x`` is the (B, n) node-state tensor; the compiled color plans and
     degree buckets are baked as constants (the plan IS the program —
@@ -217,7 +231,8 @@ def make_fg_round_runner(prog: CompiledFactorGraph, *,
             mesh, serve_fg_state_spec(mesh, prog.n_vars))
     L = prog.max_card
 
-    def round_fn(key: jax.Array, x: jax.Array, offset: jax.Array):
+    def round_fn(key: jax.Array, x: jax.Array, offset: jax.Array,
+                 beta: jax.Array | None = None):
         if state_sharding is not None:
             x = jax.lax.with_sharding_constraint(x, state_sharding)
 
@@ -229,7 +244,7 @@ def make_fg_round_runner(prog: CompiledFactorGraph, *,
                 sub, s2 = jax.random.split(sub)
                 x, st = _sparse_color_update(
                     s2, x, plan, unary, tables_flat, card, L, prog.k,
-                    use_iu, sampler)
+                    use_iu, sampler, beta)
                 bits, att = bits + st.bits_used, att + st.attempts
             onehot = (x[..., None] == jnp.arange(L)).astype(jnp.int32)
             kept = ((offset + i) % thin) == 0
@@ -284,6 +299,27 @@ class BayesNetFamily:
 
     def init_states(self, key, prog, n_lanes, evidence_values):
         return init_states(key, prog, n_lanes, evidence_values)
+
+    def clamp_states(self, prog, x, evidence_values):
+        """Re-pin the evidence columns of *existing* states — the
+        temporal warm start: retained chains from the previous slice,
+        this slice's observations."""
+        if not prog.observed:
+            return x
+        ev = jnp.asarray(evidence_values, jnp.int32)
+        if ev.ndim == 1:
+            ev = jnp.broadcast_to(ev[None], (x.shape[0], len(prog.observed)))
+        return x.at[:, jnp.asarray(prog.observed, jnp.int32)].set(ev)
+
+    def assignment_energy(self, model, assignment) -> float:
+        """-log P(x) (nats) of a full assignment over every node — the
+        MAP objective the annealed mode minimizes."""
+        e = 0.0
+        for v in range(model.n_nodes):
+            idx = tuple(int(assignment[p]) for p in model.parents[v])
+            p = float(model.cpt[v][idx + (int(assignment[v]),)])
+            e -= float(np.log(max(p, 1e-26)))
+        return e
 
     def state_spec(self, mesh):
         return serve_state_spec(mesh)
@@ -397,6 +433,33 @@ class MrfFamily:
     def init_states(self, key, prog, n_lanes, evidence_values):
         return init_mrf_states(key, prog, n_lanes, evidence_values)
 
+    def clamp_states(self, prog, x, evidence_values):
+        """Re-pin the clamped pixels of existing (B, H, W) label fields
+        (temporal warm start)."""
+        if not prog.observed:
+            return x
+        b = x.shape[0]
+        h, w = prog.shape
+        ev = jnp.asarray(evidence_values, jnp.int32)
+        if ev.ndim == 1:
+            ev = jnp.broadcast_to(ev[None], (b, len(prog.observed)))
+        flat = x.reshape(b, h * w)
+        flat = flat.at[:, jnp.asarray(prog.observed, jnp.int32)].set(ev)
+        return flat.reshape(b, h, w)
+
+    def assignment_energy(self, model, assignment) -> float:
+        """Grid energy (unary + each lattice edge once) of a full
+        assignment over every site — the MAP objective."""
+        h, w = model.shape
+        x = np.array([[int(assignment[r * w + c]) for c in range(w)]
+                      for r in range(h)])
+        unary = np.asarray(model.unary)
+        pw = np.asarray(model.pairwise)
+        e = float(unary[np.arange(h)[:, None], np.arange(w)[None, :], x].sum())
+        e += float(pw[x[:, :-1], x[:, 1:]].sum())   # horizontal edges
+        e += float(pw[x[:-1, :], x[1:, :]].sum())   # vertical edges
+        return e
+
     def state_spec(self, mesh):
         return serve_mrf_state_spec(mesh)
 
@@ -481,6 +544,30 @@ class IsingFamily:
     def init_states(self, key, prog, n_lanes, evidence_values):
         return init_fg_states(key, prog, n_lanes, evidence_values)
 
+    def clamp_states(self, prog, x, evidence_values):
+        """Re-pin the clamped spins of existing (B, n) states (temporal
+        warm start)."""
+        if not prog.observed:
+            return x
+        ev = jnp.asarray(evidence_values, jnp.int32)
+        if ev.ndim == 1:
+            ev = jnp.broadcast_to(ev[None], (x.shape[0], len(prog.observed)))
+        return x.at[:, jnp.asarray(prog.observed, jnp.int32)].set(ev)
+
+    def assignment_energy(self, model, assignment) -> float:
+        """Factor-graph energy (unary + each edge's directed table once)
+        of a full assignment over every node — the MAP objective; for an
+        Ising model this is the Hamiltonian up to its constant."""
+        fg = (model.to_factor_graph()
+              if isinstance(model, IsingModel) else model)
+        x = np.array([int(assignment[v]) for v in range(fg.n_vars)])
+        e = float(np.asarray(fg.unary)[np.arange(fg.n_vars), x].sum())
+        if len(fg.edges):
+            a, b = fg.edges[:, 0], fg.edges[:, 1]
+            e += float(np.asarray(fg.pair)[
+                np.arange(len(fg.edges)), x[a], x[b]].sum())
+        return e
+
     def state_spec(self, mesh):
         return serve_fg_state_spec(mesh)
 
@@ -529,13 +616,21 @@ ISING_FAMILY = IsingFamily()
 
 
 def family_of(model):
-    """The adapter serving a registered model (dispatch on type).
+    """The adapter serving a registered model — or a request.
+
+    Dispatches on the model's type, or, for a :class:`repro.serve.query.
+    Request`, on the *evidence payload*: a scribble mask
+    (:class:`MrfQuery`) routes to the MRF family, a spin clamp
+    (:class:`IsingQuery`) to the sparse Ising family, and a node-
+    evidence mapping (:class:`Query`) to the Bayesian-network family —
+    the same convention the JSON request-file parser uses.
 
     Example::
 
         family_of(networks.asia()).kind          # 'bayesnet'
         family_of(networks.penguin_task(8, 8)[0]).kind   # 'mrf'
         family_of(networks.ising_torus(8)).kind          # 'ising'
+        family_of(MrfQuery("penguin")).kind              # 'mrf'
     """
     if isinstance(model, BayesNet):
         return BAYESNET_FAMILY
@@ -543,6 +638,14 @@ def family_of(model):
         return MRF_FAMILY
     if isinstance(model, (IsingModel, FactorGraph)):
         return ISING_FAMILY
+    from repro.serve.query import IsingQuery, MrfQuery, Query
+    if isinstance(model, MrfQuery):
+        return MRF_FAMILY
+    if isinstance(model, IsingQuery):
+        return ISING_FAMILY
+    if isinstance(model, Query):
+        return BAYESNET_FAMILY
     raise TypeError(
-        f"no serving family for model type {type(model).__name__!r} "
-        f"(expected BayesNet, MRFGrid, IsingModel, or FactorGraph)")
+        f"no serving family for {type(model).__name__!r} "
+        f"(expected BayesNet, MRFGrid, IsingModel, FactorGraph, or a "
+        f"Query/MrfQuery/IsingQuery request)")

@@ -50,9 +50,13 @@ def parse_evidence(spec: str) -> dict[str, int]:
     return out
 
 
+MODES = ("marginals", "map")
+
+
 @dataclass
-class Query:
-    """One posterior-marginal request.
+class Request:
+    """Shared base of every query family — the fields the engine reads
+    regardless of how the evidence payload is shaped.
 
     ``n_samples`` is the *target* sample budget: roughly how many kept
     (post burn-in, thinned) draws to accumulate for this query across all
@@ -60,11 +64,51 @@ class Query:
     overshoot — rounds are quantized, a micro-batched group runs to its
     largest member's budget, and the engine's ``max_rounds`` caps the
     total.  ``Result.n_samples`` reports what was actually kept.
-    ``query_vars`` empty means "all unobserved variables".
     ``rhat_target`` / ``ess_target`` override the engine's retirement
     thresholds for this query alone (None = engine default): a latency-
     critical caller can loosen them, an accuracy-critical one can demand
     more effective samples — see ``docs/diagnostics.md``.
+
+    ``mode`` selects the inference mode (``docs/inference_modes.md``):
+
+    * ``"marginals"`` (default) — posterior marginals per query var,
+      retired on the R̂/ESS diagnostics.
+    * ``"map"`` — MAP/MPE: a simulated-annealing temperature schedule
+      sharpens the sweep toward the posterior mode, retirement is by
+      *assignment stability*, and the :class:`Result` carries
+      ``map_assignment`` / ``map_energy`` instead of marginals.
+
+    ``stream_id`` opts the query into temporal filtering: queries
+    sharing a ``stream_id`` are treated as successive *time slices* of
+    one evidence stream, and each slice's chains warm-start from the
+    previous slice's retained states (same plan, burn-in skipped) —
+    see the warm-start contract in ``docs/inference_modes.md``.
+
+    All shared fields except ``network`` are keyword-only, so each
+    subclass keeps its historical positional payload signature.
+    """
+
+    network: str
+    n_samples: int = field(default=8192, kw_only=True)
+    rhat_target: float | None = field(default=None, kw_only=True)
+    ess_target: float | None = field(default=None, kw_only=True)
+    mode: str = field(default="marginals", kw_only=True)
+    stream_id: str | None = field(default=None, kw_only=True)
+
+    def __post_init__(self) -> None:
+        if self.mode not in MODES:
+            raise ValueError(
+                f"unknown inference mode {self.mode!r} "
+                f"(accepted: {', '.join(MODES)})")
+
+
+@dataclass
+class Query(Request):
+    """One posterior request over a registered Bayesian network.
+
+    ``query_vars`` empty means "all unobserved variables"; nodes may be
+    referred to by name or id.  Budget/retirement/mode fields are the
+    shared :class:`Request` contract.
 
     Example::
 
@@ -72,17 +116,13 @@ class Query:
               n_samples=8192, ess_target=400)
     """
 
-    network: str
     evidence: Mapping[str | int, int] = field(default_factory=dict)
     query_vars: Sequence[str | int] = ()
-    n_samples: int = 8192
-    rhat_target: float | None = None
-    ess_target: float | None = None
 
 
 @dataclass
-class MrfQuery:
-    """One posterior-marginal request over a registered MRF grid.
+class MrfQuery(Request):
+    """One posterior request over a registered MRF grid.
 
     Evidence is a *pixel mask*: ``mask`` ((H, W) bool-like, True =
     observed) with the observed labels read out of ``values`` ((H, W)
@@ -97,9 +137,8 @@ class MrfQuery:
     (empty = every unclamped site — fine for small grids, prefer an
     explicit subset on big ones: convergence is judged over the query
     sites, so fewer sites also means cheaper retirement checks).
-    ``n_samples`` has :class:`Query` semantics, and ``rhat_target`` /
-    ``ess_target`` override the engine's retirement thresholds for this
-    query alone, exactly as on :class:`Query`.
+    Budget/retirement/mode fields are the shared :class:`Request`
+    contract.
 
     Example::
 
@@ -107,20 +146,16 @@ class MrfQuery:
         MrfQuery("penguin", mask, values, query_sites=((10, 10),))
     """
 
-    network: str
     mask: object = None
     values: object = None
     query_sites: Sequence[tuple[int, int]] = ()
-    n_samples: int = 8192
     mask_sites: Sequence[tuple[int, int, int]] = ()
-    rhat_target: float | None = None
-    ess_target: float | None = None
 
 
 @dataclass
-class IsingQuery:
-    """One posterior-marginal request over a registered sparse Ising
-    model (or arbitrary factor graph).
+class IsingQuery(Request):
+    """One posterior request over a registered sparse Ising model (or
+    arbitrary factor graph).
 
     Evidence is a *clamp mask* over spins: ``clamp_sites`` lists
     ``(site, spin)`` pairs, with spins in ``{-1, +1}`` (or ``{0, 1}``
@@ -133,9 +168,8 @@ class IsingQuery:
     ``query_vars``: spin ids (or ``"s<id>"`` names) to report marginals
     for; empty = every unclamped spin — fine for small graphs, prefer
     an explicit subset on big ones (convergence is judged per query
-    var).  ``n_samples`` has :class:`Query` semantics;
-    ``rhat_target`` / ``ess_target`` override the engine's retirement
-    thresholds for this query alone.
+    var).  Budget/retirement/mode fields are the shared
+    :class:`Request` contract.
 
     Example::
 
@@ -143,17 +177,13 @@ class IsingQuery:
                    query_vars=(1, 2), n_samples=4096)
     """
 
-    network: str
     clamp_sites: Sequence[tuple[int, int]] = ()
     query_vars: Sequence[str | int] = ()
-    n_samples: int = 8192
-    rhat_target: float | None = None
-    ess_target: float | None = None
 
 
 @dataclass
 class Result:
-    """Answer to one :class:`Query` (or :class:`MrfQuery`).
+    """Answer to one :class:`Request` (any family, any mode).
 
     ``rhat`` is the worst plain split-R̂ over the query variables (kept
     in both retirement modes so results stay comparable across modes);
@@ -164,6 +194,12 @@ class Result:
     / wall_s`` is the honest per-query throughput number (effective
     samples per second, vs the raw MSample/s the paper quotes).
 
+    Mode awareness: a ``mode="marginals"`` result fills ``marginals``
+    and leaves ``map_assignment`` / ``map_energy`` as None; a
+    ``mode="map"`` result does the reverse, ``converged`` means the
+    annealed assignment went stable, and :meth:`marginal` raises —
+    a MAP answer is an assignment, not a distribution.
+
     Example::
 
         res = engine.answer(Query("sprinkler", {"wetgrass": 1}, ("rain",)))
@@ -171,7 +207,7 @@ class Result:
         res.diagnostics.min_ess           # worst-case effective draws
     """
 
-    query: "Query | MrfQuery"
+    query: "Query | MrfQuery | IsingQuery"
     marginals: dict[str, np.ndarray]   # node name -> posterior P(v | e)
     n_samples: int                     # kept draws actually accumulated
     n_sweeps: int                      # total sweeps incl. burn-in
@@ -182,8 +218,17 @@ class Result:
     wall_s: float                      # wall time of the micro-batch group
     bits_per_sample: float = 0.0       # random bits per free-node draw
     diagnostics: "Diagnostics | None" = None  # rank-R̂/ESS payload
+    map_assignment: dict[str, int] | None = None  # mode="map": var -> label
+    map_energy: float | None = None    # mode="map": -log P̃(assignment, e)
+    warm_start: bool = False           # temporal: lanes seeded from a
+    #                                    previous slice's retained states
 
     def marginal(self, var: str) -> np.ndarray:
+        if self.map_assignment is not None:
+            raise ValueError(
+                f"this is a mode='map' result — it carries a point "
+                f"assignment (map_assignment/map_energy), not marginal "
+                f"distributions; asked for marginal({var!r})")
         try:
             return self.marginals[var]
         except KeyError:
@@ -215,7 +260,7 @@ class QueryHandle:
     a no-op returning False.
     """
 
-    def __init__(self, query: Query, *, on_cancel=None):
+    def __init__(self, query: Request, *, on_cancel=None):
         self.query = query
         # monotonic, not wall-clock: deadline/wait math must never see a
         # stepped clock (repro.serve.telemetry owns the clock choice)

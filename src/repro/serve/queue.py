@@ -5,8 +5,10 @@ it a pre-assembled batch; real serving traffic arrives one query at a
 time from many clients.  :class:`AdmissionQueue` closes that gap — the
 serving analogue of AIA's compiler keeping 16 cores busy from a stream
 of independent programs (paper §III): incoming queries accumulate in
-per-``(network, evidence-pattern)`` buckets, and a bucket dispatches as
-one packed :class:`repro.serve.engine.GroupRun` when either
+per-``(network, evidence-pattern, mode)`` buckets (marginal and MAP
+groups run different round programs, so they never share lanes), and a
+bucket dispatches as one packed :class:`repro.serve.engine.GroupRun`
+when either
 
 * a **deadline** fires — the bucket's oldest query has waited
   ``max_wait_ms`` (bounds tail latency under trickle traffic), or
@@ -24,6 +26,13 @@ its chain lanes mid-flight and the queue *backfills* them with waiting
 queries of the same plan — lanes stay hot instead of idling until the
 slowest group member converges.
 
+Temporal filtering (``Request.stream_id``) adds one scheduling rule:
+slices of the same stream are *serialized* — a dispatch (or backfill)
+never takes a stream's next slice while an earlier slice of that stream
+is still queued in the same batch or running, because slice ``t+1``
+warm-starts from slice ``t``'s retained chains and must therefore
+observe its retirement.  Distinct streams still pack together freely.
+
 Single dispatcher thread; the queue owns the engine while open (do not
 call ``answer_batch`` on the same engine concurrently).  Buckets are
 served FIFO by their oldest arrival, so no evidence pattern starves.
@@ -36,7 +45,8 @@ from collections import deque
 from dataclasses import dataclass, field
 
 from repro.serve.engine import GroupEntry, GroupRun, PosteriorEngine
-from repro.serve.query import MrfQuery, Query, QueryHandle, QueryStatus  # noqa: F401
+from repro.serve.query import (  # noqa: F401
+    MrfQuery, Query, QueryHandle, QueryStatus, Request)
 from repro.serve.telemetry import monotonic
 from repro.sharding.specs import serve_lane_multiple
 
@@ -125,7 +135,7 @@ class AdmissionQueue:
         self._thread.start()
 
     # -- client side -------------------------------------------------------
-    def submit(self, query: "Query | MrfQuery") -> QueryHandle:
+    def submit(self, query: Request) -> QueryHandle:
         """Admit one query; returns its future.  Raises immediately on
         malformed queries (unknown network, bad evidence, observed
         query vars) — validation must not wait for the dispatcher."""
@@ -140,7 +150,9 @@ class AdmissionQueue:
             if self._closed:
                 raise RuntimeError("queue is closed")
             self._buckets.setdefault(
-                (query.network, pattern), deque()).append(entry)
+                (query.network, pattern,
+                 getattr(query, "mode", "marginals")),
+                deque()).append(entry)
             self.stats.submitted += 1
             depth = sum(len(d) for d in self._buckets.values())
             self._cv.notify_all()
@@ -167,13 +179,18 @@ class AdmissionQueue:
         seen: dict[tuple, object] = {}
         for q in traffic:
             _, _, _, pattern = self.engine.normalize(q)
-            seen.setdefault((q.network, pattern), q)
+            # mode keys the probe too: MAP groups trace the annealed
+            # (4-arg) round program, a distinct XLA build per plan
+            seen.setdefault(
+                (q.network, pattern, getattr(q, "mode", "marginals")), q)
         for q in seen.values():
             # minimal-budget probe: compiling the (plan, shape) is the
             # point — n_samples=1 clamps each rung to min_rounds instead
             # of sampling the caller's full budget per shape.  replace()
             # keeps this family-agnostic (Query and MrfQuery alike).
-            probe = dataclasses.replace(q, n_samples=1)
+            # stream_id is stripped: a probe must not retain chains that
+            # would warm-start the stream's real first slice off-protocol.
+            probe = dataclasses.replace(q, n_samples=1, stream_id=None)
             n = 1
             while True:
                 # a full pop of max_group_queries pads to the pow2 above
@@ -260,7 +277,12 @@ class AdmissionQueue:
 
     def _pop_ready_locked(self):
         """Oldest-arrival ripe bucket (FIFO across evidence patterns),
-        popped up to the size trigger; None if nothing is ripe."""
+        popped up to the size trigger; None if nothing is ripe.
+
+        Same-stream serialization: at most one slice per ``stream_id``
+        leaves the bucket per dispatch — later slices of a stream
+        already in the batch are held back (in order) so they can
+        warm-start from the earlier slice's retired chains."""
         now = monotonic()
         ready = [(dq[0].handle.t_submit, key)
                  for key, dq in self._buckets.items() if self._ripe(dq, now)]
@@ -268,9 +290,22 @@ class AdmissionQueue:
             return None
         _, key = min(ready)
         dq = self._buckets[key]
-        batch = [dq.popleft() for _ in range(
-            min(len(dq), self.max_group_queries))]
-        if not dq:
+        batch: list[GroupEntry] = []
+        held: list[GroupEntry] = []
+        streams: set[str] = set()
+        while dq and len(batch) < self.max_group_queries:
+            e = dq.popleft()
+            sid = getattr(e.query, "stream_id", None)
+            if sid is not None and sid in streams:
+                held.append(e)
+                continue
+            if sid is not None:
+                streams.add(sid)
+            batch.append(e)
+        held.extend(dq)
+        if held:
+            self._buckets[key] = deque(held)
+        else:
             del self._buckets[key]
         return key, batch
 
@@ -289,9 +324,16 @@ class AdmissionQueue:
             return any(k != key and self._ripe(dq, now)
                        for k, dq in self._buckets.items())
 
-    def _take_pending(self, key: tuple, n: int) -> list[GroupEntry]:
-        """Up to ``n`` waiting entries of one plan bucket, for backfill."""
+    def _take_pending(self, key: tuple, n: int,
+                      exclude_streams=frozenset()) -> list[GroupEntry]:
+        """Up to ``n`` waiting entries of one plan bucket, for backfill.
+
+        ``exclude_streams`` holds the stream ids still running in the
+        dispatching group: their next slices are left queued (in order)
+        until the running slice retires and retains its chains."""
         out: list[GroupEntry] = []
+        held: list[GroupEntry] = []
+        streams: set[str] = set(exclude_streams)
         with self._cv:
             dq = self._buckets.get(key)
             while dq and len(out) < n:
@@ -301,9 +343,18 @@ class AdmissionQueue:
                     self.stats.cancelled_pending += 1
                     self._tel_done(e, "cancelled")
                     continue
+                sid = getattr(e.query, "stream_id", None)
+                if sid is not None and sid in streams:
+                    held.append(e)
+                    continue
+                if sid is not None:
+                    streams.add(sid)
                 out.append(e)
-            if dq is not None and not dq:
-                del self._buckets[key]
+            if dq is not None:
+                if held:
+                    dq.extendleft(reversed(held))
+                if not dq:
+                    del self._buckets[key]
         return out
 
     def _run(self) -> None:
@@ -323,7 +374,7 @@ class AdmissionQueue:
             self._dispatch(key, batch)
 
     def _dispatch(self, key: tuple, batch: list[GroupEntry]) -> None:
-        name, pattern = key
+        name, pattern = key[0], key[1]
         for e in batch:
             e.handle._mark_running()
         try:
@@ -366,7 +417,14 @@ class AdmissionQueue:
                         self._tel_done(e, "completed")
                 if (self.backfill and run.active and run.free_slots()
                         and not self._other_bucket_ripe(key)):
-                    for e in self._take_pending(key, run.free_slots()):
+                    busy_streams = set()
+                    for s in run.slots:
+                        if not s.done and s.entry is not None:
+                            sid = getattr(s.entry.query, "stream_id", None)
+                            if sid is not None:
+                                busy_streams.add(sid)
+                    for e in self._take_pending(key, run.free_slots(),
+                                                busy_streams):
                         with self._cv:
                             self._inflight.append(e)
                         e.handle._mark_running()

@@ -241,9 +241,12 @@ class TestMrfQueueServing:
         mask_a, values = _scribble(8, 8, seed=0, frac=0.2)
         mask_b, _ = _scribble(8, 8, seed=1, frac=0.2)
         traffic = [
-            MrfQuery("p", mask_a, values, _free_sites(mask_a, 2), 2048),
-            MrfQuery("p", mask_b, values, _free_sites(mask_b, 1), 1024),
-            MrfQuery("p", mask_a, 1 - values, _free_sites(mask_a, 2), 2048),
+            MrfQuery("p", mask_a, values, _free_sites(mask_a, 2),
+                     n_samples=2048),
+            MrfQuery("p", mask_b, values, _free_sites(mask_b, 1),
+                     n_samples=1024),
+            MrfQuery("p", mask_a, 1 - values, _free_sites(mask_a, 2),
+                     n_samples=2048),
         ]
         kw = dict(chains_per_query=8, burn_in=16, max_rounds=8)
         ref = PosteriorEngine({"p": mrf}, **kw, seed=11).answer_batch(traffic)
@@ -276,7 +279,7 @@ class TestMrfQueueServing:
         mask, values = _scribble(6, 6, seed=3, frac=0.2)
         res = eng.answer_batch([
             Query("sprinkler", {"wetgrass": 1}, ("rain",), n_samples=512),
-            MrfQuery("p", mask, values, _free_sites(mask, 2), 512),
+            MrfQuery("p", mask, values, _free_sites(mask, 2), n_samples=512),
         ])
         assert set(res[0].marginals) == {"rain"}
         assert all(name.startswith("s") for name in res[1].marginals)
