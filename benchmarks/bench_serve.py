@@ -45,6 +45,16 @@ engine's ``retirement`` mode so the gate can refuse to compare a
 rank-mode run against a legacy-mode baseline.  ``-`` writes it to
 stdout.
 
+``--overload`` adds the scale-out front-end overload benchmark
+(:func:`run_overload`): a fresh HTTP server (``repro.serve.server``)
+first proves served results **bitwise identical** to an in-process
+``answer_batch`` on the same seed, then its sustained closed-loop
+capacity is measured, and traffic is offered open-loop at 2x that
+capacity against a per-tenant token-bucket quota set to capacity — the
+report carries served p50/p99 latency and the shed rate (429/503), and
+``check_serve_regression`` holds the shed-rate floor plus a bounded
+p99 (shedding at the front door instead of queue collapse).
+
 ``--diagnostics-json`` additionally runs the same traffic under both
 retirement rules (``legacy`` plain split-R̂ vs ``rank`` rank-R̂ + ESS)
 and writes a ``BENCH_diagnostics.json`` artifact with per-mode
@@ -401,6 +411,140 @@ def run_stream(name, network, *, n_queries=32, n_patterns=2, budget=2048,
             **{k: v for k, v in metrics.items() if k != "submitted"},
             "metrics": stream_engine.telemetry.metrics_snapshot(),
             "identical": bool(identical)}
+
+
+def run_overload(network="asia", *, n_queries=6, n_patterns=2, budget=256,
+                 chains=8, overload_factor=2.0, capacity_passes=3,
+                 n_offered=None, report=print):
+    """Scale-out front-end overload benchmark (SLO serving under 2x
+    offered load) — three phases against one HTTP server process:
+
+    1. **identity** — a fresh single-worker server serves the traffic
+       via ``/v2/batch``; marginals must come back bitwise identical to
+       a fresh in-process ``answer_batch`` on the same seed (floats
+       survive JSON exactly; the engine PRNG advances with traffic, so
+       only the *first* batch on a fresh server can be compared);
+    2. **capacity** — closed-loop sequential serving over the now-warm
+       plans measures the sustained queries/s one worker holds;
+    3. **overload** — a second front end over the same warm pool gets a
+       per-tenant token bucket at exactly that capacity (small burst)
+       and is offered open-loop traffic at ``overload_factor`` times
+       capacity.  Over-quota requests shed with 429 (+ Retry-After)
+       at the front door, so the admitted subset keeps bounded latency
+       instead of every caller timing out in a collapsing queue.
+
+    Reported: capacity/offered qps, shed rate, served p50/p99 ms and
+    ``mean_service_ms`` (1000/capacity) — the self-relative yardstick
+    ``check_serve_regression`` holds p99 against."""
+    import threading
+
+    from repro.pgm import networks
+    from repro.serve.cli import synthetic_traffic
+    from repro.serve.client import ServeClient, ServeHTTPError
+    from repro.serve.engine import PosteriorEngine
+    from repro.serve.protocol import wire_marginals
+    from repro.serve.server import start_in_thread
+    from repro.serve.worker import WorkerPool
+
+    bn = getattr(networks, network)()
+    registry = {network: bn}
+    traffic = synthetic_traffic(
+        bn, network, n_queries, n_patterns, np.random.default_rng(0), budget)
+    kw = dict(chains_per_query=chains, burn_in=32, seed=7)
+    pool = WorkerPool(lambda name: PosteriorEngine(registry, **kw), 1,
+                      queue_kwargs={"max_wait_ms": 5.0})
+    fe = start_in_thread(pool, port=0)
+    overload_fe = None
+    try:
+        client = ServeClient("127.0.0.1", fe.port)
+        # -- phase 1: bitwise identity (fresh server, first batch) ----
+        wire = client.query_batch(traffic)
+        ref = PosteriorEngine(registry, **kw).answer_batch(traffic)
+        identical = all(
+            set(wire_marginals(w)) == {str(k) for k in r.marginals}
+            and all(np.array_equal(wire_marginals(w)[str(k)],
+                                   np.asarray(m, np.float64))
+                    for k, m in r.marginals.items())
+            for w, r in zip(wire, ref))
+
+        # -- phase 2: closed-loop capacity on warm plans --------------
+        n_cap = len(traffic) * capacity_passes
+        t0 = time.perf_counter()
+        for i in range(n_cap):
+            client.query(traffic[i % len(traffic)])
+        capacity_qps = n_cap / (time.perf_counter() - t0)
+
+        # -- phase 3: open-loop overload at 2x capacity ---------------
+        offered_qps = overload_factor * capacity_qps
+        if n_offered is None:  # ~2s of offered traffic, bounded
+            n_offered = int(min(200, max(32, 2 * offered_qps)))
+        overload_fe = start_in_thread(
+            pool, port=0, quota_qps=capacity_qps, quota_burst=2.0)
+        oclient = ServeClient("127.0.0.1", overload_fe.port)
+        lock = threading.Lock()
+        outcomes: list[tuple[str, float]] = []
+
+        def _one(i: int) -> None:
+            t = time.perf_counter()
+            try:
+                oclient.query(traffic[i % len(traffic)])
+                kind = "served"
+            except ServeHTTPError as exc:
+                kind = "shed" if exc.status in (429, 503) else "error"
+            except Exception:
+                kind = "error"
+            with lock:
+                outcomes.append((kind, (time.perf_counter() - t) * 1e3))
+
+        threads = []
+        t_start = time.perf_counter()
+        for i in range(n_offered):
+            due = t_start + i / offered_qps
+            while True:
+                dt = due - time.perf_counter()
+                if dt <= 0:
+                    break
+                time.sleep(min(dt, 0.01))
+            th = threading.Thread(target=_one, args=(i,), daemon=True)
+            th.start()
+            threads.append(th)
+        for th in threads:
+            th.join(timeout=300)
+        wall = time.perf_counter() - t_start
+    finally:
+        if overload_fe is not None:
+            overload_fe.stop_thread()
+        fe.stop_thread()
+        pool.close(drain=False, timeout=30.0)
+
+    served = [ms for kind, ms in outcomes if kind == "served"]
+    shed = sum(1 for kind, _ in outcomes if kind == "shed")
+    errors = sum(1 for kind, _ in outcomes if kind == "error")
+    p50 = float(np.percentile(served, 50)) if served else float("nan")
+    p99 = float(np.percentile(served, 99)) if served else float("nan")
+    out = {
+        "network": network,
+        "n_queries": len(traffic),
+        "identical": bool(identical),
+        "capacity_qps": capacity_qps,
+        "overload_factor": overload_factor,
+        "offered_qps": offered_qps,
+        "n_offered": int(n_offered),
+        "served": len(served),
+        "shed": int(shed),
+        "errors": int(errors),
+        "shed_rate": shed / max(n_offered, 1),
+        "served_qps": len(served) / max(wall, 1e-9),
+        "p50_ms": p50,
+        "p99_ms": p99,
+        "mean_service_ms": 1e3 / max(capacity_qps, 1e-9),
+    }
+    report(row(
+        "serve_overload", p99 * 1e3,
+        f"capacity_qps={capacity_qps:.2f};offered_qps={offered_qps:.2f};"
+        f"shed_rate={out['shed_rate']:.2f};p50_ms={p50:.1f};"
+        f"p99_ms={p99:.1f};errors={errors};identical={identical}"))
+    return out
 
 
 def run_map(name, network, *, n_queries=16, n_patterns=2, budget=1024,
@@ -832,6 +976,10 @@ def _cli(argv=None):
     ap.add_argument("--scaling", default="",
                     help="comma-separated forced-host device counts, "
                          "e.g. 1,2,4,8 — runs one subprocess per count")
+    ap.add_argument("--overload", action="store_true",
+                    help="add the HTTP front-end overload benchmark: "
+                         "bitwise served-vs-answer_batch identity, then "
+                         "p50/p99 + shed rate at 2x measured capacity")
     ap.add_argument("--million-spin", action="store_true",
                     help="add the million-spin torus capacity datapoint "
                          "(compile wall + spin-updates/s; weekly CI)")
@@ -864,6 +1012,8 @@ def _cli(argv=None):
         with open(args.diagnostics_json, "w") as f:
             json.dump(diag, f, indent=2)
         print(f"# wrote {args.diagnostics_json}")
+    if args.overload:
+        rep["overload"] = run_overload()
     if args.million_spin:
         rep["million_spin"] = run_million_spin(side=args.million_spin_side)
     if args.scaling:

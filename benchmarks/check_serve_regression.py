@@ -33,6 +33,20 @@ Checks, per run matched by name against the baseline:
   latency ratio at least ``--min-filtering-speedup`` (self-relative:
   warm slices skip burn-in, cold re-solves pay it) and warm slices/s
   against the baseline under the shared tolerance.
+* the ``overload`` section (``bench_serve --overload``, when either
+  report carries one): the served-vs-``answer_batch`` bitwise
+  ``identical`` bit must be True (served over real HTTP, fresh server,
+  same seed), the shed rate at 2x offered capacity must be at least
+  ``--min-overload-shed`` (the front end must shed at the door — a
+  zero shed rate under 2x load means every request is piling into the
+  queue), hard transport ``errors`` must be zero (shedding is a *clean*
+  429/503 + Retry-After, never a dropped connection), and served p99
+  latency must stay within ``--max-overload-p99-ratio`` times the
+  report's own mean service time (self-relative: bounded latency for
+  the admitted subset is the whole point of shedding — a collapsing
+  queue shows up here as p99 growing with the run length).  Capacity
+  queries/s is additionally compared against the baseline under the
+  shared tolerance.
 * the ``sampler_pallas`` section (when the current report carries one):
   the fused-kernel-vs-XLA bitwise ``identical`` bit must be True on
   every platform — it is the whole contract of ``sampler="pallas"`` —
@@ -138,6 +152,8 @@ def check(current: dict, baseline: dict, *, tolerance: float,
           telemetry_overhead_tolerance: float = 0.05,
           min_pallas_speedup: float = 1.0,
           min_filtering_speedup: float = 1.2,
+          min_overload_shed: float = 0.2,
+          max_overload_p99_ratio: float = 50.0,
           ) -> tuple[list[Failure], list[Failure]]:
     """Returns ``(regressions, setup_errors)`` — setup errors (exit 2)
     are comparisons that *cannot* be made: current runs with no baseline
@@ -292,6 +308,57 @@ def check(current: dict, baseline: dict, *, tolerance: float,
             "filtering", observed="absent",
             note="baseline has a filtering section but current doesn't"))
 
+    # overload section (bench_serve --overload): SLO serving under 2x
+    # offered load over real HTTP.  Identity and clean shedding are
+    # contract bits; the p99 bound is self-relative (vs this report's
+    # own mean service time); capacity qps diffs against the baseline.
+    ov, base_ov = current.get("overload"), baseline.get("overload")
+    if ov is not None:
+        p99_cap = max_overload_p99_ratio * ov["mean_service_ms"]
+        print(f"overload: capacity {ov['capacity_qps']:.2f} qps, offered "
+              f"{ov['offered_qps']:.2f} qps, shed rate "
+              f"{ov['shed_rate']:.2f} (floor {min_overload_shed:.2f}), "
+              f"p50 {ov['p50_ms']:.1f} ms, p99 {ov['p99_ms']:.1f} ms "
+              f"(cap {p99_cap:.1f} ms), errors {ov['errors']}")
+        if not ov.get("identical", False):
+            failures.append(Failure(
+                "overload.identical", observed=False,
+                note="HTTP-served marginals are not bitwise identical "
+                     "to in-process answer_batch on the same seed"))
+        if ov["shed_rate"] < min_overload_shed:
+            failures.append(Failure(
+                "overload.shed_rate", observed=round(ov["shed_rate"], 3),
+                floor=min_overload_shed,
+                note="2x offered load is not being shed at the front "
+                     "door — it is piling into the queue instead"))
+        if ov["errors"]:
+            failures.append(Failure(
+                "overload.errors", observed=ov["errors"], floor=0.0,
+                note="overload must shed with clean 429/503 responses, "
+                     "never dropped connections or transport errors"))
+        if not ov["p99_ms"] <= p99_cap:   # NaN (nothing served) fails too
+            failures.append(Failure(
+                "overload.p99_ms", observed=round(ov["p99_ms"], 1),
+                floor=p99_cap,
+                note="served p99 blew past the bounded-latency cap — "
+                     "queue collapse instead of admission shedding"))
+        if base_ov is not None:
+            f = _qps_check("overload.capacity_qps", ov["capacity_qps"],
+                           base_ov["capacity_qps"], tolerance)
+            if f:
+                failures.append(f)
+        else:
+            setup.append(Failure(
+                "overload.capacity_qps",
+                observed=round(ov["capacity_qps"], 3),
+                note="no baseline overload section — refresh the "
+                     "baseline with --update and commit it"))
+    elif base_ov is not None:
+        failures.append(Failure(
+            "overload", observed="absent",
+            note="baseline has an overload section but current doesn't "
+                 "(did the bench run without --overload?)"))
+
     # telemetry overhead: self-relative (null vs enabled recorder were
     # measured in the same process on identical traffic), so no baseline
     # entry is consulted — the floor is the current report's own null
@@ -366,6 +433,14 @@ def main(argv=None) -> None:
                     help="required cold/warm per-slice latency ratio for "
                          "the temporal-filtering section (warm slices "
                          "skip burn-in; self-relative)")
+    ap.add_argument("--min-overload-shed", type=float, default=0.2,
+                    help="required shed rate under 2x offered capacity "
+                         "in the overload section (shed at the front "
+                         "door, not queue collapse)")
+    ap.add_argument("--max-overload-p99-ratio", type=float, default=50.0,
+                    help="served p99 latency cap for the overload "
+                         "section, as a multiple of the report's own "
+                         "mean service time (self-relative)")
     ap.add_argument("--update", action="store_true",
                     help="overwrite the baseline with the current report")
     args = ap.parse_args(argv)
@@ -388,7 +463,9 @@ def main(argv=None) -> None:
         min_stream_speedup=args.min_stream_speedup,
         telemetry_overhead_tolerance=args.telemetry_overhead_tolerance,
         min_pallas_speedup=args.min_pallas_speedup,
-        min_filtering_speedup=args.min_filtering_speedup)
+        min_filtering_speedup=args.min_filtering_speedup,
+        min_overload_shed=args.min_overload_shed,
+        max_overload_p99_ratio=args.max_overload_p99_ratio)
     for f in failures + setup:
         print(f)
     if setup:

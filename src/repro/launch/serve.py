@@ -3,6 +3,15 @@
   PYTHONPATH=src python -m repro.launch.serve --arch phi4-mini-3.8b \
       --smoke --batch 4 --prompt-len 16 --max-new 32 --sampler ky
 
+``--serve [HOST:]PORT`` runs the posterior service as a network front
+end (HTTP/WebSocket over a consistent-hash-routed worker pool — see
+``docs/serving.md``) and ``--connect`` drives one as a client:
+
+  PYTHONPATH=src python -m repro.launch.serve --serve :8080 --workers 2 \
+      --scheduler deadline --quota-qps 50
+  PYTHONPATH=src python -m repro.launch.serve --connect :8080 --stream \
+      --network asia --queries 32
+
 ``--stream`` switches to the *posterior* streaming service instead:
 for Bayesian networks the synthetic traffic becomes the streaming-
 sensor scenario — ``--patterns`` sensor streams re-observed over
@@ -30,9 +39,10 @@ from repro.serve.telemetry import monotonic
 
 def main(argv: list[str] | None = None) -> None:
     argv = list(sys.argv[1:] if argv is None else argv)
-    if "--stream" in argv:
-        # streaming posterior traffic lives in repro.serve.cli (jax must
-        # not initialize before its --force-host-devices handling runs)
+    if any(a == "--stream" or a.split("=", 1)[0] in ("--serve", "--connect")
+           for a in argv):
+        # posterior streaming/service modes live in repro.serve.cli (jax
+        # must not initialize before its --force-host-devices handling)
         from repro.serve.cli import main as serve_main
         serve_main(argv)
         return

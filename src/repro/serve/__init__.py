@@ -39,15 +39,28 @@ registry — a no-op :class:`NullTelemetry` by default, and
 :meth:`PosteriorEngine.stats` snapshots the plan-cache/queue counters
 either way.  See ``docs/observability.md``.
 
+Scale-out serving (:mod:`repro.serve.server` / ``worker`` /
+``protocol`` / ``client``): an asyncio HTTP + WebSocket front end over
+a pool of engines, consistent-hash routed on the plan key, with
+per-tenant token-bucket quotas, ``max_pending`` backpressure, and an
+optional deadline (EDF) scheduler that preempts using per-query ESS
+trajectories (:mod:`repro.serve.sched`).  Start one with
+``python -m repro.serve.cli --serve :8080``; see ``docs/serving.md``.
+
 The engine (and with it jax) is imported lazily: the CLI must be able to
 apply ``--force-host-devices`` before the XLA backend initializes.
 """
 from repro.serve.plan_cache import (
     CacheStats, PlanCache, graph_fingerprint, load_compiled,
     network_fingerprint, persisted_plan_path, plan_key, save_compiled)
+from repro.serve.protocol import (
+    WIRE_VERSION, WireError, parse_wire_request, request_to_wire,
+    result_to_wire, wire_marginals)
 from repro.serve.query import (
     MODES, IsingQuery, MrfQuery, Query, QueryCancelled, QueryHandle,
     QueryStatus, Request, Result, parse_evidence)
+from repro.serve.sched import (
+    TokenBucket, deadline_order, predict_remaining_rounds)
 from repro.serve.telemetry import (
     MetricsRegistry, NullTelemetry, Telemetry, lifecycle_breakdown)
 
@@ -69,20 +82,35 @@ _LAZY = {
     "family_of": "repro.serve.families",
     "AdmissionQueue": "repro.serve.queue",
     "QueueStats": "repro.serve.queue",
+    # server/worker pull in queue -> engine -> jax, so they stay lazy
+    # (protocol/sched are jax-free and imported eagerly above; the
+    # client is jax-free too but stays lazy to keep import light)
+    "ServeFrontEnd": "repro.serve.server",
+    "start_in_thread": "repro.serve.server",
+    "HashRing": "repro.serve.worker",
+    "Worker": "repro.serve.worker",
+    "WorkerDied": "repro.serve.worker",
+    "WorkerPool": "repro.serve.worker",
+    "ServeClient": "repro.serve.client",
+    "ServeHTTPError": "repro.serve.client",
 }
 
 __all__ = [
     "AdmissionQueue", "CacheStats", "Diagnostics", "GroupRun",
-    "IsingFamily", "IsingQuery", "MODES", "MetricsRegistry", "MrfQuery",
-    "NullTelemetry", "PlanCache", "PosteriorEngine", "Query",
+    "HashRing", "IsingFamily", "IsingQuery", "MODES", "MetricsRegistry",
+    "MrfQuery", "NullTelemetry", "PlanCache", "PosteriorEngine", "Query",
     "QueryCancelled", "QueryHandle", "QueryStatus", "QueueStats",
     "RETIREMENT_MODES", "Request", "Result", "RunningDiagnostics",
-    "Telemetry",
-    "compute_diagnostics", "family_of", "graph_fingerprint",
-    "lifecycle_breakdown", "load_compiled", "make_fg_round_runner",
-    "make_mrf_round_runner", "make_round_runner", "network_fingerprint",
-    "parse_evidence", "persisted_plan_path", "plan_key", "save_compiled",
-    "split_rhat",
+    "ServeClient", "ServeFrontEnd", "ServeHTTPError", "Telemetry",
+    "TokenBucket", "WIRE_VERSION", "WireError", "Worker", "WorkerDied",
+    "WorkerPool",
+    "compute_diagnostics", "deadline_order", "family_of",
+    "graph_fingerprint", "lifecycle_breakdown", "load_compiled",
+    "make_fg_round_runner", "make_mrf_round_runner", "make_round_runner",
+    "network_fingerprint", "parse_evidence", "parse_wire_request",
+    "persisted_plan_path", "plan_key", "predict_remaining_rounds",
+    "request_to_wire", "result_to_wire", "save_compiled", "split_rhat",
+    "start_in_thread", "wire_marginals",
 ]
 
 

@@ -16,6 +16,12 @@
   # shard query groups over 4 devices (forced-host CPU recipe)
   PYTHONPATH=src python -m repro.serve.cli --network asia \
       --force-host-devices 4 --mesh-shape 4
+  # run as a service: HTTP/WebSocket front end over a worker pool
+  PYTHONPATH=src python -m repro.serve.cli --serve :8080 --workers 2 \
+      --scheduler deadline --quota-qps 50 --plan-cache-dir /tmp/aia-plans
+  # ...and drive it from another process (client mode, jax-free)
+  PYTHONPATH=src python -m repro.serve.cli --connect :8080 --stream \
+      --network asia --queries 32
 
 Request-file format: a JSON list of objects, schema-versioned by an
 optional ``"v"`` field (1 = the historical marginals-only schema, the
@@ -477,107 +483,39 @@ def _run_stream(args, engine, sync_engine, traffic, arrivals):
               f"vs {bd['e2e_p50_ms']:.0f} e2e")
 
 
-def main(argv=None) -> None:
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--network", default="asia",
-                    choices=NETWORKS + MRF_NETWORKS + ISING_NETWORKS)
-    ap.add_argument("--queries", type=int, default=64)
-    ap.add_argument("--patterns", type=int, default=4,
-                    help="distinct evidence patterns in synthetic traffic "
-                         "(scribble-mask patterns for MRF networks)")
-    ap.add_argument("--mrf-shape", default="24x24",
-                    help="HxW lattice size of the served MRF models")
-    ap.add_argument("--ising-side", type=int, default=16,
-                    help="side of the served ising_torus lattice "
-                         "(side² spins)")
-    ap.add_argument("--requests", default="",
-                    help="JSON request file (overrides synthetic traffic)")
-    ap.add_argument("--mode", default="marginals", choices=MODES,
-                    help="inference mode for synthetic traffic: posterior "
-                         "marginals (default) or annealed MAP/MPE search")
-    ap.add_argument("--slices", type=int, default=0,
-                    help="time slices per sensor stream in the --stream "
-                         "scenario (0 = queries/patterns); BN traffic "
-                         "becomes temporal-filtering slice traffic")
-    ap.add_argument("--chains", type=int, default=32)
-    ap.add_argument("--budget", type=int, default=4096,
-                    help="sample budget per query")
-    ap.add_argument("--burn-in", type=int, default=64)
-    ap.add_argument("--rhat", type=float, default=1.05)
-    ap.add_argument("--ess-target", type=float, default=100.0,
-                    help="min effective sample size (bulk and tail) a "
-                         "query needs before rank-mode retirement")
-    ap.add_argument("--retirement", default="rank",
-                    choices=("rank", "legacy"),
-                    help="retirement rule: rank-normalized R-hat + ESS "
-                         "(default) or the legacy plain split-R-hat")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--no-iu", action="store_true")
-    ap.add_argument("--stream", action="store_true",
-                    help="replay traffic open-loop through the admission "
-                         "queue; report p50/p99 latency + queries/s vs the "
-                         "one-query-at-a-time synchronous baseline")
-    ap.add_argument("--rate", type=float, default=0.0,
-                    help="open-loop arrival rate (queries/s) for --stream; "
-                         "0 = 4x the measured synchronous rate")
-    ap.add_argument("--max-wait-ms", type=float, default=20.0,
-                    help="admission-queue deadline trigger")
-    ap.add_argument("--plan-cache-dir", default="",
-                    help="persist compiled plans here (.npz per plan-key); "
-                         "warm process starts skip the compiler chain")
-    ap.add_argument("--mesh-shape", default="",
-                    help="serve mesh, e.g. 4 or 2x2 — shard chain lanes "
-                         "over devices")
-    ap.add_argument("--force-host-devices", type=int, default=0,
-                    help="split the CPU into N fake devices "
-                         "(XLA_FLAGS recipe, applied before first jax use)")
-    ap.add_argument("--show", type=int, default=3,
-                    help="print marginals of the first N queries")
-    ap.add_argument("--trace-out", default="",
-                    help="write a Chrome/Perfetto trace-event JSON of the "
-                         "run here (enables the telemetry recorder)")
-    ap.add_argument("--metrics-json", default="",
-                    help="write the engine.stats() snapshot (plan cache, "
-                         "queue, metrics registry) here as JSON; also "
-                         "enables the telemetry recorder")
-    args = ap.parse_args(argv)
+def _parse_addr(spec: str, *, default_host: str = "127.0.0.1"):
+    """``[HOST:]PORT`` -> ``(host, port)`` (``":8080"`` binds default)."""
+    host, _, port = spec.rpartition(":")
+    try:
+        return (host or default_host), int(port)
+    except ValueError:
+        raise SystemExit(
+            f"bad address {spec!r}: expected [HOST:]PORT") from None
 
-    if args.force_host_devices:
-        from repro.launch.mesh import force_host_devices
-        force_host_devices(args.force_host_devices)
-    from repro.serve.engine import PosteriorEngine
 
-    mesh = None
-    if args.mesh_shape:
-        import jax
-
-        from repro.launch.mesh import make_serve_mesh, parse_mesh_shape
-        mesh = make_serve_mesh(parse_mesh_shape(args.mesh_shape))
-        print(f"serve mesh {dict(mesh.shape)} over "
-              f"{mesh.devices.size}/{len(jax.devices())} devices")
-
+def _parse_mrf_shape(args) -> tuple[int, int]:
     try:
         mrf_shape = tuple(int(s) for s in args.mrf_shape.lower().split("x"))
     except ValueError:
         mrf_shape = ()
     if len(mrf_shape) != 2 or any(s < 2 for s in mrf_shape):
         raise SystemExit(f"bad --mrf-shape {args.mrf_shape!r}: expected HxW")
-    if args.ising_side < 3:
-        raise SystemExit(
-            f"bad --ising-side {args.ising_side}: the torus needs >= 3")
-    registry = build_registry(mrf_shape=mrf_shape,
-                              ising_side=args.ising_side)
-    engine_kw = dict(
+    return mrf_shape
+
+
+def _engine_kwargs(args, mesh=None) -> dict:
+    return dict(
         chains_per_query=args.chains, burn_in=args.burn_in,
         rhat_target=args.rhat, ess_target=args.ess_target,
         retirement=args.retirement, use_iu=not args.no_iu, mesh=mesh,
         plan_cache_dir=args.plan_cache_dir or None, seed=args.seed)
-    # The recorder goes on the engine under measurement (the queued one
-    # in stream mode); the sync baseline engine stays on the shared
-    # no-op recorder so its rate is an honest telemetry-free number.
-    tel = Telemetry() if (args.trace_out or args.metrics_json) else None
-    engine = PosteriorEngine(registry, telemetry=tel, **engine_kw)
 
+
+def build_traffic(args, registry):
+    """The CLI's traffic source: a request file or synthetic queries
+    against ``registry`` — returns ``(queries, arrivals-or-None)``.
+    jax-free, so client mode (``--connect``) can build the same traffic
+    without initializing an engine."""
     arrivals = None
     if args.requests:
         traffic, arrivals = load_requests(args.requests)
@@ -625,6 +563,269 @@ def main(argv=None) -> None:
     if args.mode != "marginals":
         import dataclasses
         traffic = [dataclasses.replace(q, mode=args.mode) for q in traffic]
+    return traffic, arrivals
+
+
+def _run_serve(args, registry, engine_kw) -> None:
+    """``--serve``: run the HTTP/WebSocket front end on this thread's
+    event loop until interrupted.  One engine per worker; all workers
+    share the persisted plan-cache dir (compiles are written atomically,
+    so whoever compiles first persists for everyone)."""
+    import asyncio
+
+    from repro.serve.engine import PosteriorEngine
+    from repro.serve.server import ServeFrontEnd
+    from repro.serve.worker import WorkerPool
+
+    host, port = _parse_addr(args.serve)
+    want_tel = bool(args.trace_out or args.metrics_json)
+
+    def factory(name: str) -> PosteriorEngine:
+        # one recorder per worker (Telemetry tracks are engine-local)
+        return PosteriorEngine(
+            registry, telemetry=Telemetry() if want_tel else None,
+            **engine_kw)
+
+    pool = WorkerPool(
+        factory, args.workers,
+        queue_kwargs={"max_wait_ms": args.max_wait_ms,
+                      "scheduler": args.scheduler})
+    fe = ServeFrontEnd(
+        pool, host=host, port=port,
+        quota_qps=args.quota_qps or None,
+        quota_burst=args.quota_burst or None,
+        max_pending=args.max_pending)
+
+    async def _serve() -> None:
+        await fe.start()
+        quota = (f", quota {args.quota_qps:g} qps/tenant"
+                 if args.quota_qps else "")
+        print(f"serving {len(registry)} networks on http://{host}:{fe.port}"
+              f" ({args.workers} workers, {args.scheduler} scheduler"
+              f"{quota}, max_pending {args.max_pending}) — Ctrl-C to stop",
+              flush=True)
+        await fe._stopping.wait()
+        await fe.stop()
+
+    try:
+        asyncio.run(_serve())
+    except KeyboardInterrupt:
+        print("interrupt: shutting down")
+    finally:
+        pool.close(drain=False, timeout=10.0)
+
+
+def _run_connect(args) -> None:
+    """``--connect``: drive a running front end as a client.  jax-free
+    unless ``--identity-check`` (which replays the same batch through an
+    in-process engine for the bitwise comparison)."""
+    from repro.serve.client import ServeClient, ServeHTTPError
+
+    host, port = _parse_addr(args.connect)
+    registry = build_registry(mrf_shape=_parse_mrf_shape(args),
+                              ising_side=args.ising_side)
+    traffic, arrivals = build_traffic(args, registry)
+    client = ServeClient(host, port)
+    client.wait_ready(timeout=120.0)
+
+    if args.identity_check:
+        # bitwise identity needs a *fresh* server (PRNG state advances
+        # with traffic) and one routed worker — /v2/batch guarantees the
+        # latter; run this before any other traffic.
+        served = client.query_batch(traffic)
+        if args.force_host_devices:
+            from repro.launch.mesh import force_host_devices
+            force_host_devices(args.force_host_devices)
+        from repro.serve.engine import PosteriorEngine
+        from repro.serve.protocol import wire_marginals
+        ref = PosteriorEngine(registry, **_engine_kwargs(args)) \
+            .answer_batch(traffic)
+        total = mismatched = 0
+        for wire_r, r in zip(served, ref):
+            if "error" in wire_r:
+                raise SystemExit(f"server error: {wire_r['error']}")
+            if r.map_assignment is not None:
+                total += 1
+                mismatched += wire_r.get("map_assignment") != r.map_assignment
+                continue
+            wm = wire_marginals(wire_r)
+            for name, arr in r.marginals.items():
+                total += 1
+                mismatched += not np.array_equal(
+                    wm[str(name)], np.asarray(arr, np.float64))
+        verdict = ("BITWISE-IDENTICAL to" if not mismatched
+                   else f"MISMATCHED ({mismatched}/{total}) vs")
+        print(f"identity: {len(served)} served results, {total} marginals "
+              f"{verdict} in-process answer_batch (seed {args.seed})")
+        if mismatched:
+            raise SystemExit(1)
+        return
+
+    t0 = monotonic()
+    if args.stream:
+        responses = client.stream(traffic, arrivals)
+    else:
+        responses = []
+        for q in traffic:
+            try:
+                responses.append(client.query(q))
+            except ServeHTTPError as exc:
+                if exc.status not in (429, 503):
+                    raise
+                responses.append(dict(exc.body, shed=True,
+                                      retry_after=exc.retry_after))
+    wall = monotonic() - t0
+    ok = [r for r in responses if "error" not in r]
+    shed = [r for r in responses if r.get("shed")]
+    failed = len(responses) - len(ok) - len(shed)
+    print(f"client: {len(ok)}/{len(responses)} served in {wall:.1f}s "
+          f"({len(ok) / max(wall, 1e-9):.1f} queries/s), "
+          f"{len(shed)} shed, {failed} failed")
+    stats = client.stats()
+    print(f"  server: served_total={stats.get('served')} "
+          f"shed={stats.get('shed')} pending={stats.get('pending')}")
+    if failed:
+        for r in responses:
+            if "error" in r and not r.get("shed"):
+                print(f"  error: {r['error']}")
+        raise SystemExit(1)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--network", default="asia",
+                    choices=NETWORKS + MRF_NETWORKS + ISING_NETWORKS)
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--patterns", type=int, default=4,
+                    help="distinct evidence patterns in synthetic traffic "
+                         "(scribble-mask patterns for MRF networks)")
+    ap.add_argument("--mrf-shape", default="24x24",
+                    help="HxW lattice size of the served MRF models")
+    ap.add_argument("--ising-side", type=int, default=16,
+                    help="side of the served ising_torus lattice "
+                         "(side² spins)")
+    ap.add_argument("--requests", default="",
+                    help="JSON request file (overrides synthetic traffic)")
+    ap.add_argument("--mode", default="marginals", choices=MODES,
+                    help="inference mode for synthetic traffic: posterior "
+                         "marginals (default) or annealed MAP/MPE search")
+    ap.add_argument("--slices", type=int, default=0,
+                    help="time slices per sensor stream in the --stream "
+                         "scenario (0 = queries/patterns); BN traffic "
+                         "becomes temporal-filtering slice traffic")
+    ap.add_argument("--chains", type=int, default=32)
+    ap.add_argument("--budget", type=int, default=4096,
+                    help="sample budget per query")
+    ap.add_argument("--burn-in", type=int, default=64)
+    ap.add_argument("--rhat", type=float, default=1.05)
+    ap.add_argument("--ess-target", type=float, default=100.0,
+                    help="min effective sample size (bulk and tail) a "
+                         "query needs before rank-mode retirement")
+    ap.add_argument("--retirement", default="rank",
+                    choices=("rank", "legacy"),
+                    help="retirement rule: rank-normalized R-hat + ESS "
+                         "(default) or the legacy plain split-R-hat")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-iu", action="store_true")
+    ap.add_argument("--stream", action="store_true",
+                    help="replay traffic open-loop through the admission "
+                         "queue; report p50/p99 latency + queries/s vs the "
+                         "one-query-at-a-time synchronous baseline")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="open-loop arrival rate (queries/s) for --stream; "
+                         "0 = 4x the measured synchronous rate")
+    ap.add_argument("--serve", default="", metavar="[HOST:]PORT",
+                    help="run the HTTP/WebSocket serving front end "
+                         "(e.g. ':8080') instead of replaying traffic "
+                         "in-process; see docs/serving.md")
+    ap.add_argument("--connect", default="", metavar="[HOST:]PORT",
+                    help="client mode: send this CLI's traffic to a "
+                         "running --serve front end (WebSocket stream "
+                         "with --stream, per-query POSTs otherwise)")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="worker engines behind the --serve front end "
+                         "(consistent-hash routed on the plan key)")
+    ap.add_argument("--scheduler", default="fifo",
+                    choices=("fifo", "deadline"),
+                    help="admission-queue scheduler for --serve: fifo or "
+                         "earliest-deadline-first with ESS-trajectory "
+                         "preemption (see docs/serving.md)")
+    ap.add_argument("--quota-qps", type=float, default=0.0,
+                    help="per-tenant admission quota for --serve "
+                         "(queries/s; 0 = unlimited); over-quota "
+                         "requests get 429 + Retry-After")
+    ap.add_argument("--quota-burst", type=float, default=0.0,
+                    help="token-bucket burst for --quota-qps "
+                         "(0 = max(1, qps))")
+    ap.add_argument("--max-pending", type=int, default=256,
+                    help="backpressure cap on in-flight queries for "
+                         "--serve; beyond it requests get 503")
+    ap.add_argument("--identity-check", action="store_true",
+                    help="client mode: send the traffic as one /v2/batch "
+                         "to a FRESH server and verify the served "
+                         "marginals are bitwise-identical to an "
+                         "in-process answer_batch on the same seed")
+    ap.add_argument("--max-wait-ms", type=float, default=20.0,
+                    help="admission-queue deadline trigger")
+    ap.add_argument("--plan-cache-dir", default="",
+                    help="persist compiled plans here (.npz per plan-key); "
+                         "warm process starts skip the compiler chain")
+    ap.add_argument("--mesh-shape", default="",
+                    help="serve mesh, e.g. 4 or 2x2 — shard chain lanes "
+                         "over devices")
+    ap.add_argument("--force-host-devices", type=int, default=0,
+                    help="split the CPU into N fake devices "
+                         "(XLA_FLAGS recipe, applied before first jax use)")
+    ap.add_argument("--show", type=int, default=3,
+                    help="print marginals of the first N queries")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome/Perfetto trace-event JSON of the "
+                         "run here (enables the telemetry recorder)")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the engine.stats() snapshot (plan cache, "
+                         "queue, metrics registry) here as JSON; also "
+                         "enables the telemetry recorder")
+    args = ap.parse_args(argv)
+
+    if args.ising_side < 3:
+        raise SystemExit(
+            f"bad --ising-side {args.ising_side}: the torus needs >= 3")
+    if args.serve and args.connect:
+        raise SystemExit("--serve and --connect are mutually exclusive")
+    if args.connect:
+        # client mode never initializes jax (unless --identity-check)
+        _run_connect(args)
+        return
+
+    if args.force_host_devices:
+        from repro.launch.mesh import force_host_devices
+        force_host_devices(args.force_host_devices)
+    from repro.serve.engine import PosteriorEngine
+
+    mesh = None
+    if args.mesh_shape:
+        import jax
+
+        from repro.launch.mesh import make_serve_mesh, parse_mesh_shape
+        mesh = make_serve_mesh(parse_mesh_shape(args.mesh_shape))
+        print(f"serve mesh {dict(mesh.shape)} over "
+              f"{mesh.devices.size}/{len(jax.devices())} devices")
+
+    registry = build_registry(mrf_shape=_parse_mrf_shape(args),
+                              ising_side=args.ising_side)
+    engine_kw = _engine_kwargs(args, mesh=mesh)
+
+    if args.serve:
+        _run_serve(args, registry, engine_kw)
+        return
+
+    # The recorder goes on the engine under measurement (the queued one
+    # in stream mode); the sync baseline engine stays on the shared
+    # no-op recorder so its rate is an honest telemetry-free number.
+    tel = Telemetry() if (args.trace_out or args.metrics_json) else None
+    engine = PosteriorEngine(registry, telemetry=tel, **engine_kw)
+
+    traffic, arrivals = build_traffic(args, registry)
 
     if args.stream:
         sync_engine = PosteriorEngine(registry, **engine_kw)

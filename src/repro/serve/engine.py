@@ -81,6 +81,7 @@ from repro.pgm.graph import BayesNet
 from repro.serve.families import family_of
 from repro.serve.plan_cache import PlanCache, plan_key
 from repro.serve.query import IsingQuery, MrfQuery, Query, Request, Result
+from repro.serve.sched import predict_remaining_rounds
 from repro.serve.telemetry import (
     DEFAULT_COUNT_BINS, NULL, Telemetry, monotonic)
 from repro.sharding.specs import serve_lane_multiple
@@ -441,14 +442,46 @@ class GroupRun:
 
     def cancel(self, entry: GroupEntry) -> bool:
         """Mid-flight cancellation: free the entry's slot without a
-        result.  Returns False if the entry already retired."""
+        result.  Returns False if the entry already retired.
+
+        A cancelled *stream* slice also invalidates the stream's
+        retained chains: slice ``t+1`` dying before retirement breaks
+        the temporal chain, so slice ``t+2`` must cold-start rather
+        than silently warm-start from slice ``t``'s now-stale states
+        (which would also leak them for the stream's lifetime)."""
         for s in self.slots:
             if s.entry is entry and not s.done:
                 s.done = s.cancelled = True
+                sid = getattr(entry.query, "stream_id", None)
+                if sid is not None:
+                    self.engine.invalidate_stream(self.name, sid)
                 if self.tel.enabled:
                     self._record_query_spans(s, "cancel")
                 return True
         return False
+
+    def predicted_remaining_rounds(self) -> int:
+        """Worst-case rounds this group still needs, per-slot from the
+        ESS trajectory the retirement rule already computes (see
+        :func:`repro.serve.sched.predict_remaining_rounds`).  Slots with
+        no usable trajectory — MAP mode, still burning in, or R̂ gate
+        not yet passed so no cached ESS — fall back to their remaining
+        budget cap, which makes the estimate conservative (it can only
+        overestimate, so deadline preemption fires no later than it
+        should).  Multiply by ``sweeps_per_round`` for sweeps."""
+        worst = 0
+        for s in self.slots:
+            if s.done or s.entry is None:
+                continue
+            if s.mode != "marginals" or s.diags is None:
+                worst = max(worst, s.cap - s.rounds + s.burn_left)
+                continue
+            ds = [d.cached() for d in s.diags.values()]
+            ess = (min(d.min_ess for d in ds)
+                   if ds and all(d is not None for d in ds) else None)
+            worst = max(worst, s.burn_left + predict_remaining_rounds(
+                ess, s.rounds, s.ess_target, s.cap))
+        return worst
 
     def admit(self, entry: GroupEntry) -> None:
         """Backfill a waiting query of the same plan into a freed slot:
@@ -731,6 +764,12 @@ class PosteriorEngine:
         if sid is None:
             return None
         return self._retained.get((name, sid))
+
+    def invalidate_stream(self, network: str, stream_id: str) -> bool:
+        """Drop one stream's retained chains (a cancelled or failed
+        slice broke the temporal chain — later slices must cold-start).
+        Returns True if there was state to drop."""
+        return self._retained.pop((network, stream_id), None) is not None
 
     def reset_streams(self, network: str | None = None) -> None:
         """Drop retained temporal-filtering states (all streams, or one

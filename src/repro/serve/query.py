@@ -84,6 +84,15 @@ class Request:
     previous slice's retained states (same plan, burn-in skipped) —
     see the warm-start contract in ``docs/inference_modes.md``.
 
+    ``deadline_ms`` declares an SLO: the caller wants the result within
+    this many milliseconds of submission.  It is *scheduling advice*,
+    not a hard timeout — an ``AdmissionQueue(scheduler="deadline")``
+    orders dispatch and backfill earliest-deadline-first and may preempt
+    deadline-free work for an at-risk query, but a missed deadline still
+    returns a (late) result.  ``tenant`` names the quota bucket the
+    serving front end (:mod:`repro.serve.server`) charges this query
+    against; in-process callers can ignore both.
+
     All shared fields except ``network`` are keyword-only, so each
     subclass keeps its historical positional payload signature.
     """
@@ -94,12 +103,17 @@ class Request:
     ess_target: float | None = field(default=None, kw_only=True)
     mode: str = field(default="marginals", kw_only=True)
     stream_id: str | None = field(default=None, kw_only=True)
+    deadline_ms: float | None = field(default=None, kw_only=True)
+    tenant: str | None = field(default=None, kw_only=True)
 
     def __post_init__(self) -> None:
         if self.mode not in MODES:
             raise ValueError(
                 f"unknown inference mode {self.mode!r} "
                 f"(accepted: {', '.join(MODES)})")
+        if self.deadline_ms is not None and not self.deadline_ms > 0:
+            raise ValueError(
+                f"deadline_ms must be positive, got {self.deadline_ms!r}")
 
 
 @dataclass
@@ -272,14 +286,36 @@ class QueryHandle:
         self._event = threading.Event()
         self._lock = threading.Lock()
         self._on_cancel = on_cancel       # queue callback: pre-dispatch unlink
+        self._callbacks: list = []        # run once, at terminal resolution
         self.cancel_requested = False     # dispatcher polls at round edges
 
     @property
     def status(self) -> QueryStatus:
         return self._status
 
+    @property
+    def deadline(self) -> float | None:
+        """Absolute monotonic deadline (``t_submit + deadline_ms``), or
+        None for best-effort queries — the number deadline scheduling
+        sorts on."""
+        d = getattr(self.query, "deadline_ms", None)
+        return None if d is None else self.t_submit + d / 1e3
+
     def done(self) -> bool:
         return self._event.is_set()
+
+    def add_done_callback(self, fn) -> None:
+        """Run ``fn(handle)`` exactly once when the handle resolves
+        terminally (done/cancelled/failed) — immediately if it already
+        has.  Callbacks fire on the resolving thread (the queue's
+        dispatcher), outside the handle lock; the asyncio front end uses
+        this to bridge results onto the event loop without burning a
+        waiter thread per request."""
+        with self._lock:
+            if not self._event.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
 
     def cancel(self) -> bool:
         """Request cancellation; True if the query will not produce a
@@ -312,6 +348,14 @@ class QueryHandle:
             if not self._event.is_set():
                 self._status = QueryStatus.RUNNING
 
+    def _requeue(self) -> None:
+        """Preemption path: the dispatcher reclaimed this query's lanes
+        and put it back in its bucket — status returns to QUEUED (the
+        future stays unresolved; the query will run again)."""
+        with self._lock:
+            if not self._event.is_set():
+                self._status = QueryStatus.QUEUED
+
     def _finish(self, status: QueryStatus, *, result: Result | None = None,
                 error: BaseException | None = None) -> QueryStatus | None:
         """Resolve the future; returns the status actually applied (None
@@ -327,4 +371,7 @@ class QueryHandle:
             self._result, self._error = result, error
             self.t_done = monotonic()
             self._event.set()
-            return status
+            callbacks, self._callbacks = self._callbacks, []
+        for fn in callbacks:
+            fn(self)
+        return status

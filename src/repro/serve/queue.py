@@ -36,6 +36,17 @@ observe its retirement.  Distinct streams still pack together freely.
 Single dispatcher thread; the queue owns the engine while open (do not
 call ``answer_batch`` on the same engine concurrently).  Buckets are
 served FIFO by their oldest arrival, so no evidence pattern starves.
+
+Two schedulers (the ``scheduler`` parameter): ``"fifo"`` is the
+arrival-order policy above; ``"deadline"`` is earliest-deadline-first
+over queries carrying ``Request.deadline_ms`` — they order dispatch and
+backfill ahead of best-effort traffic (which keeps FIFO fairness among
+itself), a bucket holding an SLO query ripens early enough to start it,
+and a running group whose ESS trajectory says it still needs service is
+*preempted* (unfinished queries re-queued, progress discarded) when a
+strictly more urgent deadline is waiting.  ``abort(error)`` is the
+worker-death path: everything pending or in-flight fails loudly with
+``error`` instead of hanging its ``QueryHandle`` forever.
 """
 from __future__ import annotations
 
@@ -47,8 +58,11 @@ from dataclasses import dataclass, field
 from repro.serve.engine import GroupEntry, GroupRun, PosteriorEngine
 from repro.serve.query import (  # noqa: F401
     MrfQuery, Query, QueryHandle, QueryStatus, Request)
+from repro.serve.sched import deadline_order
 from repro.serve.telemetry import monotonic
 from repro.sharding.specs import serve_lane_multiple
+
+SCHEDULERS = ("fifo", "deadline")
 
 # Default size trigger, in queries, per dispatch group (scaled by the
 # mesh width so a full group's lane count is shard-aligned).
@@ -68,6 +82,7 @@ class QueueStats:
     cancelled_in_flight: int = 0
     dispatched_groups: int = 0
     backfilled: int = 0
+    preempted: int = 0
     # (network, pattern, n_queries) of recent dispatched groups, in order
     dispatch_log: deque = field(
         default_factory=lambda: deque(maxlen=DISPATCH_LOG_MAXLEN))
@@ -84,6 +99,7 @@ class QueueStats:
             "cancelled_in_flight": self.cancelled_in_flight,
             "dispatched_groups": self.dispatched_groups,
             "backfilled": self.backfilled,
+            "preempted": self.preempted,
             "dispatch_log": [[name, n] for name, _, n in self.dispatch_log],
         }
 
@@ -103,6 +119,10 @@ class AdmissionQueue:
     backfill:
         Re-use the lanes of retired (converged/cancelled) queries for
         waiting queries of the same plan mid-flight.
+    scheduler:
+        ``"fifo"`` (arrival order, the default) or ``"deadline"``
+        (earliest-deadline-first over ``Request.deadline_ms``, with
+        ESS-trajectory-driven preemption — see the module docstring).
 
     Example::
 
@@ -113,8 +133,12 @@ class AdmissionQueue:
     """
 
     def __init__(self, engine: PosteriorEngine, *, max_wait_ms: float = 10.0,
-                 max_group_lanes: int | None = None, backfill: bool = True):
+                 max_group_lanes: int | None = None, backfill: bool = True,
+                 scheduler: str = "fifo"):
+        if scheduler not in SCHEDULERS:
+            raise ValueError(f"scheduler {scheduler!r} not in {SCHEDULERS}")
         self.engine = engine
+        self.scheduler = scheduler
         self.max_wait_s = float(max_wait_ms) / 1e3
         c = engine.chains_per_query
         if max_group_lanes is None:
@@ -128,6 +152,7 @@ class AdmissionQueue:
         self._buckets: dict[tuple, deque[GroupEntry]] = {}
         self._cv = threading.Condition()
         self._closed = False
+        self._abort_exc: BaseException | None = None
         self._flush_before = -1.0  # flush(): entries at/before this are ripe
         self._inflight: list[GroupEntry] = []  # current group, under _cv
         self._thread = threading.Thread(
@@ -164,6 +189,16 @@ class AdmissionQueue:
                           help="queries waiting in dispatch buckets")
             tel.sample("queue_depth", depth)
         return handle
+
+    def submit_many(self, queries: "list[Request]") -> list[QueryHandle]:
+        """Admit a list atomically: every query enters its bucket under
+        one lock hold (the condition lock is reentrant), so the
+        dispatcher cannot wake mid-list and split the batch into
+        different groups than ``answer_batch``'s insertion-order
+        grouping would form — the served-vs-in-process bitwise-identity
+        contract of the HTTP ``/v2/batch`` endpoint."""
+        with self._cv:
+            return [self.submit(q) for q in queries]
 
     def pending(self) -> int:
         with self._cv:
@@ -229,6 +264,30 @@ class AdmissionQueue:
             self._cv.notify_all()
         self._thread.join(timeout)
 
+    def abort(self, error: BaseException, *,
+              inflight_error: BaseException | None = None,
+              timeout: float | None = None) -> None:
+        """Fail everything loudly — the worker-death path.  Pending
+        queries resolve FAILED with ``error`` immediately; the in-flight
+        group observes the abort at its next round boundary and fails
+        its unresolved queries with ``inflight_error`` (default: the
+        same ``error`` — the split lets a worker mark pending queries
+        as safely resubmittable while in-flight ones are not).  No
+        ``QueryHandle`` is ever left hanging.  The queue is closed
+        afterwards."""
+        with self._cv:
+            self._closed = True
+            self._abort_exc = inflight_error if inflight_error is not None \
+                else error
+            for dq in self._buckets.values():
+                for e in dq:
+                    e.handle._finish(QueryStatus.FAILED, error=error)
+                    self.stats.failed += 1
+                    self._tel_done(e, "failed")
+            self._buckets.clear()
+            self._cv.notify_all()
+        self._thread.join(timeout)
+
     def __enter__(self) -> "AdmissionQueue":
         return self
 
@@ -269,40 +328,106 @@ class AdmissionQueue:
                         return
 
     # -- dispatcher --------------------------------------------------------
+    def _bucket_wake(self, dq: deque) -> float:
+        """Absolute clock time at which this bucket ripens by waiting:
+        the oldest arrival plus ``max_wait_ms`` — and, under the
+        deadline scheduler, early enough before the bucket's most
+        urgent SLO deadline that the query can still start on time."""
+        wake = dq[0].handle.t_submit + self.max_wait_s
+        if self.scheduler == "deadline":
+            for e in dq:
+                d = e.handle.deadline
+                if d is not None:
+                    wake = min(wake, d - self.max_wait_s)
+        return wake
+
     def _ripe(self, dq: deque, now: float) -> bool:
         return (len(dq) >= self.max_group_queries
-                or now - dq[0].handle.t_submit >= self.max_wait_s
+                or now >= self._bucket_wake(dq)
                 or dq[0].handle.t_submit <= self._flush_before
                 or self._closed)
 
-    def _pop_ready_locked(self):
-        """Oldest-arrival ripe bucket (FIFO across evidence patterns),
-        popped up to the size trigger; None if nothing is ripe.
+    def _select_locked(self, dq: deque, n: int,
+                       exclude_streams=frozenset()):
+        """Up to ``n`` dispatchable entries of one bucket (in dispatch
+        order), plus the entries left behind (in arrival order).
 
         Same-stream serialization: at most one slice per ``stream_id``
-        leaves the bucket per dispatch — later slices of a stream
-        already in the batch are held back (in order) so they can
-        warm-start from the earlier slice's retired chains."""
-        now = monotonic()
-        ready = [(dq[0].handle.t_submit, key)
-                 for key, dq in self._buckets.items() if self._ripe(dq, now)]
-        if not ready:
-            return None
-        _, key = min(ready)
-        dq = self._buckets[key]
-        batch: list[GroupEntry] = []
-        held: list[GroupEntry] = []
-        streams: set[str] = set()
-        while dq and len(batch) < self.max_group_queries:
-            e = dq.popleft()
+        is taken — and only the stream's *earliest-arrival* pending
+        slice, so EDF reordering can never dispatch slice ``t+1``
+        before slice ``t`` (it warm-starts from ``t``'s retired
+        chains).  Later slices stay queued in order.
+
+        Under the deadline scheduler the take order is earliest-
+        deadline-first (:func:`repro.serve.sched.deadline_order`);
+        best-effort entries keep arrival order behind SLO ones."""
+        order = list(dq)
+        first: dict[str, int] = {}
+        for e in order:
             sid = getattr(e.query, "stream_id", None)
-            if sid is not None and sid in streams:
-                held.append(e)
+            if sid is not None and sid not in first:
+                first[sid] = id(e)
+        if self.scheduler == "deadline":
+            pos = {id(e): i for i, e in enumerate(order)}
+            order.sort(key=lambda e: (deadline_order(e.handle), pos[id(e)]))
+        batch: list[GroupEntry] = []
+        taken: set[int] = set()
+        streams: set[str] = set(exclude_streams)
+        for e in order:
+            if len(batch) >= n:
+                break
+            sid = getattr(e.query, "stream_id", None)
+            if sid is not None and (sid in streams or first[sid] != id(e)):
                 continue
             if sid is not None:
                 streams.add(sid)
             batch.append(e)
-        held.extend(dq)
+            taken.add(id(e))
+        held = [e for e in dq if id(e) not in taken]
+        return batch, held
+
+    def _bucket_urgency(self, dq: deque, exclude_streams=frozenset()):
+        """EDF rank of a bucket: the most urgent entry that could
+        actually dispatch right now — a stream's non-first pending slice
+        (or a slice of a stream in ``exclude_streams``) is *blocked*
+        behind its predecessor, so its deadline must not drive bucket
+        choice or preemption (ranking on a blocked slice livelocks: the
+        bucket keeps winning the pop, keeps dispatching only its
+        best-effort head, and keeps being preempted for the urgent
+        slice that still cannot run).  None if every entry is blocked."""
+        best = None
+        seen: set[str] = set()
+        for e in dq:
+            sid = getattr(e.query, "stream_id", None)
+            if sid is not None:
+                blocked = sid in seen or sid in exclude_streams
+                seen.add(sid)
+                if blocked:
+                    continue
+            d = deadline_order(e.handle)
+            if best is None or d < best:
+                best = d
+        return best
+
+    def _pop_ready_locked(self):
+        """A ripe bucket popped up to the size trigger; None if nothing
+        is ripe.  Bucket choice is FIFO by oldest arrival (no evidence
+        pattern starves) — or, under the deadline scheduler, the bucket
+        holding the most urgent *dispatchable* entry (EDF across
+        patterns)."""
+        now = monotonic()
+        ready = [key for key, dq in self._buckets.items()
+                 if self._ripe(dq, now)]
+        if not ready:
+            return None
+        if self.scheduler == "deadline":
+            key = min(ready, key=lambda k: self._bucket_urgency(
+                self._buckets[k]) or (2, 0.0))
+        else:
+            key = min(ready,
+                      key=lambda k: self._buckets[k][0].handle.t_submit)
+        dq = self._buckets[key]
+        batch, held = self._select_locked(dq, self.max_group_queries)
         if held:
             self._buckets[key] = deque(held)
         else:
@@ -312,8 +437,8 @@ class AdmissionQueue:
     def _next_deadline_locked(self) -> float | None:
         if not self._buckets:
             return None
-        oldest = min(dq[0].handle.t_submit for dq in self._buckets.values())
-        return max(0.0, oldest + self.max_wait_s - monotonic())
+        wake = min(self._bucket_wake(dq) for dq in self._buckets.values())
+        return max(0.0, wake - monotonic())
 
     def _other_bucket_ripe(self, key: tuple) -> bool:
         """True if some *other* plan's bucket is already dispatchable —
@@ -330,31 +455,26 @@ class AdmissionQueue:
 
         ``exclude_streams`` holds the stream ids still running in the
         dispatching group: their next slices are left queued (in order)
-        until the running slice retires and retains its chains."""
-        out: list[GroupEntry] = []
-        held: list[GroupEntry] = []
-        streams: set[str] = set(exclude_streams)
+        until the running slice retires and retains its chains.  Under
+        the deadline scheduler the backfill order is EDF, same as
+        dispatch."""
         with self._cv:
             dq = self._buckets.get(key)
-            while dq and len(out) < n:
-                e = dq.popleft()
+            if not dq:
+                return []
+            alive = deque()
+            for e in dq:
                 if e.handle.cancel_requested:
                     e.handle._finish(QueryStatus.CANCELLED)
                     self.stats.cancelled_pending += 1
                     self._tel_done(e, "cancelled")
-                    continue
-                sid = getattr(e.query, "stream_id", None)
-                if sid is not None and sid in streams:
-                    held.append(e)
-                    continue
-                if sid is not None:
-                    streams.add(sid)
-                out.append(e)
-            if dq is not None:
-                if held:
-                    dq.extendleft(reversed(held))
-                if not dq:
-                    del self._buckets[key]
+                else:
+                    alive.append(e)
+            out, held = self._select_locked(alive, n, exclude_streams)
+            if held:
+                self._buckets[key] = deque(held)
+            else:
+                del self._buckets[key]
         return out
 
     def _run(self) -> None:
@@ -383,9 +503,70 @@ class AdmissionQueue:
             with self._cv:
                 self._inflight = []
 
+    def _group_run(self, name, pattern, batch) -> GroupRun:
+        """Group-run factory — the test seam: fault-injection and
+        property tests substitute a fake run (same step/cancel/admit
+        surface) so scheduling invariants are checked without paying
+        for real compilation/sampling."""
+        return GroupRun(self.engine, name, pattern, batch)
+
+    def _preempt_run(self, key: tuple, run) -> bool:
+        """EDF preemption (deadline scheduler only): when some *other*
+        ripe bucket holds an SLO deadline strictly more urgent than
+        anything still running in this group, and the group's ESS
+        trajectory says it still needs service, re-queue the group's
+        unfinished queries (status back to QUEUED, progress discarded)
+        and yield the lanes.  Returns True when the run was vacated."""
+        if self.scheduler != "deadline":
+            return False
+        now = monotonic()
+        with self._cv:
+            live = [s.entry for s in run.slots
+                    if not s.done and s.entry is not None]
+            busy = {sid for sid in (
+                getattr(e.query, "stream_id", None) for e in live)
+                if sid is not None}
+            best = None
+            for k, dq in self._buckets.items():
+                if k == key or not self._ripe(dq, now):
+                    continue
+                # rank on dispatchable entries only: a slice blocked
+                # behind this very group cannot start even if we yield
+                d = self._bucket_urgency(dq, exclude_streams=busy)
+                if d is not None and (best is None or d < best):
+                    best = d
+            if best is None or best[0] == 1:
+                return False  # nothing urgent waiting elsewhere
+            run_d = min((deadline_order(e.handle) for e in live),
+                        default=(1, 0.0))
+            if run_d <= best or run.predicted_remaining_rounds() <= 0:
+                return False
+            dq = self._buckets.setdefault(key, deque())
+            # front-load in arrival order so the bucket stays
+            # FIFO-consistent for the entries behind them
+            for e in sorted(live, key=lambda e: e.handle.t_submit,
+                            reverse=True):
+                if e.handle.cancel_requested:
+                    e.handle._finish(QueryStatus.CANCELLED)
+                    self.stats.cancelled_in_flight += 1
+                    self._tel_done(e, "cancelled")
+                    continue
+                e.handle._requeue()
+                dq.appendleft(e)
+                self.stats.preempted += 1
+                if self.tel.enabled:
+                    self.tel.instant("preempt", e.tel_tid)
+            if not dq:
+                del self._buckets[key]
+            if self.tel.enabled:
+                self.tel.count("serve_preempted_total",
+                               help="queries re-queued by EDF preemption")
+            self._cv.notify_all()
+        return True
+
     def _dispatch_run(self, key, name, pattern, batch) -> None:
         try:
-            run = GroupRun(self.engine, name, pattern, batch)
+            run = self._group_run(name, pattern, batch)
         except BaseException as exc:
             for e in batch:
                 e.handle._finish(QueryStatus.FAILED, error=exc)
@@ -396,6 +577,10 @@ class AdmissionQueue:
         self.stats.dispatch_log.append((name, pattern, len(batch)))
         try:
             while run.active:
+                # a worker abort outranks everything: fail the group's
+                # unresolved queries loudly at this round boundary
+                if self._abort_exc is not None:
+                    raise self._abort_exc
                 # mid-flight cancellations, honoured at round boundaries
                 for s in run.slots:
                     if (not s.done and s.entry.handle.cancel_requested
@@ -405,6 +590,8 @@ class AdmissionQueue:
                         self._tel_done(s.entry, "cancelled")
                 if not run.active:
                     break
+                if self._preempt_run(key, run):
+                    return
                 for e in run.step():
                     # a cancel() that already promised "no result" wins
                     # over the retirement (resolved atomically in _finish)

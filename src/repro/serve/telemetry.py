@@ -44,12 +44,34 @@ from typing import Iterable
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "NULL",
     "NullTelemetry", "Telemetry", "lifecycle_breakdown", "log_bins",
+    "monotonic", "set_clock",
 ]
 
 # One shared monotonic clock for every duration/deadline in the serving
 # stack (queue deadlines, slot timing, spans).  time.time() is reserved
 # for human-readable timestamps.
-monotonic = time.monotonic
+#
+# The clock is a *seam*: scheduler/quota tests install a fake clock via
+# ``set_clock`` so deadline and token-bucket behaviour is tested by
+# advancing virtual time instead of sleeping on the wall clock (the
+# ``fake_clock`` fixture in tests/conftest.py).  Every serving module
+# imports ``monotonic`` by name, so the indirection must live *inside*
+# the function — rebinding ``telemetry.monotonic`` would not reach the
+# already-imported references.
+_clock = time.monotonic
+
+
+def monotonic() -> float:
+    """Seconds on the serving stack's shared monotonic clock."""
+    return _clock()
+
+
+def set_clock(clock=None) -> None:
+    """Install a replacement clock callable (None restores the real
+    ``time.monotonic``).  Test seam only — production code never calls
+    this."""
+    global _clock
+    _clock = clock if clock is not None else time.monotonic
 
 
 # -- metrics ---------------------------------------------------------------

@@ -27,3 +27,50 @@ def run_subprocess(code: str, devices: int = 0, timeout: int = 900):
 @pytest.fixture(scope="session")
 def rng_seed():
     return 0
+
+
+class ManualClock:
+    """Deterministic clock for the telemetry ``monotonic`` seam: tests
+    advance time explicitly instead of sleeping on wall time."""
+
+    def __init__(self, start: float = 1000.0):
+        self.t = float(start)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += float(dt)
+        return self.t
+
+
+@pytest.fixture
+def fake_clock():
+    """Install a :class:`ManualClock` into ``repro.serve.telemetry``'s
+    clock seam (shared by the admission queue's deadline triggers, the
+    token buckets, and every telemetry timestamp) and restore the real
+    ``time.monotonic`` afterwards.  Scheduler/quota tests drive
+    ``fake_clock.advance(...)`` instead of ``time.sleep``."""
+    from repro.serve import telemetry
+
+    clock = ManualClock()
+    telemetry.set_clock(clock)
+    try:
+        yield clock
+    finally:
+        telemetry.set_clock(None)
+
+
+@pytest.fixture
+def event_loop():
+    """A fresh, isolated asyncio loop per test (the serving front end's
+    coroutines run deterministically via ``event_loop.run_until_complete``
+    without touching any ambient/global loop state)."""
+    import asyncio
+
+    loop = asyncio.new_event_loop()
+    try:
+        yield loop
+    finally:
+        loop.close()
+        asyncio.set_event_loop(None)

@@ -1,0 +1,210 @@
+"""Fault-injection tests for the serving stack.
+
+ISSUE hardening targets:
+
+* kill a worker mid-group — in-flight queries fail *loudly* with
+  ``WorkerDied(resubmit=False)``, never-dispatched ones with
+  ``resubmit=True`` (safe to replay on another worker), and no
+  ``QueryHandle`` future is ever left hanging;
+* the pool resubmits the resubmittable kind on a surviving worker;
+* cancelling a ``stream_id`` query after dispatch but before
+  retirement invalidates the stream's retained chains instead of
+  leaking stale state to the next slice.
+
+Worker-death tests run against fake engines/group-runs patched in at
+the queue's ``_group_run`` seam (scheduling logic is real, sampling is
+not); the stream-invalidation tests drive the real engine on a tiny
+network.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+
+import pytest
+
+from repro.serve.query import Query, QueryCancelled, QueryStatus
+from repro.serve.worker import Worker, WorkerDied, WorkerPool
+
+
+class FakeEngine:
+    chains_per_query = 1
+    mesh = None
+
+    def __init__(self):
+        from repro.serve.telemetry import NULL
+        self.telemetry = NULL
+        self._query_seq = itertools.count()
+
+    def normalize(self, query):
+        return (None, dict(query.evidence), tuple(query.query_vars),
+                tuple(sorted(query.evidence)))
+
+    def stats(self):
+        return {}
+
+
+class _Slot:
+    def __init__(self, entry):
+        self.entry, self.done = entry, False
+
+
+class EndlessRun:
+    """Never retires: each round is a short sleep, so an abort is
+    honoured at the next round boundary within milliseconds."""
+
+    def __init__(self, batch, started):
+        self.slots = [_Slot(e) for e in batch]
+        self._started = started
+
+    @property
+    def active(self):
+        return any(not s.done for s in self.slots)
+
+    def free_slots(self):
+        return 0
+
+    def predicted_remaining_rounds(self):
+        return 1 << 20
+
+    def cancel(self, entry):
+        for s in self.slots:
+            if s.entry is entry and not s.done:
+                s.done = True
+                return True
+        return False
+
+    def admit(self, entry):
+        raise AssertionError("free_slots()=0, admit must not be called")
+
+    def step(self):
+        self._started.set()
+        time.sleep(0.005)
+        return []
+
+
+class OneShotRun(EndlessRun):
+    """Retires everything on the first step."""
+
+    def step(self):
+        retired = []
+        for s in self.slots:
+            if not s.done:
+                s.done = True
+                s.entry.result = object()
+                retired.append(s.entry)
+        return retired
+
+
+def _patch_runs(worker, run_cls, started=None):
+    ev = started or threading.Event()
+    worker.queue._group_run = \
+        lambda name, pattern, batch: run_cls(batch, ev)
+    return ev
+
+
+def test_worker_kill_mid_group_fails_loudly_no_hung_futures():
+    w = Worker("w0", FakeEngine(),
+               queue_kwargs={"max_wait_ms": 1.0, "max_group_lanes": 1})
+    started = _patch_runs(w, EndlessRun)
+    inflight = w.submit(Query("net", {"a": 0}, ("x",)))
+    assert started.wait(10.0), "group never dispatched"
+    # same bucket, dispatcher busy: stays pending on the dead worker
+    pending = w.submit(Query("net", {"a": 0}, ("x",)))
+
+    w.kill("chaos-monkey", timeout=30.0)
+
+    assert not w.queue._thread.is_alive(), "dispatcher hung after kill"
+    for h in (inflight, pending):
+        assert h.done(), "kill left a QueryHandle hanging"
+        assert h.status is QueryStatus.FAILED
+    with pytest.raises(WorkerDied) as exc:
+        inflight.result(timeout=0)
+    assert exc.value.resubmit is False, \
+        "mid-group work may have streamed effects: must not auto-replay"
+    with pytest.raises(WorkerDied) as exc:
+        pending.result(timeout=0)
+    assert exc.value.resubmit is True, \
+        "never-dispatched queries are safe to replay elsewhere"
+    # killing twice is a no-op, and submitting to a corpse fails fast
+    w.kill("again")
+    with pytest.raises(WorkerDied):
+        w.submit(Query("net", {"a": 0}, ("x",)))
+
+
+def test_pool_resubmits_on_surviving_worker():
+    pool = WorkerPool(lambda name: FakeEngine(), 2,
+                      queue_kwargs={"max_wait_ms": 1.0})
+    for w in pool.workers.values():
+        _patch_runs(w, OneShotRun)
+    q = Query("net", {"a": 0}, ("x",))
+    routed, h = pool.submit(q)
+    assert h.result(timeout=30.0) is not None
+
+    pool.kill(routed.name, "chaos-monkey")
+    survivor, h2 = pool.submit(q)            # same plan key, rerouted
+    assert survivor.name != routed.name
+    assert h2.result(timeout=30.0) is not None
+    assert pool.stats()[routed.name]["dead"] is True
+
+    pool.kill(survivor.name, "total outage")
+    with pytest.raises(WorkerDied):
+        pool.submit(q)
+    pool.close(drain=False, timeout=10.0)
+
+
+def test_cancelled_stream_slice_invalidates_retained_state():
+    """GroupRun.cancel on a stream slice must drop the stream's
+    retained chains: the cancelled slice already warm-started from
+    them, so letting the *next* slice warm-start from the same
+    pre-cancel state would silently rewind the stream."""
+    from repro.pgm import networks
+    from repro.serve.engine import GroupEntry, GroupRun, PosteriorEngine
+
+    eng = PosteriorEngine({"sprinkler": networks.sprinkler()},
+                          chains_per_query=2, burn_in=2, seed=0)
+    key = ("sprinkler", "cam")
+    [r1] = eng.answer_batch([Query(
+        "sprinkler", {"cloudy": 1}, ("rain",), n_samples=32,
+        stream_id="cam")])
+    assert key in eng._retained, "slice 1 must retain its chains"
+
+    q2 = Query("sprinkler", {"cloudy": 0}, ("rain",), n_samples=32,
+               stream_id="cam")
+    _, ev, qvars, pattern = eng.normalize(q2)
+    entry = GroupEntry(q2, ev, qvars)
+    run = GroupRun(eng, "sprinkler", pattern, [entry])
+    assert run.cancel(entry) is True
+    assert key not in eng._retained, \
+        "cancelled slice leaked stale retained stream state"
+    # idempotent: invalidating an absent stream reports False
+    assert eng.invalidate_stream("sprinkler", "cam") is False
+
+
+def test_stream_cancel_after_dispatch_via_queue():
+    """End-to-end mid-flight path: cancel lands after dispatch, the
+    handle resolves CANCELLED (not hung, not DONE), and no stream
+    state is retained for the cancelled slice."""
+    from repro.pgm import networks
+    from repro.serve.engine import PosteriorEngine
+    from repro.serve.queue import AdmissionQueue
+
+    # unreachable ESS target: the slice cannot retire before its cap,
+    # so the cancel reliably lands mid-flight
+    eng = PosteriorEngine({"sprinkler": networks.sprinkler()},
+                          chains_per_query=2, burn_in=2, seed=0)
+    q = AdmissionQueue(eng, max_wait_ms=2.0)
+    h = q.submit(Query("sprinkler", {"cloudy": 1}, ("rain",),
+                       n_samples=8192, ess_target=1e9, stream_id="cam"))
+    deadline = time.monotonic() + 60.0
+    while h.status is not QueryStatus.RUNNING:
+        assert h.status is QueryStatus.QUEUED, h.status
+        assert time.monotonic() < deadline, "query never dispatched"
+        time.sleep(0.002)
+    h.cancel()
+    with pytest.raises(QueryCancelled):
+        h.result(timeout=60.0)
+    q.close(drain=True, timeout=30.0)
+    assert ("sprinkler", "cam") not in eng._retained
+    assert q.stats.cancelled_in_flight == 1

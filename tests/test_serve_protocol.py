@@ -1,0 +1,326 @@
+"""Golden protocol-conformance tests for the v2 wire schema.
+
+Two committed fixture sets under ``tests/golden/``:
+
+* ``wire_requests.json`` — the parse contract: wire objects that must
+  parse to a specific query family (and survive an encode/parse round
+  trip), plus malformed objects that must be rejected with a specific
+  error.  Editing it is an API change.
+* ``serve_batch.json`` — request/response pairs actually served over
+  HTTP by a fresh single-worker server (seed 0).  Served responses
+  must match the fixture on every field outside
+  ``NONDETERMINISTIC_FIELDS``, and marginals must additionally be
+  **bitwise identical** to an in-process ``answer_batch`` of the same
+  parsed queries on the same seed (floats survive JSON bit-exactly via
+  shortest-round-trip encoding).
+
+Regenerate ``serve_batch.json`` after an intentional sampler/protocol
+change with::
+
+    PYTHONPATH=src python tests/test_serve_protocol.py --regen
+
+The remaining tests drive the HTTP/WS error paths (v1 and unknown
+fields rejected loudly), quota shedding (429 + Retry-After),
+backpressure (503), and the observability endpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.serve.client import ServeClient, ServeHTTPError
+from repro.serve.protocol import (
+    NONDETERMINISTIC_FIELDS, WIRE_VERSION, WireError, parse_wire_request,
+    request_to_wire)
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)), "golden")
+
+# config of every golden server AND the in-process identity engine —
+# they must agree or the bitwise check is meaningless
+ENGINE_KW = dict(chains_per_query=2, burn_in=8, seed=0)
+ISING_SIDE = 6
+
+# the committed served batch: one /v2/batch call on a fresh server
+# (insertion order matters — it fixes the group layout and PRNG stream)
+BATCH_REQUESTS = [
+    {"v": 2, "id": "a1", "network": "asia", "evidence": {"smoke": 1},
+     "query_vars": ["lung", "bronc"], "n_samples": 256},
+    {"v": 2, "id": "a2", "network": "asia", "evidence": {"4": 1},
+     "query_vars": ["dysp"], "n_samples": 256},
+    {"v": 2, "id": "m1", "network": "asia", "evidence": {"smoke": 0},
+     "query_vars": ["lung"], "mode": "map", "n_samples": 256},
+    {"v": 2, "id": "i1", "network": "ising_torus",
+     "clamp_sites": [[0, 1], [5, -1]], "query_vars": [1, 2, 3],
+     "n_samples": 256},
+]
+
+
+def _load(name: str) -> dict:
+    with open(os.path.join(GOLDEN, name)) as f:
+        return json.load(f)
+
+
+def _strip(resp: dict) -> dict:
+    return {k: v for k, v in resp.items()
+            if k not in NONDETERMINISTIC_FIELDS}
+
+
+def _registry():
+    from repro.pgm import networks
+    return {"asia": networks.asia(),
+            "ising_torus": networks.ising_torus(ISING_SIDE, beta=0.35)}
+
+
+def _fresh_server():
+    """A fresh single-worker server; fresh matters — the engine PRNG
+    advances with traffic, so identity holds only for the first batch."""
+    from repro.serve.engine import PosteriorEngine
+    from repro.serve.server import start_in_thread
+    from repro.serve.worker import WorkerPool
+
+    registry = _registry()
+    pool = WorkerPool(
+        lambda name: PosteriorEngine(registry, **ENGINE_KW), 1,
+        queue_kwargs={"max_wait_ms": 5.0})
+    fe = start_in_thread(pool, port=0)
+    return pool, fe
+
+
+# -- parse contract (jax-free) ---------------------------------------------
+
+def test_golden_wire_requests_conform():
+    cases = _load("wire_requests.json")["cases"]
+    assert cases, "empty golden fixture"
+    for case in cases:
+        wire = case["wire"]
+        if "error" in case:
+            with pytest.raises(WireError) as exc:
+                parse_wire_request(wire)
+            assert case["error"] in str(exc.value), (case, str(exc.value))
+            assert exc.value.code == 400
+            assert exc.value.body["v"] == WIRE_VERSION
+            assert case["error"] in exc.value.body["error"]
+        else:
+            q, rid = parse_wire_request(wire)
+            assert type(q).__name__ == case["family"], case
+            assert rid == wire.get("id")
+            # digit-string JSON keys decode back to integer node indices
+            for k in case.get("int_keys", ()):
+                assert k in q.evidence, (case, q.evidence)
+            # encode/parse round trip is lossless
+            q2, rid2 = parse_wire_request(
+                json.loads(json.dumps(request_to_wire(q, id=rid))))
+            assert q2 == q and rid2 == rid
+
+
+# -- served golden batch ----------------------------------------------------
+
+def test_golden_batch_matches_fixture_and_in_process_bitwise():
+    fixture = _load("serve_batch.json")
+    assert fixture["requests"] == BATCH_REQUESTS, \
+        "fixture out of date: regenerate with --regen (see module doc)"
+    pool, fe = _fresh_server()
+    try:
+        client = ServeClient("127.0.0.1", fe.port)
+        responses = client.query_batch(BATCH_REQUESTS)
+    finally:
+        fe.stop_thread()
+        pool.close(drain=False, timeout=10.0)
+
+    # 1) protocol conformance vs the committed fixture
+    assert len(responses) == len(fixture["responses"])
+    for got, want, req in zip(responses, fixture["responses"],
+                              BATCH_REQUESTS):
+        assert got["id"] == req["id"]
+        assert _strip(got) == _strip(want), req["id"]
+
+    # 2) bitwise identity vs in-process answer_batch on the same seed
+    from repro.serve.engine import PosteriorEngine
+    from repro.serve.protocol import wire_marginals
+
+    queries = [parse_wire_request(w)[0] for w in BATCH_REQUESTS]
+    results = PosteriorEngine(_registry(), **ENGINE_KW).answer_batch(queries)
+    for wire_r, r in zip(responses, results):
+        if r.map_assignment is not None:
+            assert wire_r["map_assignment"] == \
+                {str(k): v for k, v in r.map_assignment.items()}
+            assert wire_r["map_energy"] == r.map_energy
+            continue
+        served = wire_marginals(wire_r)
+        assert set(served) == {str(k) for k in r.marginals}
+        for name, m in r.marginals.items():
+            assert np.array_equal(
+                served[str(name)], np.asarray(m, np.float64)), \
+                f"marginal {name!r} not bitwise identical over the wire"
+
+
+# -- HTTP/WS behaviour on a shared warm server ------------------------------
+
+@pytest.fixture(scope="module")
+def served():
+    pool, fe = _fresh_server()
+    client = ServeClient("127.0.0.1", fe.port)
+    client.wait_ready(30.0)
+    yield SimpleNamespace(pool=pool, fe=fe, client=client)
+    fe.stop_thread()
+    pool.close(drain=False, timeout=10.0)
+
+
+def test_v1_rejected_loudly_over_http(served):
+    with pytest.raises(ServeHTTPError) as exc:
+        served.client.query({"v": 1, "network": "asia",
+                             "evidence": {"smoke": 1}})
+    assert exc.value.status == 400
+    assert "v1 is not accepted" in exc.value.body["error"]
+    assert exc.value.body["v"] == WIRE_VERSION
+
+
+def test_unknown_field_rejected_loudly_over_http(served):
+    with pytest.raises(ServeHTTPError) as exc:
+        served.client.query({"v": 2, "network": "asia",
+                             "evidnce": {"smoke": 1}})
+    assert exc.value.status == 400
+    assert "'evidnce'" in exc.value.body["error"]
+
+
+def test_unknown_network_is_a_400_not_a_dropped_connection(served):
+    with pytest.raises(ServeHTTPError) as exc:
+        served.client.query({"v": 2, "network": "nope",
+                             "evidence": {"x": 0}})
+    assert exc.value.status == 400
+    assert "nope" in exc.value.body["error"]
+
+
+def test_ws_stream_echoes_ids_and_answers_bad_frames(served):
+    reqs = [
+        {"v": 2, "id": "s0", "network": "asia",
+         "evidence": {"smoke": 1}, "query_vars": ["lung"],
+         "n_samples": 64},
+        {"v": 2, "id": "bad", "network": "asia", "evidnce": {}},
+        {"v": 2, "id": "s2", "network": "asia",
+         "evidence": {"smoke": 0}, "query_vars": ["lung"],
+         "n_samples": 64},
+    ]
+    out = served.client.stream(reqs)
+    assert [r["id"] for r in out] == ["s0", "bad", "s2"]
+    assert out[0]["status"] == 200 and out[2]["status"] == 200
+    assert out[0]["marginals"] and out[2]["marginals"]
+    # the malformed frame gets an error *response*, not a hung id
+    assert out[1]["status"] == 400
+    assert "'evidnce'" in out[1]["error"]
+
+
+def test_quota_shed_is_429_with_retry_after(served):
+    from repro.serve.server import start_in_thread
+
+    # second front end over the same (warm) pool: 1 token, refilled at
+    # a rate far slower than the test, so request #2 must shed
+    fe = start_in_thread(served.pool, port=0, quota_qps=0.001,
+                         quota_burst=1)
+    try:
+        client = ServeClient("127.0.0.1", fe.port)
+        ok = client.query({"v": 2, "network": "asia",
+                           "evidence": {"smoke": 1},
+                           "query_vars": ["lung"], "n_samples": 64,
+                           "tenant": "acme"})
+        assert ok["converged"] in (True, False)
+        with pytest.raises(ServeHTTPError) as exc:
+            client.query({"v": 2, "network": "asia",
+                          "evidence": {"smoke": 1},
+                          "query_vars": ["lung"], "n_samples": 64,
+                          "tenant": "acme"})
+        assert exc.value.status == 429
+        assert "'acme'" in exc.value.body["error"]
+        assert exc.value.retry_after is not None
+        assert exc.value.retry_after > 0
+        # other tenants have their own bucket
+        other = client.query({"v": 2, "network": "asia",
+                              "evidence": {"smoke": 1},
+                              "query_vars": ["lung"], "n_samples": 64,
+                              "tenant": "zeta"})
+        assert other["v"] == WIRE_VERSION
+        assert client.stats()["shed"]["quota"] == 1
+    finally:
+        fe.stop_thread()
+
+
+def test_backpressure_shed_is_503_with_retry_after(served):
+    from repro.serve.server import start_in_thread
+
+    fe = start_in_thread(served.pool, port=0, max_pending=0)
+    try:
+        client = ServeClient("127.0.0.1", fe.port)
+        with pytest.raises(ServeHTTPError) as exc:
+            client.query({"v": 2, "network": "asia",
+                          "evidence": {"smoke": 1}, "n_samples": 64})
+        assert exc.value.status == 503
+        assert "backpressure" in exc.value.body["error"]
+        assert exc.value.retry_after is not None
+        assert client.stats()["shed"]["backpressure"] == 1
+    finally:
+        fe.stop_thread()
+
+
+def test_observability_endpoints(served):
+    assert served.client.healthz()["ok"] is True
+    stats = served.client.stats()
+    assert stats["v"] == WIRE_VERSION
+    assert set(stats) >= {"pending", "served", "shed", "workers"}
+    assert "w0" in stats["workers"]
+    metrics = served.client.metrics()
+    assert "serve_" in metrics
+
+
+def test_docs_serving_doctests():
+    """Every ``>>>`` example in docs/serving.md runs and prints what it
+    claims — including the "Running as a service" section, which starts
+    a real front end on an ephemeral port."""
+    import doctest
+
+    path = os.path.join(os.path.dirname(GOLDEN), os.pardir, "docs",
+                        "serving.md")
+    failures, tests = doctest.testfile(
+        path, module_relative=False,
+        optionflags=doctest.NORMALIZE_WHITESPACE)
+    assert tests > 0, "no doctest examples found in serving.md"
+    assert failures == 0
+
+
+# -- fixture regeneration ---------------------------------------------------
+
+def _regen() -> None:
+    pool, fe = _fresh_server()
+    try:
+        responses = ServeClient(
+            "127.0.0.1", fe.port).query_batch(BATCH_REQUESTS)
+    finally:
+        fe.stop_thread()
+        pool.close(drain=False, timeout=10.0)
+    out = os.path.join(GOLDEN, "serve_batch.json")
+    with open(out, "w") as f:
+        json.dump({
+            "_comment": [
+                "Golden served /v2/batch pairs: a fresh single-worker",
+                "server (ENGINE_KW in tests/test_serve_protocol.py,",
+                "seed 0) serving BATCH_REQUESTS.  Regenerate with:",
+                "  PYTHONPATH=src python tests/test_serve_protocol.py "
+                "--regen",
+            ],
+            "engine": {**ENGINE_KW, "ising_side": ISING_SIDE},
+            "requests": BATCH_REQUESTS,
+            "responses": responses,
+        }, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out} ({len(responses)} responses)")
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        print(__doc__)
